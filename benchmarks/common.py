@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: ns-resolution latency measurement with the
+paper's methodology (queue state reset between iterations; mean over
+repeats after warmup)."""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict, List
+
+__all__ = ["time_ns", "Table"]
+
+
+def time_ns(setup: Callable[[], object], op: Callable[[object], None],
+            repeats: int = 200, warmup: int = 20) -> float:
+    """Mean ns per op; ``setup`` builds fresh state per iteration
+    (the paper resets the queue every iteration)."""
+    for _ in range(warmup):
+        st = setup()
+        op(st)
+    samples: List[float] = []
+    for _ in range(repeats):
+        st = setup()
+        t0 = time.perf_counter_ns()
+        op(st)
+        samples.append(time.perf_counter_ns() - t0)
+    return statistics.mean(samples)
+
+
+class Table:
+    def __init__(self, title: str, col0: str, columns: List[str]):
+        self.title = title
+        self.col0 = col0
+        self.columns = columns
+        self.rows: List[List[str]] = []
+
+    def add(self, label, values):
+        self.rows.append([str(label)] + [f"{v:,.0f}" if isinstance(v, (int, float))
+                                         else str(v) for v in values])
+
+    def render(self) -> str:
+        head = [self.col0] + self.columns
+        widths = [max(len(head[i]), *(len(r[i]) for r in self.rows))
+                  for i in range(len(head))]
+        def fmt(row):
+            return " | ".join(c.rjust(w) for c, w in zip(row, widths))
+        sep = "-+-".join("-" * w for w in widths)
+        lines = [f"== {self.title} ==", fmt(head), sep]
+        lines += [fmt(r) for r in self.rows]
+        return "\n".join(lines)
+
+    def show(self):
+        print(self.render(), flush=True)
+        print()

@@ -1,0 +1,79 @@
+"""Fig. 6 — push latency vs batch size (1, 128, 512, 1024).
+
+Paper claim: LF_Queue's bulk push is a single splice, so latency is flat
+in batch size; the Taskflow-style baselines pay per-node costs that grow
+sharply.  Columns:
+
+  LF_Queue      — faithful host port (one splice of a pre-linked batch)
+  TF_UB-style   — per-item deque ops under a lock (unbounded baseline)
+  TF_BD-style   — resizing circular array (bounded baseline)
+  LFQ-JAX(dev)  — this framework's device ring queue (jitted masked
+                  scatter; one fused kernel regardless of batch size)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Table, time_ns
+from repro.core.host_queue import (LinkedWSQueue, PerItemDequeQueue,
+                                   ResizingArrayQueue, llist_from_iter)
+from repro.core import queue as q_ops
+
+BATCHES = (1, 128, 512, 1024)
+
+
+def _bench_host(cls, batch: int) -> float:
+    payload = list(range(batch))
+
+    if cls is LinkedWSQueue:
+        def setup():
+            return LinkedWSQueue(), llist_from_iter(payload)
+
+        def op(st):
+            q, ll = st
+            q.push(ll)
+    else:
+        def setup():
+            return cls() if cls is PerItemDequeQueue else cls(capacity=64)
+
+        def op(q):
+            q.push(payload)
+    return time_ns(setup, op)
+
+
+def _bench_jax(batch: int) -> float:
+    spec = jnp.zeros((), jnp.int32)
+    q0 = q_ops.make_queue(4096, spec)
+    items = jnp.arange(batch, dtype=jnp.int32)
+    push = jax.jit(q_ops.push).lower(q0, items, jnp.int32(batch)).compile()
+
+    def setup():
+        return q0
+
+    def op(q):
+        st, _ = push(q, items, jnp.int32(batch))
+        jax.block_until_ready(st.size)
+
+    return time_ns(setup, op, repeats=100)
+
+
+def run() -> Table:
+    t = Table("Fig. 6: push latency (ns) vs batch size",
+              "batch", ["LF_Queue", "TF_UB-style", "TF_BD-style",
+                        "LFQ-JAX(dev)"])
+    for b in BATCHES:
+        t.add(b, [
+            _bench_host(LinkedWSQueue, b),
+            _bench_host(PerItemDequeQueue, b),
+            _bench_host(ResizingArrayQueue, b),
+            _bench_jax(b),
+        ])
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

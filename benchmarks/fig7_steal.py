@@ -1,0 +1,78 @@
+"""Fig. 7 — steal latency vs proportion (10..60%) from an initial queue
+of 10,000 nodes.
+
+Paper claim: LF_Queue's steal cost is dominated by the traversal to the
+cut point + suffix count and stays ~flat; per-item baselines grow
+linearly with the stolen count.  LFQ-JAX(dev) is the device ring gather.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Table, time_ns
+from repro.core.host_queue import (LinkedWSQueue, PerItemDequeQueue,
+                                   ResizingArrayQueue, llist_from_iter)
+from repro.core import queue as q_ops
+
+PROPORTIONS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6)
+INITIAL = 10_000
+
+
+def _bench_host(cls, p: float) -> float:
+    items = list(range(INITIAL))
+
+    if cls is LinkedWSQueue:
+        def setup():
+            q = LinkedWSQueue()
+            q.push(llist_from_iter(items))
+            return q
+
+        def op(q):
+            q.steal(p)
+    else:
+        def setup():
+            q = cls() if cls is PerItemDequeQueue else cls(capacity=64)
+            q.push(items)
+            return q
+
+        def op(q):
+            q.steal(p)
+    return time_ns(setup, op, repeats=60, warmup=6)
+
+
+def _bench_jax(p: float) -> float:
+    spec = jnp.zeros((), jnp.int32)
+    q0 = q_ops.make_queue(16_384, spec)
+    items = jnp.arange(INITIAL, dtype=jnp.int32)
+    q0, _ = jax.jit(q_ops.push)(q0, items, jnp.int32(INITIAL))
+    jax.block_until_ready(q0.size)
+    steal = jax.jit(lambda q: q_ops.steal(q, p, max_steal=8192))
+
+    def setup():
+        return q0
+
+    def op(q):
+        st, batch, n = steal(q)
+        jax.block_until_ready(n)
+
+    return time_ns(setup, op, repeats=60, warmup=6)
+
+
+def run() -> Table:
+    t = Table(f"Fig. 7: steal latency (ns) vs proportion (initial {INITIAL})",
+              "steal %", ["LF_Queue", "TF_UB-style", "TF_BD-style",
+                          "LFQ-JAX(dev)"])
+    for p in PROPORTIONS:
+        t.add(f"{int(p*100)}%", [
+            _bench_host(LinkedWSQueue, p),
+            _bench_host(PerItemDequeQueue, p),
+            _bench_host(ResizingArrayQueue, p),
+            _bench_jax(p),
+        ])
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

@@ -1,0 +1,61 @@
+"""Roofline table from the dry-run JSON (§Roofline deliverable)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Table
+
+DEFAULT = "results/dryrun.json"
+CANDIDATES = ("results/dryrun.json", "results/dryrun_v3.json",
+              "results/dryrun_v2.json")
+
+
+def load(path: str | None = None):
+    if path is None:
+        for c in CANDIDATES:
+            if os.path.exists(c):
+                path = c
+                break
+    if path is None or not os.path.exists(path):
+        return None, path
+    with open(path) as f:
+        return json.load(f), path
+
+
+def run() -> Table | None:
+    results, path = load()
+    t = Table(f"Roofline terms per (arch x shape), single-pod 16x16 "
+              f"[{path}]", "arch x shape",
+              ["compute ms", "memory ms", "collect ms", "bottleneck",
+               "mem GiB", "fits", "useful"])
+    if results is None:
+        t.add("(no dry-run results found — run repro.launch.dryrun)",
+              ["-"] * 7)
+        return t
+    for r in results:
+        if r.get("status") != "ok" or r.get("mesh") != "16x16":
+            continue
+        rt = r["roofline"]
+        ma = r["memory_analysis"]
+        t.add(f"{r['arch']} x {r['shape']}", [
+            f"{rt['compute_s']*1e3:.1f}",
+            f"{rt['memory_s']*1e3:.1f}",
+            f"{rt['collective_s']*1e3:.1f}",
+            r["bottleneck"],
+            f"{ma['peak_bytes']/2**30:.2f}",
+            "Y" if ma.get("fits_16g") else "N",
+            f"{r['useful_ratio']:.3f}",
+        ])
+    errs = [r for r in results if r.get("status") != "ok"]
+    for r in errs:
+        t.add(f"{r['arch']} x {r['shape']} x {r['mesh']}",
+              ["ERROR", "-", "-", "-", "-", "-", "-"])
+    return t
+
+
+if __name__ == "__main__":
+    tb = run()
+    if tb:
+        tb.show()

@@ -1,0 +1,40 @@
+"""Benchmark entrypoint: one table per paper figure + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the DAG workload (slowest)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig6_push, fig7_steal, fig8_optimized_steal,
+                            pop_parity, fig9_dag, roofline_report,
+                            moe_steal, solver_scale)
+
+    t0 = time.time()
+    fig6_push.run().show()
+    fig7_steal.run().show()
+    fig8_optimized_steal.run().show()
+    pop_parity.run().show()
+    moe_steal.run().show()
+    solver_scale.run().show()
+    if not args.quick:
+        fig9_dag.run().show()
+    tb = roofline_report.run()
+    if tb:
+        tb.show()
+    print(f"[benchmarks] total {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

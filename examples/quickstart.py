@@ -1,0 +1,41 @@
+"""Quickstart: the lock-free bulk work-stealing queue, three ways.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queue as q_ops
+from repro.core.host_queue import LinkedWSQueue, llist_from_iter
+from repro.core.policy import StealPolicy
+from repro.core.sharded_queue import make_sharded_queues, vmapped_superstep
+
+# -- 1. the paper's queue, faithful host port (Listings 1-4) ----------------
+q = LinkedWSQueue()
+q.push(llist_from_iter(range(10)))        # bulk push: ONE splice
+print("owner pops newest:", q.pop())       # LIFO owner side
+begin, end, count = q.steal(0.5)           # master steals the tail suffix
+print(f"stealer got {count} oldest nodes; {len(q)} remain")
+
+# -- 2. the TPU-native ring queue: pure state transitions --------------------
+state = q_ops.make_queue(capacity=64, item_spec=jnp.zeros((), jnp.int32))
+state, _ = jax.jit(q_ops.push)(state, jnp.arange(16), jnp.int32(16))
+state, item, ok = jax.jit(q_ops.pop)(state)
+print("device pop:", int(item), "valid:", bool(ok))
+state, batch, n = jax.jit(
+    lambda s: q_ops.steal(s, 0.5, max_steal=32))(state)
+print("device bulk steal:", int(n), "items; size now", int(state.size))
+
+# -- 3. the virtual master: SPMD rebalancing superstep ------------------------
+policy = StealPolicy(proportion=0.5, high_watermark=4, low_watermark=1,
+                     max_steal=16)
+qs = make_sharded_queues(4, 64, jnp.zeros((), jnp.int32))
+# worker 0 overloaded, others empty
+seed = jnp.arange(16, dtype=jnp.int32)[None].repeat(4, 0)
+ns = jnp.asarray([16, 0, 0, 0], jnp.int32)
+qs, _ = jax.vmap(q_ops.push)(qs, seed, ns)
+step = vmapped_superstep(policy)
+qs2, stats = step(qs)
+print("sizes before:", [int(x) for x in qs.size],
+      "after one master superstep:", [int(x) for x in qs2.size])

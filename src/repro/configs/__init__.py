@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ModelConfig,
+    ParallelConfig,
+    ShapeConfig,
+    SHAPES,
+    cells_for,
+)
+from repro.configs.registry import ARCH_IDS, get, reduced
+
+__all__ = [
+    "ModelConfig",
+    "ParallelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "cells_for",
+    "ARCH_IDS",
+    "get",
+    "reduced",
+]

@@ -1,0 +1,30 @@
+"""repro.core — the paper's contribution: lock-free bulk work-stealing.
+
+Layers:
+  queue         functional ring-deque with bulk push / proportional bulk steal
+  policy        steal policies + the virtual master's transfer planner
+  master        SPMD rebalancing supersteps (all_gather + all_to_all)
+  sharded_queue stacked per-worker queues, vmap/shard_map drivers
+  host_queue    faithful host-threaded port of the paper's Listings 1-4
+  dd            decision-diagram branch-and-bound solver (paper's application)
+"""
+
+from repro.core.queue import (  # noqa: F401
+    QueueState,
+    make_queue,
+    queue_size,
+    push,
+    pop,
+    pop_bulk,
+    steal,
+    steal_exact,
+    steal_counted,
+    PagedQueue,
+)
+from repro.core.policy import (  # noqa: F401
+    StealPolicy,
+    proportional,
+    steal_half,
+    adaptive_chunk,
+    plan_transfers,
+)

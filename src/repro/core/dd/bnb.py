@@ -1,0 +1,150 @@
+"""DD-based branch-and-bound (Bergman et al. [18], as described in the
+paper's Section I-A): each subproblem is a DD node (layer, state, value);
+exploring it builds a restricted DD (primal bound), a relaxed DD (dual
+bound), and — when the exact DD overflows the width budget — an exact
+frontier whose nodes become the child subproblems (bulk generation:
+up to ``width`` children per explore, the workload the paper's queue is
+built for).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dd.diagram import (
+    DEAD, NEG, Pool, build_bounds, expand_layer, reduce_exact,
+)
+from repro.core.dd.knapsack import Knapsack
+
+__all__ = ["Subproblem", "explore", "explore_batch", "solve"]
+
+
+class Subproblem(NamedTuple):
+    layer: jnp.ndarray   # int32 — next variable to decide
+    state: jnp.ndarray   # int32 — remaining capacity
+    value: jnp.ndarray   # int32 — accumulated profit
+
+
+def exact_frontier(root: Subproblem, weights, profits, *, width: int,
+                   n_vars: int):
+    """Expand EXACTLY until the pool would exceed ``width``.
+
+    Returns (frontier Pool (W,), frontier_layer, was_exact, exact_value):
+    if the exact DD completes (never overflows), was_exact=True and
+    exact_value is the optimum of this subtree; otherwise the frontier
+    nodes at ``frontier_layer`` partition the subtree exactly.
+    """
+    s0 = jnp.full((width,), DEAD, jnp.int32).at[0].set(root.state)
+    v0 = jnp.full((width,), NEG, jnp.int32).at[0].set(root.value)
+    pool0 = Pool(s0, v0)
+
+    def step(carry, inp):
+        pool, done, frontier, f_layer = carry
+        i, w, p = inp
+        active = (i >= root.layer) & ~done
+        children = expand_layer(pool, w, p)
+        new_pool, overflow = reduce_exact(children, width)
+        overflow = overflow & active
+        # On overflow: freeze the PARENT pool as the frontier at layer i.
+        frontier = jax.tree_util.tree_map(
+            lambda f, pp: jnp.where(overflow, pp, f), frontier, pool)
+        f_layer = jnp.where(overflow, i, f_layer)
+        done = done | overflow
+        pool = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(active & ~overflow, new, old),
+            new_pool, pool)
+        return (pool, done, frontier, f_layer), None
+
+    idx = jnp.arange(n_vars, dtype=jnp.int32)
+    (pool, done, frontier, f_layer), _ = jax.lax.scan(
+        step, (pool0, jnp.bool_(False), pool0, jnp.int32(-1)),
+        (idx, weights, profits))
+    was_exact = ~done
+    exact_value = jnp.max(jnp.where(pool.states >= 0, pool.values, NEG))
+    return frontier, f_layer, was_exact, exact_value
+
+
+@functools.partial(jax.jit, static_argnames=("width", "n_vars"))
+def explore(sub: Subproblem, weights, profits, *, width: int, n_vars: int):
+    """Explore one subproblem.  Returns dict:
+      primal: restricted-DD bound (a feasible completion value)
+      dual:   relaxed-DD bound (upper bound on the subtree)
+      exact:  bool — subtree solved exactly (no children)
+      children: Subproblem batch (W,) (dead slots layer = -1)
+    """
+    primal, dual = build_bounds(sub.state, sub.value, sub.layer,
+                                weights, profits, width=width, n_vars=n_vars)
+    frontier, f_layer, was_exact, exact_value = exact_frontier(
+        sub, weights, profits, width=width, n_vars=n_vars)
+    primal = jnp.where(was_exact, exact_value, primal)
+    dual = jnp.where(was_exact, exact_value, dual)
+    live = (frontier.states >= 0) & ~was_exact
+    children = Subproblem(
+        layer=jnp.where(live, f_layer, -1).astype(jnp.int32),
+        state=jnp.where(live, frontier.states, DEAD),
+        value=jnp.where(live, frontier.values, NEG),
+    )
+    return {"primal": primal, "dual": dual, "exact": was_exact,
+            "children": children}
+
+
+@functools.partial(jax.jit, static_argnames=("width", "n_vars"))
+def explore_batch(subs: Subproblem, valid: jnp.ndarray, weights, profits, *,
+                  width: int, n_vars: int):
+    """vmapped explore over a (E,) batch; invalid rows produce nothing."""
+    out = jax.vmap(lambda s: explore(s, weights, profits, width=width,
+                                     n_vars=n_vars))(subs)
+    primal = jnp.where(valid, out["primal"], NEG)
+    dual = jnp.where(valid, out["dual"], NEG)
+    ch = out["children"]
+    live = valid[:, None] & (ch.layer >= 0)
+    children = Subproblem(
+        layer=jnp.where(live, ch.layer, -1),
+        state=jnp.where(live, ch.state, DEAD),
+        value=jnp.where(live, ch.value, NEG),
+    )
+    return {"primal": primal, "dual": dual,
+            "exact": out["exact"] & valid, "children": children}
+
+
+def solve(inst: Knapsack, width: int = 32, batch: int = 16,
+          max_steps: int = 10_000) -> Tuple[int, dict]:
+    """Sequential (single-queue) DD branch-and-bound — the oracle the
+    parallel master-worker solver must agree with."""
+    w = jnp.asarray(inst.weights, jnp.int32)
+    p = jnp.asarray(inst.profits, jnp.int32)
+    stack = [(0, inst.capacity, 0)]
+    incumbent = -(2 ** 30)
+    stats = {"explored": 0, "pruned": 0, "generated": 1, "supersteps": 0}
+
+    while stack and stats["explored"] < max_steps:
+        take = stack[:batch]
+        stack = stack[batch:]
+        E = len(take)
+        arr = np.full((batch, 3), -1, np.int32)
+        arr[:E] = np.asarray(take, np.int32)
+        subs = Subproblem(layer=jnp.asarray(arr[:, 0]),
+                          state=jnp.asarray(arr[:, 1]),
+                          value=jnp.asarray(arr[:, 2]))
+        valid = jnp.arange(batch) < E
+        out = explore_batch(subs, valid, w, p, width=width, n_vars=inst.n)
+        stats["explored"] += E
+        stats["supersteps"] += 1
+        incumbent = max(incumbent, int(jnp.max(out["primal"])))
+        duals = np.asarray(out["dual"])
+        ch = jax.tree_util.tree_map(np.asarray, out["children"])
+        for e in range(E):
+            if duals[e] <= incumbent and not bool(out["exact"][e]):
+                stats["pruned"] += 1
+                continue
+            for j in range(ch.layer.shape[1]):
+                if ch.layer[e, j] >= 0:
+                    stack.append((int(ch.layer[e, j]), int(ch.state[e, j]),
+                                  int(ch.value[e, j])))
+                    stats["generated"] += 1
+    return incumbent, stats

@@ -1,0 +1,148 @@
+"""Vectorized decision-diagram layer expansion: exact / restricted / relaxed.
+
+A DD layer is a fixed-width node pool (static shapes for jit):
+  states (W,) int32   — remaining capacity (-1 = dead slot)
+  values (W,) int32   — longest path value into the node
+
+``expand_layer`` generates both arcs for every node (the bulk node
+generation the paper's queues absorb — kernels/dd_expand is the Pallas
+version of this hot spot).  Reduction policies:
+
+  exact:      merge duplicate states (keep max value); FAILS (reports
+              overflow) when distinct states exceed the pool width.
+  restricted: keep the top-W nodes by value, drop the rest (primal bound;
+              paper Fig. 3).
+  relaxed:    keep the top W-1 by value, MERGE the rest into one node
+              with state = max(states) (a valid relaxation for knapsack's
+              monotone transition) and value = max(values) (dual bound;
+              paper Fig. 4).
+
+All functions are pure jnp and vmap/batch cleanly over a leading
+subproblem axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Pool", "expand_layer", "reduce_restricted", "reduce_relaxed",
+           "reduce_exact", "build_bounds"]
+
+DEAD = jnp.int32(-1)
+NEG = jnp.int32(-(2 ** 30))
+
+
+class Pool(NamedTuple):
+    states: jnp.ndarray   # (W,) int32, -1 = dead
+    values: jnp.ndarray   # (W,) int32
+
+
+def expand_layer(pool: Pool, w: jnp.ndarray, p: jnp.ndarray) -> Pool:
+    """One DD layer: each live node spawns the 0-arc child (state, value)
+    and the 1-arc child (state - w, value + p) when feasible.
+    Returns a (2W,) pool (children may be dead)."""
+    live = pool.states >= 0
+    s0 = jnp.where(live, pool.states, DEAD)
+    v0 = jnp.where(live, pool.values, NEG)
+    feas = live & (pool.states >= w)
+    s1 = jnp.where(feas, pool.states - w, DEAD)
+    v1 = jnp.where(feas, pool.values + p, NEG)
+    return Pool(states=jnp.concatenate([s0, s1]),
+                values=jnp.concatenate([v0, v1]))
+
+
+def _dedup_max(states: jnp.ndarray, values: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge duplicate states keeping the max value (exact DD reduction).
+    Sorts by (state, value) and masks all but the best copy of each state."""
+    order = jnp.lexsort((values, states))  # state asc, value asc within
+    s = states[order]
+    v = values[order]
+    is_last = jnp.concatenate([s[1:] != s[:-1], jnp.array([True])])
+    keep = is_last & (s >= 0)
+    return jnp.where(keep, s, DEAD), jnp.where(keep, v, NEG)
+
+
+def reduce_exact(children: Pool, width: int) -> Tuple[Pool, jnp.ndarray]:
+    """Dedup; returns (pool (W,), overflow flag) — overflow set when more
+    than ``width`` distinct states survive (exact DD exceeded the pool)."""
+    s, v = _dedup_max(children.states, children.values)
+    n_live = jnp.sum(s >= 0)
+    topv, idx = jax.lax.top_k(jnp.where(s >= 0, v, NEG), width)
+    keep_s = s[idx]
+    dead = topv <= NEG
+    return (Pool(states=jnp.where(dead, DEAD, keep_s),
+                 values=jnp.where(dead, NEG, topv)),
+            n_live > width)
+
+
+def reduce_restricted(children: Pool, width: int) -> Pool:
+    """Top-W by value (after dedup) — primal-side restricted DD."""
+    s, v = _dedup_max(children.states, children.values)
+    topv, idx = jax.lax.top_k(jnp.where(s >= 0, v, NEG), width)
+    dead = topv <= NEG
+    return Pool(states=jnp.where(dead, DEAD, s[idx]),
+                values=jnp.where(dead, NEG, topv))
+
+
+def reduce_relaxed(children: Pool, width: int) -> Pool:
+    """Top-(W-1) by value; the remainder merges into one relaxed node with
+    state = max(rest states), value = max(rest values)."""
+    s, v = _dedup_max(children.states, children.values)
+    masked_v = jnp.where(s >= 0, v, NEG)
+    topv, idx = jax.lax.top_k(masked_v, width - 1)
+    kept = jnp.zeros(s.shape, bool).at[idx].set(topv > NEG)
+    rest = (s >= 0) & ~kept
+    any_rest = jnp.any(rest)
+    merged_s = jnp.max(jnp.where(rest, s, DEAD))
+    merged_v = jnp.max(jnp.where(rest, v, NEG))
+    dead = topv <= NEG
+    states = jnp.concatenate([jnp.where(dead, DEAD, s[idx]),
+                              jnp.where(any_rest, merged_s, DEAD)[None]])
+    values = jnp.concatenate([jnp.where(dead, NEG, topv),
+                              jnp.where(any_rest, merged_v, NEG)[None]])
+    return Pool(states=states, values=values)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "n_vars"))
+def build_bounds(root_state: jnp.ndarray, root_value: jnp.ndarray,
+                 start_layer: jnp.ndarray, weights: jnp.ndarray,
+                 profits: jnp.ndarray, *, width: int, n_vars: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Build restricted + relaxed DDs from a subproblem root.
+
+    Scans all n_vars layers; layers before ``start_layer`` are skipped
+    (masked no-op) so batches of subproblems rooted at different depths
+    vectorize.  Returns (primal, dual) bounds for root_value + completion.
+    """
+
+    def init(wd):
+        s = jnp.full((wd,), DEAD, jnp.int32).at[0].set(root_state)
+        v = jnp.full((wd,), NEG, jnp.int32).at[0].set(root_value)
+        return Pool(s, v)
+
+    res0 = init(width)
+    rel0 = init(width)
+
+    def step(carry, inp):
+        res, rel = carry
+        i, w, p = inp
+        active = i >= start_layer
+        res_c = expand_layer(res, w, p)
+        res_n = reduce_restricted(res_c, width)
+        rel_c = expand_layer(rel, w, p)
+        rel_n = reduce_relaxed(rel_c, width)
+        res = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(active, new, old), res_n, res)
+        rel = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(active, new, old), rel_n, rel)
+        return (res, rel), None
+
+    idx = jnp.arange(n_vars, dtype=jnp.int32)
+    (res, rel), _ = jax.lax.scan(step, (res0, rel0), (idx, weights, profits))
+    primal = jnp.max(jnp.where(res.states >= 0, res.values, NEG))
+    dual = jnp.max(jnp.where(rel.states >= 0, rel.values, NEG))
+    return primal, dual

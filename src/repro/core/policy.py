@@ -1,0 +1,115 @@
+"""Steal policies and watermark scheduling for the virtual master.
+
+The paper's master (a) waits until a victim is *nearly drained* before
+redistributing (§II.B), (b) steals a *proportion* of the victim's queue in
+one bulk operation, and (c) is the only stealer.  These translate to a
+deterministic plan computed identically on every device from the gathered
+size vector (see ``core.master``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["StealPolicy", "proportional", "steal_half", "adaptive_chunk", "plan_transfers"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StealPolicy:
+    """Configuration of the master's rebalancing policy.
+
+    Attributes:
+      proportion: fraction of the victim's queue taken per steal (paper's
+        ``steal(p)`` argument).
+      queue_limit: victims below this size are never stolen from (paper's
+        ``_queue_limit_`` abort).
+      low_watermark: a worker is *idle-eligible* (receives work) when its
+        queue size is <= this — the paper's "nearly drained" criterion.
+      high_watermark: a worker is a steal *victim* only above this.
+      max_steal: static upper bound on a single bulk transfer (ring/buffer
+        size on device).
+    """
+
+    proportion: float = 0.5
+    queue_limit: int = 2
+    low_watermark: int = 1
+    high_watermark: int = 8
+    max_steal: int = 256
+
+
+def proportional(p: float, **kw) -> StealPolicy:
+    """The paper's policy: steal fraction ``p`` of the victim's tail."""
+    return StealPolicy(proportion=p, **kw)
+
+
+def steal_half(**kw) -> StealPolicy:
+    """Hendler-Shavit steal-half (paper §V), the common-case default."""
+    return StealPolicy(proportion=0.5, **kw)
+
+
+def adaptive_chunk(n_idle: int, n_busy: int, base: float = 0.5) -> float:
+    """Adnan-Sato-style dynamic chunk sizing (paper §V): scale the stolen
+    proportion with the idle/busy imbalance so one rebalancing round can
+    feed several idle workers from one victim without over-stealing."""
+    if n_busy <= 0:
+        return 0.0
+    ratio = n_idle / max(n_idle + n_busy, 1)
+    return float(min(max(base * 2 * ratio, 0.125), 0.75))
+
+
+def plan_transfers(sizes: jnp.ndarray, policy: StealPolicy) -> jnp.ndarray:
+    """Compute a deterministic (victim -> thief) transfer plan.
+
+    Args:
+      sizes: int32 ``(n_workers,)`` queue sizes, identical on every device
+        (from ``all_gather``).
+      policy: the steal policy.
+
+    Returns:
+      int32 ``(n_workers, 2)``: for worker ``i``, ``plan[i] = (src, n)``
+      meaning worker ``i`` *receives* ``n`` items stolen from ``src``
+      (``src == i`` and ``n == 0`` when no transfer).  The plan pairs the
+      k-th most idle worker with the k-th busiest victim — at most ONE steal
+      per victim per round, which is the single-stealer invariant at
+      superstep granularity.
+
+    The function is pure jnp (usable inside jit / shard_map) and every
+    device computes the identical plan from the identical size vector —
+    the "virtual master".
+    """
+    n = sizes.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    idle = sizes <= policy.low_watermark
+    victim = sizes >= jnp.maximum(policy.high_watermark, policy.queue_limit)
+
+    # Rank idle workers (emptiest first) and victims (fullest first).
+    idle_order = jnp.argsort(jnp.where(idle, sizes, jnp.int32(2**30)))
+    victim_order = jnp.argsort(jnp.where(victim, -sizes, jnp.int32(2**30)))
+    n_idle = jnp.sum(idle.astype(jnp.int32))
+    n_victim = jnp.sum(victim.astype(jnp.int32))
+    n_pairs = jnp.minimum(n_idle, n_victim)
+
+    # Pair k-th idle with k-th victim.
+    pair_rank = jnp.arange(n, dtype=jnp.int32)
+    thief_of_pair = idle_order.astype(jnp.int32)
+    victim_of_pair = victim_order.astype(jnp.int32)
+    live = pair_rank < n_pairs
+
+    steal_n = jnp.asarray(
+        jnp.floor(sizes[victim_of_pair].astype(jnp.float32) * policy.proportion),
+        jnp.int32,
+    )
+    steal_n = jnp.minimum(steal_n, jnp.int32(policy.max_steal))
+    steal_n = jnp.where(live, steal_n, 0)
+
+    # Scatter the plan back to per-worker rows (thief-indexed).
+    src = jnp.full((n,), idx, dtype=jnp.int32)  # default: self (no-op)
+    amt = jnp.zeros((n,), dtype=jnp.int32)
+    src = src.at[thief_of_pair].set(
+        jnp.where(live, victim_of_pair, thief_of_pair), mode="drop"
+    )
+    amt = amt.at[thief_of_pair].set(steal_n, mode="drop")
+    return jnp.stack([src, amt], axis=-1)

@@ -1,0 +1,98 @@
+"""Containers and drivers for per-worker queues across a mesh axis.
+
+``ShardedQueues`` stacks W independent :class:`QueueState`s along a leading
+axis.  Two execution modes share the exact same superstep code:
+
+* ``run_vmapped`` — ``jax.vmap(..., axis_name=...)`` over the stacked axis:
+  runs on a single device; used by unit/property tests and the CPU solver.
+* ``run_sharded`` — ``shard_map`` over a real mesh axis: each device owns its
+  lane; used by the production launcher and the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import queue as q_ops
+from repro.core.policy import StealPolicy
+from repro.core import master as master_ops
+
+Pytree = Any
+
+__all__ = ["make_sharded_queues", "vmapped_superstep", "sharded_superstep"]
+
+
+def make_sharded_queues(n_workers: int, capacity: int, item_spec: Pytree) -> q_ops.QueueState:
+    """A stacked pytree of W empty queues (leading axis = worker)."""
+    buf = jax.tree_util.tree_map(
+        lambda s: jnp.zeros((n_workers, capacity) + tuple(s.shape), dtype=s.dtype),
+        item_spec,
+    )
+    return q_ops.QueueState(
+        buf=buf,
+        lo=jnp.zeros((n_workers,), jnp.int32),
+        size=jnp.zeros((n_workers,), jnp.int32),
+    )
+
+
+def vmapped_superstep(policy: StealPolicy, axis_name: str = "workers") -> Callable:
+    """Single-device driver: the superstep vmapped over the worker axis with
+    collectives resolved through the vmap axis name."""
+
+    def step(qs: q_ops.QueueState):
+        return jax.vmap(
+            functools.partial(master_ops.superstep, policy=policy, axis_name=axis_name),
+            axis_name=axis_name,
+        )(qs)
+
+    return jax.jit(step)
+
+
+def sharded_superstep(
+    mesh: Mesh,
+    policy: StealPolicy,
+    worker_axis: str = "data",
+    pod_axis: str | None = None,
+) -> Callable:
+    """Production driver: shard_map over the mesh's worker axis (one queue
+    per device along that axis); optionally hierarchical over a pod axis."""
+    from jax.experimental.shard_map import shard_map
+
+    axes = (pod_axis, worker_axis) if pod_axis else (worker_axis,)
+    spec = P(axes)
+
+    if pod_axis is None:
+        def inner(qs):
+            q = jax.tree_util.tree_map(lambda x: x[0], qs)  # strip lane dim
+            q, stats = master_ops.superstep(q, policy, axis_name=worker_axis)
+            return (
+                jax.tree_util.tree_map(lambda x: x[None], q),
+                jax.tree_util.tree_map(jnp.atleast_1d, stats.sizes_after),
+            )
+    else:
+        def inner(qs):
+            q = jax.tree_util.tree_map(lambda x: x[0], qs)
+            q, stats = master_ops.hierarchical_superstep(
+                q, policy, worker_axis=worker_axis, pod_axis=pod_axis
+            )
+            return (
+                jax.tree_util.tree_map(lambda x: x[None], q),
+                jax.tree_util.tree_map(jnp.atleast_1d, stats.sizes_after),
+            )
+
+    fn = shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(q_ops.QueueState(buf=spec, lo=spec, size=spec),),
+        out_specs=(
+            q_ops.QueueState(buf=spec, lo=spec, size=spec),
+            P(None),
+        ),
+        check_rep=False,
+    )
+    return jax.jit(fn)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import SynthDataset, synth_batch
+from repro.data.pipeline import WorkStealingPipeline
+
+__all__ = ["SynthDataset", "synth_batch", "WorkStealingPipeline"]

@@ -1,0 +1,71 @@
+"""DD layer expansion (bulk node generation) as a Pallas TPU kernel.
+
+The branch-and-bound hot spot: every superstep, each worker expands a
+block of DD nodes into 2x children (the "bulk generation, often more
+than a hundred nodes at once" of the paper's §II.A).  Pure VPU work —
+elementwise compare/select over node blocks tiled into VMEM — but
+keeping it in a kernel (a) fuses the feasibility test, both arcs, and
+dead-slot masking into one pass and (b) feeds the queue_steal kernel's
+ring buffers without bouncing through HBM-resident temporaries.
+
+Grid: one program per node block; outputs both arcs for the block.
+The arc weight/profit arrive as scalar-prefetch args so one compiled
+kernel serves every layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["expand"]
+
+NEG = -(2 ** 30)
+DEFAULT_BLOCK = 256
+
+
+def _kernel(wp_ref, s_ref, v_ref, s0_ref, v0_ref, s1_ref, v1_ref):
+    w = wp_ref[0]
+    p = wp_ref[1]
+    s = s_ref[...]
+    v = v_ref[...]
+    live = s >= 0
+    s0_ref[...] = jnp.where(live, s, -1)
+    v0_ref[...] = jnp.where(live, v, NEG)
+    feas = live & (s >= w)
+    s1_ref[...] = jnp.where(feas, s - w, -1)
+    v1_ref[...] = jnp.where(feas, v + p, NEG)
+
+
+def expand(states: jnp.ndarray, values: jnp.ndarray, w, p, *,
+           block: int = DEFAULT_BLOCK, interpret: bool = False):
+    """states/values: (N,) int32; returns (s0, v0, s1, v1) each (N,)."""
+    N = states.shape[0]
+    block = min(block, N)
+    assert N % block == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i, wp: (i,)),
+            pl.BlockSpec((block,), lambda i, wp: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i, wp: (i,)),
+            pl.BlockSpec((block,), lambda i, wp: (i,)),
+            pl.BlockSpec((block,), lambda i, wp: (i,)),
+            pl.BlockSpec((block,), lambda i, wp: (i,)),
+        ],
+    )
+    wp = jnp.stack([jnp.asarray(w, jnp.int32), jnp.asarray(p, jnp.int32)])
+    s0, v0, s1, v1 = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32)] * 4,
+        interpret=interpret,
+    )(wp, states, values)
+    return s0, v0, s1, v1

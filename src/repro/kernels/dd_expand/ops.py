@@ -1,0 +1,26 @@
+"""Jitted wrapper for DD layer expansion (kernel on TPU, oracle on CPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dd_expand.kernel import expand
+from repro.kernels.dd_expand.ref import expand_ref
+
+__all__ = ["expand_layer_bulk"]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def expand_layer_bulk(states, values, w, p, *, use_pallas: bool = False,
+                      interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(N,) nodes -> (2N,) children [0-arcs then 1-arcs], diagram layout."""
+    if use_pallas or interpret:
+        s0, v0, s1, v1 = expand(states, values, w, p,
+                                interpret=interpret or
+                                jax.default_backend() != "tpu")
+        return jnp.concatenate([s0, s1]), jnp.concatenate([v0, v1])
+    return expand_ref(states, values, w, p)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the DD layer-expansion kernel.
+
+Mirrors core.dd.diagram.expand_layer: each live node (state >= 0) emits a
+0-arc child (unchanged) and a 1-arc child (state - w, value + p) when
+feasible; dead slots propagate as (-1, NEG).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+NEG = -(2 ** 30)
+
+__all__ = ["expand_ref"]
+
+
+def expand_ref(states: jnp.ndarray, values: jnp.ndarray, w, p
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """states/values: (N,) int32 -> children (2N,) int32 each
+    (first N = 0-arc children, second N = 1-arc children)."""
+    live = states >= 0
+    s0 = jnp.where(live, states, -1)
+    v0 = jnp.where(live, values, NEG)
+    feas = live & (states >= w)
+    s1 = jnp.where(feas, states - w, -1)
+    v1 = jnp.where(feas, values + p, NEG)
+    return (jnp.concatenate([s0, s1]).astype(jnp.int32),
+            jnp.concatenate([v0, v1]).astype(jnp.int32))

@@ -1,0 +1,130 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation (vs. the CUDA flash-attention algorithm): the grid's last
+dimension executes SEQUENTIALLY on a TensorCore, so instead of a per-CTA
+inner loop, the KV-block loop IS the last grid dimension and the running
+(m, l, acc) softmax state lives in VMEM scratch that persists across those
+sequential grid steps.  Q/K/V blocks are tiled into VMEM by BlockSpecs
+with MXU-aligned tiles (block sizes multiples of 128 on the matmul dims);
+the (BQ, BK) logits tile never leaves VMEM.
+
+Layout: q (B, H, S, hd), k/v (B, H, T, hd) — heads flattened into the
+grid; causal / sliding-window masking and gemma2 softcap fused in-kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_K"]
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], block_q: int, block_k: int,
+            t_offset: int, n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (BQ, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (BK, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (BQ, BK)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+
+    # positions: queries right-aligned at t_offset (t_offset = T - S).
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + t_offset
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    ok = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    logits = jnp.where(ok, logits, _NEG_INF)
+
+    m_prev = m_scr[...]                          # (BQ, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, S, hd); k, v: (B, H, T, hd).  Returns (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    n_q, n_kv = S // block_q, T // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, t_offset=T - S, n_kv=n_kv)
+
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=_scratch(block_q, hd),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(block_q: int, hd: int):
+    """Running (m, l) + fp32 accumulator, persisted in VMEM across the
+    sequential KV grid steps."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, hd), jnp.float32),
+    ]

@@ -1,0 +1,51 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+``mha(q, k, v, ...)`` takes model-layout tensors (B, S, H, hd) /
+(B, T, K, hd), expands GQA KV heads, transposes to the kernel layout, and
+dispatches to the Pallas kernel (TPU) or the jnp oracle (CPU and any
+platform without Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["mha"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "use_pallas", "interpret"))
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, window: Optional[int] = None,
+        softcap: Optional[float] = None, use_pallas: bool = False,
+        interpret: bool = False) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, T, K, hd) with H % K == 0.
+
+    Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    if not (use_pallas or interpret):
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    qt = jnp.moveaxis(q, 2, 1)  # (B, H, S, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          softcap=softcap,
+                          interpret=interpret or not _on_tpu())
+    return jnp.moveaxis(out, 1, 2)

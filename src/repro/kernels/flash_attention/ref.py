@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Plain softmax attention over flat heads with optional causal mask,
+sliding window, and gemma2-style logit softcap — numerically the target
+the Pallas kernel must match (fp32 softmax).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, T, H, hd) (KV already expanded to H).
+
+    Returns (B, S, H, hd) in q.dtype.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(hd)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    q_pos = jnp.arange(S)[:, None] + (T - S)  # right-aligned queries
+    k_pos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    logits = jnp.where(ok[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,38 @@
+"""Jitted wrapper: ring-segment gather for arbitrary payload pytrees.
+
+Leaves are flattened to (cap, -1), moved with the Pallas kernel (TPU) or
+the jnp oracle (CPU), and reshaped back.  Used by ``core.queue.steal``
+when ``use_pallas`` is enabled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.queue_steal.kernel import ring_gather
+from repro.kernels.queue_steal.ref import ring_gather_ref
+
+__all__ = ["steal_gather"]
+
+
+@functools.partial(jax.jit, static_argnames=("max_steal", "use_pallas",
+                                             "interpret"))
+def steal_gather(buf_tree, lo, n, *, max_steal: int, use_pallas: bool = False,
+                 interpret: bool = False):
+    """buf_tree: pytree of (cap, ...) arrays -> pytree of (max_steal, ...)."""
+
+    def one(buf):
+        shape = buf.shape
+        flat = buf.reshape(shape[0], -1)
+        if use_pallas or interpret:
+            out = ring_gather(flat, lo, n, max_steal,
+                              interpret=interpret or
+                              jax.default_backend() != "tpu")
+        else:
+            out = ring_gather_ref(flat, lo, n, max_steal)
+        return out.reshape((max_steal,) + shape[1:])
+
+    return jax.tree_util.tree_map(one, buf_tree)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the bulk ring-segment move (queue steal / push).
+
+``ring_gather(buf, lo, n, max_steal)``: rows ``(lo + i) % cap`` for
+``i < n`` (rows >= n zeroed) — exactly what ``core.queue.steal_exact``
+computes for the stolen block.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ring_gather_ref"]
+
+
+def ring_gather_ref(buf: jnp.ndarray, lo, n, max_steal: int) -> jnp.ndarray:
+    cap = buf.shape[0]
+    offs = jnp.arange(max_steal, dtype=jnp.int32)
+    phys = (jnp.asarray(lo, jnp.int32) + offs) % cap
+    out = buf[phys]
+    live = offs < jnp.asarray(n, jnp.int32)
+    return jnp.where(live.reshape((max_steal,) + (1,) * (buf.ndim - 1)),
+                     out, jnp.zeros_like(out))

@@ -1,0 +1,110 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: the chunk dimension is the
+LAST grid axis (sequential on a TensorCore), and the carried SSM state
+(hd x ns per head) lives in VMEM scratch across those steps — the Pallas
+analogue of ``lax.scan`` over chunks in the jnp reference, but with the
+(Q, Q) decay-masked intra-chunk block computed entirely in VMEM and the
+two matmuls (C.B^T and (G*L).x) hitting the MXU with 128-aligned tiles.
+
+Grid: (batch * heads, n_chunks).  Block tensors per step:
+  x (Q, hd), dt (Q, 1), B/C (Q, ns) — VMEM footprint for Q=256, hd=64,
+  ns=128 is ~0.4 MB plus the (Q, Q) mask: well inside 16 MB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, fin_ref,
+            st_scr, *, Q: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    x = x_ref[0].astype(jnp.float32)              # (Q, hd)
+    dt = dt_ref[0].astype(jnp.float32)            # (Q, 1)
+    a = a_ref[0, 0]                                # scalar
+    B = b_ref[0].astype(jnp.float32)              # (Q, ns)
+    C = c_ref[0].astype(jnp.float32)              # (Q, ns)
+    D = d_ref[0, 0]
+
+    dta = dt[:, 0] * a
+    cs = jnp.cumsum(dta)                          # (Q,)
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = col <= row
+    L = jnp.where(causal, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+    L = L * dt[:, 0][None, :]
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jax.lax.dot_general(G * L, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, hd)
+
+    state = st_scr[...]                           # (hd, ns)
+    y = y + jnp.exp(cs)[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # C @ state.T
+    y = y + D * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    seg = jnp.exp(cs[Q - 1])
+    w = (dt[:, 0] * jnp.exp(cs[Q - 1] - cs))[:, None]   # (Q, 1)
+    st_new = state * seg + jax.lax.dot_general(
+        x * w, B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (hd, ns)
+    st_scr[...] = st_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        fin_ref[0] = st_new.astype(fin_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray, *,
+             chunk: int, interpret: bool = False):
+    """x: (BH, S, hd); dt: (BH, S); a, D: (BH,); B, C: (BH, S, ns).
+
+    Batch and heads are flattened into BH (B/C already broadcast per head
+    group by the caller).  Returns (y (BH, S, hd), final_state (BH, hd, ns)).
+    """
+    BH, S, hd = x.shape
+    ns = B.shape[-1]
+    Q = chunk
+    assert S % Q == 0
+    nc = S // Q
+
+    kern = functools.partial(_kernel, Q=Q, n_chunks=nc)
+    y, fin = pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, Q, ns), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, ns), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hd, ns), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), x.dtype),
+            jax.ShapeDtypeStruct((BH, hd, ns), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, ns), jnp.float32)],
+        interpret=interpret,
+    )(x, dt[..., None], a[:, None], B, C, D[:, None])
+    return y, fin

@@ -1,0 +1,41 @@
+"""Jitted wrapper dispatching model-layout SSD to the Pallas kernel.
+
+Model layout: x (B, S, nh, hd), dt (B, S, nh), A (nh,), Bm/Cm (B, S, ns),
+D (nh,) — flattened to (B*nh, ...) for the kernel grid; Bm/Cm broadcast
+over heads.  CPU path uses the jnp reference (models.ssm.ssd_chunked).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+
+__all__ = ["ssd"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",
+                                             "interpret"))
+def ssd(x, dt, A, Bm, Cm, D, *, chunk: int, use_pallas: bool = False,
+        interpret: bool = False):
+    """Returns (y (B, S, nh, hd), final_state (B, nh, hd, ns))."""
+    if not (use_pallas or interpret):
+        from repro.models.ssm import ssd_chunked
+
+        return ssd_chunked(x, dt, A, Bm, Cm, D, chunk)
+
+    B, S, nh, hd = x.shape
+    ns = Bm.shape[-1]
+    xf = jnp.moveaxis(x, 2, 1).reshape(B * nh, S, hd)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(B * nh, S)
+    Bf = jnp.broadcast_to(Bm[:, None], (B, nh, S, ns)).reshape(B * nh, S, ns)
+    Cf = jnp.broadcast_to(Cm[:, None], (B, nh, S, ns)).reshape(B * nh, S, ns)
+    af = jnp.tile(A, B)
+    Df = jnp.tile(D, B)
+    y, fin = ssd_scan(xf, dtf, af, Bf, Cf, Df, chunk=chunk,
+                      interpret=interpret or jax.default_backend() != "tpu")
+    y = jnp.moveaxis(y.reshape(B, nh, S, hd), 1, 2)
+    return y, fin.reshape(B, nh, hd, ns)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel.
+
+For ONE chunk (per batch x head): given x (Q, hd), dt (Q,), a (scalar,
+negative), B (Q, ns), C (Q, ns) and the carried state (hd, ns):
+
+    cs_i   = cumsum(dt * a)                      (within-chunk log decay)
+    L_ij   = exp(cs_i - cs_j) * dt_j   (j <= i)
+    y_i    = sum_j (C_i . B_j) L_ij x_j          (intra)
+           + (C_i . state) exp(cs_i)             (inter: carried state)
+           + D x_i                               (skip)
+    state' = state * exp(cs_Q) + sum_j B_j dt_j exp(cs_Q - cs_j) x_j
+
+Matches models.ssm.ssd_chunked step-for-step (fp32 math).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ssd_chunk_ref"]
+
+
+def ssd_chunk_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                  B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                  state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (Q, hd), dt: (Q,), a: scalar, B/C: (Q, ns), D: scalar,
+    state: (hd, ns).  Returns (y (Q, hd), new_state (hd, ns))."""
+    Q, hd = x.shape
+    f32 = jnp.float32
+    x, dt, B, C, state = (t.astype(f32) for t in (x, dt, B, C, state))
+    cs = jnp.cumsum(dt * a)                               # (Q,)
+    diff = cs[:, None] - cs[None, :]                      # (Q, Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal, jnp.exp(diff), 0.0) * dt[None, :]
+    G = C @ B.T                                           # (Q, Q)
+    y = (G * L) @ x                                       # intra
+    y = y + jnp.exp(cs)[:, None] * (C @ state.T)          # inter
+    y = y + D * x                                         # skip
+    seg = jnp.exp(cs[-1])
+    w = dt * jnp.exp(cs[-1] - cs)                         # (Q,)
+    new_state = state * seg + jnp.einsum("qh,qn->hn", x * w[:, None], B)
+    return y, new_state

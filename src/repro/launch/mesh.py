@@ -1,0 +1,30 @@
+"""Production mesh construction.  A FUNCTION (not a module-level constant)
+so importing this module never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "CHIPS_PER_POD"]
+
+CHIPS_PER_POD = 256  # 16 x 16 TPU v5e pod
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(data=16, model=16) single pod; (pod=2, data=16, model=16) two pods.
+
+    When the process exposes more host devices than the mesh needs (the
+    dry-run forces 512), the single-pod mesh uses the first 256.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) > n:
+        import numpy as np
+
+        return jax.sharding.Mesh(
+            np.asarray(devices[:n]).reshape(shape), axes)
+    return jax.make_mesh(shape, axes)

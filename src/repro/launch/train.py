@@ -1,0 +1,132 @@
+"""End-to-end training driver.
+
+On this CPU container it trains REDUCED configs for real (--preset smoke);
+the same driver lowers the FULL assigned configs on the production mesh
+(--preset full, TPU target).  Fault tolerance is on by default: atomic
+checkpoints every --ckpt-every steps, SIGTERM-triggered final save,
+restart-from-latest via train.fault.run_supervised, straggler-aware
+work-stealing data pipeline.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import WorkStealingPipeline
+from repro.data.synthetic import synth_batch
+from repro.models import build_model
+from repro.train import checkpoint as ckpt_lib
+from repro.train.fault import GracefulExit, StragglerMonitor, run_supervised
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+
+def build(arch: str, preset: str):
+    cfg = configs.get(arch)
+    if preset == "smoke":
+        cfg = configs.reduced(cfg)
+    return cfg, build_model(cfg)
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    choices=list(configs.ARCH_IDS))
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, model = build(args.arch, args.preset)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=10,
+                          total_steps=max(args.steps, 1))
+    train_step = jax.jit(make_train_step(model, opt_cfg,
+                                         microbatch=args.microbatch))
+
+    pipeline = WorkStealingPipeline(
+        n_hosts=1,
+        make_batch=lambda shard, step: synth_batch(
+            args.seed, shard, step, args.batch, args.seq, cfg.vocab_size),
+    )
+
+    def run(resume) -> int:
+        params = model.init(jax.random.PRNGKey(args.seed))
+        opt = adamw_init(params)
+        start = 0
+        data_state = {"step": 0}
+        if args.ckpt_dir and (resume is not None
+                              or ckpt_lib.latest_step(args.ckpt_dir)):
+            try:
+                (params, opt), start, extra = ckpt_lib.restore(
+                    args.ckpt_dir, (params, opt))
+                data_state = extra.get("data", data_state)
+                print(f"[train] resumed from step {start}")
+            except FileNotFoundError:
+                pass
+
+        mon = StragglerMonitor()
+        with GracefulExit() as stop:
+            for step in range(start, args.steps):
+                mon.start()
+                raw = pipeline.next_batch(0)
+                if cfg.family == "vlm":
+                    npatch = cfg.n_patches
+                    batch = {
+                        "tokens": jnp.asarray(raw["tokens"]),
+                        "labels": jnp.asarray(raw["labels"]),
+                        "patches": jnp.zeros(
+                            (args.batch, npatch, cfg.frontend_dim),
+                            jnp.float32),
+                    }
+                elif cfg.family == "encdec":
+                    batch = {
+                        "frames": jnp.ones(
+                            (args.batch, args.seq, cfg.frontend_dim),
+                            jnp.float32),
+                        "tokens": jnp.asarray(raw["tokens"]),
+                        "labels": jnp.asarray(raw["labels"]),
+                    }
+                else:
+                    batch = {"tokens": jnp.asarray(raw["tokens"]),
+                             "labels": jnp.asarray(raw["labels"])}
+                params, opt, metrics = train_step(params, opt, batch)
+                mon.observe()
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    print(f"[train] step {step} "
+                          f"loss {float(metrics['loss']):.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"lr {float(metrics['lr']):.2e}")
+                if args.ckpt_dir and ((step + 1) % args.ckpt_every == 0
+                                      or stop.requested
+                                      or step == args.steps - 1):
+                    ckpt_lib.save(args.ckpt_dir, step + 1, (params, opt),
+                                  extra={"data": pipeline.queues[0].q and
+                                         {"step": step + 1}})
+                if stop.requested:
+                    print("[train] SIGTERM: checkpointed and exiting")
+                    return step + 1
+        print(f"[train] done at step {args.steps}; "
+              f"pipeline stats {pipeline.stats()}")
+        return args.steps
+
+    return run_supervised(run, max_restarts=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,273 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (B, S_enc, frontend_dim) which a learned projection maps
+to d_model.  The backbone is a standard pre-norm transformer enc-dec:
+bidirectional encoder, causal decoder with cross-attention.
+
+Decode: self-attn KV cache grows per step; cross-attn K/V are computed
+once from the encoder output and stay fixed.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import AttnConfig, attn_init, attention, decode_attention
+from repro.models.layers import (
+    pscan,
+    ShardPlan,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    shard,
+)
+
+Pytree = Any
+
+__all__ = ["EncDecLM"]
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, sh: Optional[ShardPlan] = None):
+        self.cfg = cfg
+        self.sh = sh or ShardPlan()
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.cdtype = jnp.dtype(cfg.compute_dtype)
+
+    def _acfg(self, causal: bool, rope: bool = True) -> AttnConfig:
+        cfg = self.cfg
+        return AttnConfig(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta,
+            rope_fraction=cfg.rope_fraction if rope else 0.0,
+            window=None, softcap=None, qk_norm=False, causal=causal)
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> Pytree:
+        cfg = self.cfg
+        D, Vp = cfg.d_model, cfg.padded_vocab
+        Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+        ks = jax.random.split(key, 8)
+        enc = {
+            "ln1": jnp.ones((Le, D), self.dtype),
+            "ln2": jnp.ones((Le, D), self.dtype),
+            "attn": attn_init(ks[0], Le, D, self._acfg(False), self.dtype),
+            "mlp": mlp_init(ks[1], Le, D, cfg.d_ff, self.dtype),
+        }
+        dec = {
+            "ln1": jnp.ones((Ld, D), self.dtype),
+            "ln_x": jnp.ones((Ld, D), self.dtype),
+            "ln2": jnp.ones((Ld, D), self.dtype),
+            "attn": attn_init(ks[2], Ld, D, self._acfg(True), self.dtype),
+            "xattn": attn_init(ks[3], Ld, D, self._acfg(False), self.dtype),
+            "mlp": mlp_init(ks[4], Ld, D, cfg.d_ff, self.dtype),
+        }
+        return {
+            "frontend_proj": dense_init(ks[5], (cfg.frontend_dim, D), self.dtype),
+            "encoder": enc,
+            "enc_norm": jnp.ones((D,), self.dtype),
+            "decoder": dec,
+            "embed": embed_init(ks[6], Vp, D, self.dtype),
+            "final_norm": jnp.ones((D,), self.dtype),
+            "lm_head": dense_init(ks[7], (D, Vp), self.dtype),
+        }
+
+    def param_specs(self) -> Pytree:
+        sh = self.sh
+        tp, fs = sh.tp, sh.fsdp
+        attn = {"wq": P(None, fs, tp), "wk": P(None, fs, tp),
+                "wv": P(None, fs, tp), "wo": P(None, tp, fs)}
+        mlp = {"w_gate": P(None, fs, tp), "w_up": P(None, fs, tp),
+               "w_down": P(None, tp, fs)}
+        return {
+            "frontend_proj": P(None, fs),
+            "encoder": {"ln1": P(None, None), "ln2": P(None, None),
+                        "attn": dict(attn), "mlp": dict(mlp)},
+            "enc_norm": P(None),
+            "decoder": {"ln1": P(None, None), "ln_x": P(None, None),
+                        "ln2": P(None, None), "attn": dict(attn),
+                        "xattn": dict(attn), "mlp": dict(mlp)},
+            "embed": P(tp, fs),
+            "final_norm": P(None),
+            "lm_head": P(fs, tp),
+        }
+
+    # --------------------------------------------------------------- encoder
+
+    def encode(self, params, frames) -> jnp.ndarray:
+        cfg, sh = self.cfg, self.sh
+        x = jnp.einsum("bsf,fd->bsd", frames.astype(self.cdtype),
+                       params["frontend_proj"].astype(self.cdtype))
+        x = shard(x, sh.dp, None, sh.tp)
+        acfg = self._acfg(False)
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            x = x + attention(pl["attn"], h, acfg, sh, self.cdtype)
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(pl["mlp"], h, sh, self.cdtype)
+            return shard(x, sh.dp, None, sh.tp), None
+
+        fn = body
+        if cfg.remat:
+            fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = pscan(fn, x, params["encoder"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # --------------------------------------------------------------- decoder
+
+    def _decoder_forward(self, params, tokens, enc_out) -> jnp.ndarray:
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens].astype(self.cdtype)
+        x = shard(x, sh.dp, None, sh.tp)
+        self_cfg, x_cfg = self._acfg(True), self._acfg(False, rope=False)
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            x = x + attention(pl["attn"], h, self_cfg, sh, self.cdtype)
+            h = rms_norm(x, pl["ln_x"], cfg.norm_eps)
+            x = x + attention(pl["xattn"], h, x_cfg, sh, self.cdtype,
+                              kv_x=enc_out)
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(pl["mlp"], h, sh, self.cdtype)
+            return shard(x, sh.dp, None, sh.tp), None
+
+        fn = body
+        if cfg.remat:
+            fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = pscan(fn, x, params["decoder"])
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    # ------------------------------------------------------------------ loss
+
+    def loss_fn(self, params, batch) -> jnp.ndarray:
+        from repro.models.layers import chunked_ce_loss
+
+        enc_out = self.encode(params, batch["frames"])
+        hidden = self._decoder_forward(params, batch["tokens"], enc_out)
+        head = params["lm_head"].astype(self.cdtype)
+        return chunked_ce_loss(hidden, head, batch["labels"],
+                               batch.get("loss_mask"), self.sh,
+                               chunk=512, remat=self.cfg.remat)
+
+    # --------------------------------------------------------------- serving
+
+    def make_cache(self, batch: int, seq_len: int, enc_len: int) -> Pytree:
+        cfg = self.cfg
+        Ld = cfg.n_layers
+        K, hd = cfg.n_kv_heads, cfg.hd
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "self": {"k": jnp.zeros((Ld, batch, seq_len, K, hd), self.cdtype),
+                     "v": jnp.zeros((Ld, batch, seq_len, K, hd), self.cdtype)},
+            "cross": {"k": jnp.zeros((Ld, batch, enc_len, K, hd), self.cdtype),
+                      "v": jnp.zeros((Ld, batch, enc_len, K, hd), self.cdtype)},
+        }
+
+    def cache_specs(self, seq_len: int, batch: int = 0) -> Pytree:
+        sh = self.sh
+        if 0 < batch < 16:
+            kv = P(None, None, tuple(sh.dp) + (sh.tp,), None, None)
+        elif seq_len >= 8192:
+            kv = P(None, sh.dp, sh.tp, None, None)
+        else:
+            kv = P(None, sh.dp, None, None, None)
+        return {"pos": P(), "self": {"k": kv, "v": kv},
+                "cross": {"k": kv, "v": kv}}
+
+    def grow_cache(self, cache: Pytree, target_len: int) -> Pytree:
+        """Self-attn cache is linear: zero-pad; cross cache fixed."""
+        sc = cache["self"]
+        C = sc["k"].shape[2]
+        if C >= target_len:
+            return cache
+        padw = [(0, 0)] * sc["k"].ndim
+        padw[2] = (0, target_len - C)
+        return {"pos": cache["pos"], "cross": cache["cross"],
+                "self": {"k": jnp.pad(sc["k"], padw),
+                         "v": jnp.pad(sc["v"], padw)}}
+
+    def prefill(self, params, frames, tokens) -> Tuple[jnp.ndarray, Pytree]:
+        """Encode source; run decoder over the target prefix; build caches."""
+        cfg, sh = self.cfg, self.sh
+        enc_out = self.encode(params, frames)
+        B, S = tokens.shape
+        x = params["embed"][tokens].astype(self.cdtype)
+        x = shard(x, sh.dp, None, sh.tp)
+        positions = jnp.arange(S, dtype=jnp.int32)
+        self_cfg, x_cfg = self._acfg(True), self._acfg(False, rope=False)
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            a, (sk, sv) = attention(pl["attn"], h, self_cfg, sh, self.cdtype,
+                                    positions=positions, return_kv=True)
+            x = x + a
+            h = rms_norm(x, pl["ln_x"], cfg.norm_eps)
+            a, (ck, cv) = attention(pl["xattn"], h, x_cfg, sh, self.cdtype,
+                                    kv_x=enc_out, return_kv=True)
+            x = x + a
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(pl["mlp"], h, sh, self.cdtype)
+            kv = {"self": {"k": sk.astype(self.cdtype), "v": sv.astype(self.cdtype)},
+                  "cross": {"k": ck.astype(self.cdtype), "v": cv.astype(self.cdtype)}}
+            return shard(x, sh.dp, None, sh.tp), kv
+
+        x, kvs = pscan(body, x, params["decoder"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:],
+                            params["lm_head"].astype(self.cdtype))
+        cache = {"pos": jnp.int32(S), "self": kvs["self"], "cross": kvs["cross"]}
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray, Pytree]:
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens].astype(self.cdtype)
+        pos = cache["pos"]
+        self_cfg, x_cfg = self._acfg(True), self._acfg(False, rope=False)
+
+        def body(x, inp):
+            pl, cg = inp
+            seq_shard = cg["self"]["k"].shape[1] >= 8192
+            h = rms_norm(x, pl["ln1"], cfg.norm_eps)
+            a, nk, nv = decode_attention(pl["attn"], h, cg["self"]["k"],
+                                         cg["self"]["v"], pos, self_cfg, sh,
+                                         self.cdtype, seq_shard=seq_shard)
+            x = x + a
+            h = rms_norm(x, pl["ln_x"], cfg.norm_eps)
+            # Cross-attn over the fixed encoder KV: full (non-causal) read.
+            ck, cv = cg["cross"]["k"], cg["cross"]["v"]
+            B = x.shape[0]
+            H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            q = jnp.einsum("bsd,dh->bsh", h.astype(self.cdtype),
+                           pl["xattn"]["wq"].astype(self.cdtype)).reshape(B, 1, H, hd)
+            G = H // K
+            qg = q.reshape(B, K, G, hd)
+            logits = jnp.einsum("bkgh,btkh->bkgt", qg,
+                                ck.astype(self.cdtype)).astype(jnp.float32)
+            logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+            w = jax.nn.softmax(logits, axis=-1).astype(self.cdtype)
+            o = jnp.einsum("bkgt,btkh->bkgh", w,
+                           cv.astype(self.cdtype)).reshape(B, 1, H * hd)
+            x = x + jnp.einsum("bsh,hd->bsd", o,
+                               pl["xattn"]["wo"].astype(self.cdtype))
+            h = rms_norm(x, pl["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(pl["mlp"], h, sh, self.cdtype)
+            return x, {"k": nk, "v": nv}
+
+        layer_caches = (params["decoder"],
+                        {"self": cache["self"], "cross": cache["cross"]})
+        x, new_self = pscan(body, x, layer_caches)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm_head"].astype(self.cdtype))
+        new_cache = {"pos": pos + 1, "self": new_self, "cross": cache["cross"]}
+        return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,558 @@
+"""Hybrid Mamba2 + shared-attention model (zamba2-7b).
+
+Layer plan for ``n_layers=81, attn_every=6``: 13 groups of 6 mamba blocks,
+each group followed by ONE application of a SHARED attention+MLP block
+(one parameter set reused 13 times — zamba2's signature trick), plus a
+tail of 81 - 78 = 3 mamba blocks.  Grouping (instead of a per-layer cond
+inside one scan) keeps HLO FLOP counts honest: attention ops appear once
+per group, not once per layer.
+
+The shared block's KV caches are per-APPLICATION (13 of them) even though
+the weights are shared.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import AttnConfig, attn_init, attention, decode_attention
+from repro.models.layers import (
+    pscan,
+    ShardPlan,
+    chunked_ce_loss,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    shard,
+)
+from repro.models.ssm import (
+    SSMCache,
+    SSMConfig,
+    mamba_block,
+    mamba_decode_step,
+    ssm_init,
+)
+
+Pytree = Any
+
+__all__ = ["HybridLM", "SSMLM"]
+
+_SEQ_SHARD_MIN = 8192
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig, sh: Optional[ShardPlan] = None):
+        self.cfg = cfg
+        self.sh = sh or ShardPlan()
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.cdtype = jnp.dtype(cfg.compute_dtype)
+        self.n_groups = cfg.n_layers // cfg.attn_every
+        self.tail = cfg.n_layers - self.n_groups * cfg.attn_every
+        self.scfg = SSMConfig(
+            d_model=cfg.d_model, d_inner=cfg.d_inner, n_heads=cfg.n_ssm_heads,
+            head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+            conv_dim=cfg.ssm_conv_dim, chunk=cfg.ssm_chunk)
+        self.acfg = AttnConfig(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, rope_fraction=cfg.rope_fraction,
+            window=None, softcap=None, qk_norm=False, causal=True)
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> Pytree:
+        cfg = self.cfg
+        NG, AE, D = self.n_groups, cfg.attn_every, cfg.d_model
+        ks = jax.random.split(key, 8)
+        grouped = {
+            "ln": jnp.ones((NG, AE, D), self.dtype),
+            "ssm": _stack2(ssm_init(ks[0], NG * AE, self.scfg, self.dtype),
+                           NG, AE),
+        }
+        shared = {
+            "ln1": jnp.ones((D,), self.dtype),
+            "ln2": jnp.ones((D,), self.dtype),
+            "attn": _squeeze(attn_init(ks[1], 1, D, self.acfg, self.dtype)),
+            "mlp": _squeeze(mlp_init(ks[2], 1, D, cfg.d_ff, self.dtype)),
+        }
+        params = {
+            "embed": embed_init(ks[3], cfg.padded_vocab, D, self.dtype),
+            "grouped": grouped,
+            "shared": shared,
+            "final_norm": jnp.ones((D,), self.dtype),
+        }
+        if self.tail:
+            params["tail"] = {
+                "ln": jnp.ones((self.tail, D), self.dtype),
+                "ssm": ssm_init(ks[4], self.tail, self.scfg, self.dtype),
+            }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[5], (D, cfg.padded_vocab), self.dtype)
+        return params
+
+    def param_specs(self) -> Pytree:
+        cfg, sh = self.cfg, self.sh
+        tp, fs = sh.tp, sh.fsdp
+
+        def ssm_specs(lead):
+            n = (None,) * lead
+            return {
+                "w_z": P(*n, fs, tp), "w_x": P(*n, fs, tp),
+                "w_B": P(*n, fs, None), "w_C": P(*n, fs, None),
+                "w_dt": P(*n, fs, tp),
+                "conv_x": P(*n, None, tp), "conv_B": P(*n, None, None),
+                "conv_C": P(*n, None, None),
+                "A_log": P(*n, tp), "D": P(*n, tp), "dt_bias": P(*n, tp),
+                "out_proj": P(*n, tp, fs), "gate_norm": P(*n, tp),
+            }
+
+        specs = {
+            "embed": P(tp, fs),
+            "grouped": {"ln": P(None, None, None), "ssm": ssm_specs(2)},
+            "shared": {
+                "ln1": P(None), "ln2": P(None),
+                "attn": {"wq": P(fs, tp), "wk": P(fs, tp),
+                         "wv": P(fs, tp), "wo": P(tp, fs)},
+                "mlp": {"w_gate": P(fs, tp), "w_up": P(fs, tp),
+                        "w_down": P(tp, fs)},
+            },
+            "final_norm": P(None),
+        }
+        if self.tail:
+            specs["tail"] = {"ln": P(None, None), "ssm": ssm_specs(1)}
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P(fs, tp)
+        return specs
+
+    # ------------------------------------------------------------- forward
+
+    def _shared_block(self, params, x, positions):
+        cfg, sh = self.cfg, self.sh
+        s = params["shared"]
+        h = rms_norm(x, s["ln1"], cfg.norm_eps)
+        x = x + attention(s["attn"], h, self.acfg, sh, self.cdtype,
+                          positions=positions)
+        h = rms_norm(x, s["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(s["mlp"], h, sh, self.cdtype)
+        return shard(x, sh.dp, None, sh.tp)
+
+    def forward(self, params, tokens) -> jnp.ndarray:
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens].astype(self.cdtype)
+        x = shard(x, sh.dp, None, sh.tp)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+        def group_fn(x, pg):
+            def mamba_fn(x, pl):
+                h = rms_norm(x, pl["ln"], cfg.norm_eps)
+                x = x + mamba_block(pl["ssm"], h, self.scfg, sh, self.cdtype)
+                return shard(x, sh.dp, None, sh.tp), None
+
+            x, _ = pscan(mamba_fn, x, {"ln": pg["ln"], "ssm": pg["ssm"]})
+            x = self._shared_block(params, x, positions)
+            return x, None
+
+        body = group_fn
+        if cfg.remat:
+            body = jax.checkpoint(group_fn,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = pscan(body, x, params["grouped"])
+
+        if self.tail:
+            def tail_fn(x, pl):
+                h = rms_norm(x, pl["ln"], cfg.norm_eps)
+                x = x + mamba_block(pl["ssm"], h, self.scfg, sh, self.cdtype)
+                return shard(x, sh.dp, None, sh.tp), None
+            tb = tail_fn
+            if cfg.remat:
+                tb = jax.checkpoint(tail_fn,
+                                    policy=jax.checkpoint_policies.nothing_saveable)
+            x, _ = pscan(tb, x, params["tail"])
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def _head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def loss_fn(self, params, batch) -> jnp.ndarray:
+        hidden = self.forward(params, batch["tokens"])
+        return chunked_ce_loss(hidden, self._head(params).astype(self.cdtype),
+                               batch["labels"], batch.get("loss_mask"),
+                               self.sh, remat=self.cfg.remat)
+
+    # --------------------------------------------------------------- serving
+
+    def make_cache(self, batch: int, seq_len: int) -> Pytree:
+        cfg = self.cfg
+        NG, AE = self.n_groups, cfg.attn_every
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        nh, hd, ns = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+        def ssm_cache(n):
+            return {
+                "conv_buf": jnp.zeros((n, batch, cfg.ssm_conv_dim - 1, conv_ch),
+                                      self.cdtype),
+                "state": jnp.zeros((n, batch, nh, hd, ns), jnp.float32),
+            }
+
+        cache = {
+            "pos": jnp.zeros((), jnp.int32),
+            "grouped_ssm": {
+                "conv_buf": jnp.zeros((NG, AE, batch, cfg.ssm_conv_dim - 1, conv_ch),
+                                      self.cdtype),
+                "state": jnp.zeros((NG, AE, batch, nh, hd, ns), jnp.float32),
+            },
+            "shared_attn": {
+                "k": jnp.zeros((NG, batch, seq_len, cfg.n_kv_heads, cfg.hd),
+                               self.cdtype),
+                "v": jnp.zeros((NG, batch, seq_len, cfg.n_kv_heads, cfg.hd),
+                               self.cdtype),
+            },
+        }
+        if self.tail:
+            cache["tail_ssm"] = ssm_cache(self.tail)
+        return cache
+
+    def cache_specs(self, seq_len: int, batch: int = 0) -> Pytree:
+        sh = self.sh
+        tiny = 0 < batch < 16
+        dp = None if tiny else sh.dp
+        if tiny:
+            kv = P(None, None, tuple(sh.dp) + (sh.tp,), None, None)
+        elif seq_len >= _SEQ_SHARD_MIN:
+            kv = P(None, sh.dp, sh.tp, None, None)
+        else:
+            kv = P(None, sh.dp, None, None, None)
+        specs = {
+            "pos": P(),
+            "grouped_ssm": {"conv_buf": P(None, None, dp, None, None),
+                            "state": P(None, None, dp, sh.tp, None, None)},
+            "shared_attn": {"k": kv, "v": kv},
+        }
+        if self.tail:
+            specs["tail_ssm"] = {"conv_buf": P(None, dp, None, None),
+                                 "state": P(None, dp, sh.tp, None, None)}
+        return specs
+
+    def grow_cache(self, cache: Pytree, target_len: int) -> Pytree:
+        """Shared-attn cache is linear: zero-pad; SSM state is O(1)."""
+        sa = cache["shared_attn"]
+        C = sa["k"].shape[2]
+        if C >= target_len:
+            return cache
+        padw = [(0, 0)] * sa["k"].ndim
+        padw[2] = (0, target_len - C)
+        out = dict(cache)
+        out["shared_attn"] = {"k": jnp.pad(sa["k"], padw),
+                              "v": jnp.pad(sa["v"], padw)}
+        return out
+
+    def prefill(self, params, tokens) -> Tuple[jnp.ndarray, Pytree]:
+        """Prefill via teacher-forced forward; SSM states rebuilt by a
+        final-state pass.  For simplicity the prefill recomputes the scan
+        with state capture (same FLOPs as forward)."""
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens].astype(self.cdtype)
+        x = shard(x, sh.dp, None, sh.tp)
+        B, S, _ = x.shape
+        positions = jnp.arange(S, dtype=jnp.int32)
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+
+        def capture_mamba(x, pl):
+            from repro.models.ssm import _causal_conv
+            import jax.nn as jnn
+            h = rms_norm(x, pl["ln"], cfg.norm_eps)
+            # replicate mamba_block but capture conv tail + final state
+            cd = self.cdtype
+            hc = h.astype(cd)
+            z = jnp.einsum("bsd,dk->bsk", hc, pl["ssm"]["w_z"].astype(cd))
+            xs = jnp.einsum("bsd,dk->bsk", hc, pl["ssm"]["w_x"].astype(cd))
+            Bm = jnp.einsum("bsd,dn->bsn", hc, pl["ssm"]["w_B"].astype(cd))
+            Cm = jnp.einsum("bsd,dn->bsn", hc, pl["ssm"]["w_C"].astype(cd))
+            dt = jnp.einsum("bsd,dh->bsh", hc, pl["ssm"]["w_dt"].astype(cd))
+            conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+            tail = conv_in[:, S - (cfg.ssm_conv_dim - 1):, :]
+            xs = jnn.silu(_causal_conv(xs, pl["ssm"]["conv_x"].astype(cd)))
+            Bm = jnn.silu(_causal_conv(Bm, pl["ssm"]["conv_B"].astype(cd)))
+            Cm = jnn.silu(_causal_conv(Cm, pl["ssm"]["conv_C"].astype(cd)))
+            dt = jnn.softplus(dt.astype(jnp.float32)
+                              + pl["ssm"]["dt_bias"][None, None, :])
+            A = -jnp.exp(pl["ssm"]["A_log"])
+            from repro.models.ssm import ssd_chunked
+            xs4 = xs.reshape(B, S, self.scfg.n_heads, self.scfg.head_dim)
+            y, fin = ssd_chunked(xs4, dt, A, Bm, Cm, pl["ssm"]["D"],
+                                 self.scfg.chunk, sh=sh)
+            y = y.reshape(B, S, cfg.d_inner)
+            y = rms_norm(y * jnn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                         pl["ssm"]["gate_norm"])
+            out = jnp.einsum("bsk,kd->bsd", y.astype(cd),
+                             pl["ssm"]["out_proj"].astype(cd))
+            x = x + shard(out, sh.dp, None, None)
+            return shard(x, sh.dp, None, sh.tp), (tail.astype(self.cdtype), fin)
+
+        def group_fn(x, pg):
+            x, caches = pscan(capture_mamba, x,
+                                     {"ln": pg["ln"], "ssm": pg["ssm"]})
+            h = rms_norm(x, params["shared"]["ln1"], cfg.norm_eps)
+            a, (k, v) = attention(params["shared"]["attn"], h, self.acfg, sh,
+                                  self.cdtype, positions=positions,
+                                  return_kv=True)
+            x = x + a
+            h = rms_norm(x, params["shared"]["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(params["shared"]["mlp"], h, sh, self.cdtype)
+            x = shard(x, sh.dp, None, sh.tp)
+            return x, (caches, (k.astype(self.cdtype), v.astype(self.cdtype)))
+
+        x, (g_caches, attn_kv) = pscan(group_fn, x, params["grouped"])
+        cache = {
+            "pos": jnp.int32(S),
+            "grouped_ssm": {"conv_buf": g_caches[0], "state": g_caches[1]},
+            "shared_attn": {"k": attn_kv[0], "v": attn_kv[1]},
+        }
+        if self.tail:
+            x, t_caches = pscan(capture_mamba, x, params["tail"])
+            cache["tail_ssm"] = {"conv_buf": t_caches[0], "state": t_caches[1]}
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:],
+                            self._head(params).astype(self.cdtype))
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray, Pytree]:
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens].astype(self.cdtype)
+        pos = cache["pos"]
+
+        def mamba_step(x, pl, cg):
+            h = rms_norm(x, pl["ln"], cfg.norm_eps)
+            out, new_c = mamba_decode_step(
+                pl["ssm"], h, SSMCache(cg["conv_buf"], cg["state"]),
+                self.scfg, sh, self.cdtype)
+            return x + out, {"conv_buf": new_c.conv_buf, "state": new_c.state}
+
+        def group_fn(x, inp):
+            pg, cg = inp
+
+            def inner(x, inp2):
+                pl, cl = inp2
+                x, nc = mamba_step(x, pl, cl)
+                return x, nc
+
+            x, new_ssm = pscan(
+                inner, x, ({"ln": pg["ln"], "ssm": pg["ssm"]}, cg["ssm"]))
+            # shared attention application with this group's cache
+            s = params["shared"]
+            h = rms_norm(x, s["ln1"], cfg.norm_eps)
+            seq_shard = cg["attn"]["k"].shape[1] >= _SEQ_SHARD_MIN
+            a, nk, nv = decode_attention(s["attn"], h, cg["attn"]["k"],
+                                         cg["attn"]["v"], pos, self.acfg, sh,
+                                         self.cdtype, seq_shard=seq_shard)
+            x = x + a
+            h = rms_norm(x, s["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(s["mlp"], h, sh, self.cdtype)
+            return x, {"ssm": new_ssm, "attn": {"k": nk, "v": nv}}
+
+        g_cache = {"ssm": {"conv_buf": cache["grouped_ssm"]["conv_buf"],
+                           "state": cache["grouped_ssm"]["state"]},
+                   "attn": cache["shared_attn"]}
+        x, new_g = pscan(group_fn, x, (params["grouped"], g_cache))
+        new_cache = {
+            "pos": pos + 1,
+            "grouped_ssm": new_g["ssm"],
+            "shared_attn": new_g["attn"],
+        }
+        if self.tail:
+            def tail_fn(x, inp):
+                pl, cl = inp
+                return mamba_step(x, pl, cl)
+            x, new_t = pscan(tail_fn, x,
+                                    (params["tail"], cache["tail_ssm"]))
+            new_cache["tail_ssm"] = new_t
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            self._head(params).astype(self.cdtype))
+        return logits.astype(jnp.float32), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Pure SSM LM (mamba2): one scan over mamba blocks, O(1) decode state.
+# ---------------------------------------------------------------------------
+
+
+class SSMLM:
+    def __init__(self, cfg: ModelConfig, sh: Optional[ShardPlan] = None):
+        self.cfg = cfg
+        self.sh = sh or ShardPlan()
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.cdtype = jnp.dtype(cfg.compute_dtype)
+        self.scfg = SSMConfig(
+            d_model=cfg.d_model, d_inner=cfg.d_inner, n_heads=cfg.n_ssm_heads,
+            head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+            conv_dim=cfg.ssm_conv_dim, chunk=cfg.ssm_chunk)
+
+    def init(self, key) -> Pytree:
+        cfg = self.cfg
+        L, D = cfg.n_layers, cfg.d_model
+        ks = jax.random.split(key, 3)
+        params = {
+            "embed": embed_init(ks[0], cfg.padded_vocab, D, self.dtype),
+            "layers": {"ln": jnp.ones((L, D), self.dtype),
+                       "ssm": ssm_init(ks[1], L, self.scfg, self.dtype)},
+            "final_norm": jnp.ones((D,), self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[2], (D, cfg.padded_vocab), self.dtype)
+        return params
+
+    def param_specs(self) -> Pytree:
+        cfg, sh = self.cfg, self.sh
+        tp, fs = sh.tp, sh.fsdp
+        ssm = {
+            "w_z": P(None, fs, tp), "w_x": P(None, fs, tp),
+            "w_B": P(None, fs, None), "w_C": P(None, fs, None),
+            "w_dt": P(None, fs, tp),
+            "conv_x": P(None, None, tp), "conv_B": P(None, None, None),
+            "conv_C": P(None, None, None),
+            "A_log": P(None, tp), "D": P(None, tp), "dt_bias": P(None, tp),
+            "out_proj": P(None, tp, fs), "gate_norm": P(None, tp),
+        }
+        specs = {
+            "embed": P(tp, fs),
+            "layers": {"ln": P(None, None), "ssm": ssm},
+            "final_norm": P(None),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P(fs, tp)
+        return specs
+
+    def forward(self, params, tokens) -> jnp.ndarray:
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens].astype(self.cdtype)
+        x = shard(x, sh.dp, None, sh.tp)
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln"], cfg.norm_eps)
+            x = x + mamba_block(pl["ssm"], h, self.scfg, sh, self.cdtype)
+            return shard(x, sh.dp, None, sh.tp), None
+
+        fn = body
+        if cfg.remat:
+            fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = pscan(fn, x, params["layers"])
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def _head(self, params):
+        return params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+
+    def loss_fn(self, params, batch) -> jnp.ndarray:
+        hidden = self.forward(params, batch["tokens"])
+        return chunked_ce_loss(hidden, self._head(params).astype(self.cdtype),
+                               batch["labels"], batch.get("loss_mask"),
+                               self.sh, remat=self.cfg.remat)
+
+    def make_cache(self, batch: int, seq_len: int) -> Pytree:
+        cfg = self.cfg
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "ssm": {"conv_buf": jnp.zeros(
+                        (cfg.n_layers, batch, cfg.ssm_conv_dim - 1, conv_ch),
+                        self.cdtype),
+                    "state": jnp.zeros(
+                        (cfg.n_layers, batch, cfg.n_ssm_heads,
+                         cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)},
+        }
+
+    def cache_specs(self, seq_len: int, batch: int = 0) -> Pytree:
+        sh = self.sh
+        dp = None if 0 < batch < 16 else sh.dp
+        return {"pos": P(),
+                "ssm": {"conv_buf": P(None, dp, None, None),
+                        "state": P(None, dp, sh.tp, None, None)}}
+
+    def grow_cache(self, cache: Pytree, target_len: int) -> Pytree:
+        """Pure-SSM cache is O(1); nothing grows."""
+        return cache
+
+    def prefill(self, params, tokens) -> Tuple[jnp.ndarray, Pytree]:
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens].astype(self.cdtype)
+        x = shard(x, sh.dp, None, sh.tp)
+        B, S, _ = x.shape
+        from repro.models.ssm import _causal_conv, ssd_chunked
+        import jax.nn as jnn
+        cd = self.cdtype
+
+        def body(x, pl):
+            h = rms_norm(x, pl["ln"], cfg.norm_eps)
+            hc = h.astype(cd)
+            z = jnp.einsum("bsd,dk->bsk", hc, pl["ssm"]["w_z"].astype(cd))
+            xs = jnp.einsum("bsd,dk->bsk", hc, pl["ssm"]["w_x"].astype(cd))
+            Bm = jnp.einsum("bsd,dn->bsn", hc, pl["ssm"]["w_B"].astype(cd))
+            Cm = jnp.einsum("bsd,dn->bsn", hc, pl["ssm"]["w_C"].astype(cd))
+            dt = jnp.einsum("bsd,dh->bsh", hc, pl["ssm"]["w_dt"].astype(cd))
+            conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+            tail = conv_in[:, S - (cfg.ssm_conv_dim - 1):, :]
+            xs = jnn.silu(_causal_conv(xs, pl["ssm"]["conv_x"].astype(cd)))
+            Bm = jnn.silu(_causal_conv(Bm, pl["ssm"]["conv_B"].astype(cd)))
+            Cm = jnn.silu(_causal_conv(Cm, pl["ssm"]["conv_C"].astype(cd)))
+            dt = jnn.softplus(dt.astype(jnp.float32)
+                              + pl["ssm"]["dt_bias"][None, None, :])
+            A = -jnp.exp(pl["ssm"]["A_log"])
+            xs4 = xs.reshape(B, S, self.scfg.n_heads, self.scfg.head_dim)
+            y, fin = ssd_chunked(xs4, dt, A, Bm, Cm, pl["ssm"]["D"],
+                                 self.scfg.chunk, sh=sh)
+            y = y.reshape(B, S, cfg.d_inner)
+            y = rms_norm(y * jnn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                         pl["ssm"]["gate_norm"])
+            out = jnp.einsum("bsk,kd->bsd", y.astype(cd),
+                             pl["ssm"]["out_proj"].astype(cd))
+            x = x + shard(out, sh.dp, None, None)
+            return shard(x, sh.dp, None, sh.tp), (tail.astype(self.cdtype), fin)
+
+        x, (convs, states) = pscan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:],
+                            self._head(params).astype(cd))
+        cache = {"pos": jnp.int32(S),
+                 "ssm": {"conv_buf": convs, "state": states}}
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray, Pytree]:
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens].astype(self.cdtype)
+
+        def body(x, inp):
+            pl, cl = inp
+            h = rms_norm(x, pl["ln"], cfg.norm_eps)
+            out, nc = mamba_decode_step(
+                pl["ssm"], h, SSMCache(cl["conv_buf"], cl["state"]),
+                self.scfg, sh, self.cdtype)
+            return x + out, {"conv_buf": nc.conv_buf, "state": nc.state}
+
+        x, new_ssm = pscan(body, x, (params["layers"], cache["ssm"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            self._head(params).astype(self.cdtype))
+        return logits.astype(jnp.float32), {"pos": cache["pos"] + 1,
+                                            "ssm": new_ssm}
+
+
+# ---------------------------------------------------------------------------
+
+
+def _stack2(tree: Pytree, a: int, b: int) -> Pytree:
+    """Reshape leading (a*b, ...) to (a, b, ...)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((a, b) + x.shape[1:]), tree)
+
+
+def _squeeze(tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x[0], tree)

@@ -1,0 +1,236 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure-jnp reference path.
+
+The chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): split the sequence
+into chunks of length Q; within a chunk the output is an attention-like
+masked matmul (maps to the MXU), across chunks a small recurrence over the
+per-chunk states (hd x ns per head) propagates history.  The inter-chunk
+scan is O(S/Q) sequential steps on (nh, hd, ns) states — the TPU-native
+replacement for the CUDA selective-scan kernel (see DESIGN.md §2).
+
+``kernels/ssd_scan`` implements the intra-chunk block as a Pallas kernel
+(VMEM-tiled); this module is the lowering/compile reference and the CPU
+path, and is what the dry-run exercises.
+
+Decode is O(1): state update + readout per token.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ShardPlan, dense_init, rms_norm, shard, pscan
+
+Pytree = Any
+
+__all__ = ["SSMConfig", "ssm_init", "ssd_chunked", "mamba_block", "mamba_decode_step"]
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int          # d_inner // head_dim
+    head_dim: int
+    state: int            # N — SSM state size
+    conv_dim: int         # depthwise causal conv width
+    chunk: int            # SSD chunk length
+
+
+def ssm_init(key, L: int, cfg: SSMConfig, dtype) -> Pytree:
+    """Projections for [z, x, B, C, dt] kept as SEPARATE weights (instead of
+    mamba's packed in_proj) so each output dim gets a clean TP sharding with
+    no packed-slice resharding; depthwise conv split per stream likewise."""
+    di, ns, nh = cfg.d_inner, cfg.state, cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": dense_init(ks[0], (L, cfg.d_model, di), dtype),
+        "w_x": dense_init(ks[1], (L, cfg.d_model, di), dtype),
+        "w_B": dense_init(ks[2], (L, cfg.d_model, ns), dtype),
+        "w_C": dense_init(ks[3], (L, cfg.d_model, ns), dtype),
+        "w_dt": dense_init(ks[4], (L, cfg.d_model, nh), dtype),
+        "conv_x": dense_init(ks[5], (L, cfg.conv_dim, di), dtype, scale=0.5),
+        "conv_B": dense_init(ks[6], (L, cfg.conv_dim, ns), dtype, scale=0.5),
+        "conv_C": dense_init(ks[7], (L, cfg.conv_dim, ns), dtype, scale=0.5),
+        "A_log": jnp.zeros((L, nh), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((L, nh), jnp.float32),
+        "dt_bias": jnp.zeros((L, nh), jnp.float32),
+        "out_proj": dense_init(ks[8], (L, di, cfg.d_model), dtype),
+        "gate_norm": jnp.ones((L, di), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4): unrolled taps fuse into one kernel
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, D: jnp.ndarray,
+                chunk: int,
+                init_state: jnp.ndarray | None = None,
+                sh: ShardPlan | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan, structured as ONE scan over chunks.
+
+    x:  (B, S, nh, hd)    dt: (B, S, nh) (softplus'd, >0)
+    A:  (nh,) (negative)  Bm/Cm: (B, S, ns)   D: (nh,)
+    Returns (y (B,S,nh,hd), final_state (B,nh,hd,ns)).
+
+    The inter-chunk state recurrence is inherently sequential, so the whole
+    algorithm is expressed as a single ``lax.scan`` over chunks carrying the
+    (B, nh, hd, ns) state; the intra-chunk (Q, Q)-masked block then only
+    ever materializes ONE chunk's (B, Q, Q, nh) tensor, which shards over
+    (dp × tp) to ~tens of MB per device instead of the ~85 TB a fully
+    parallel formulation would need for the assigned mamba2 train cell.
+    """
+    Bsz, S, nh, hd = x.shape
+    ns = Bm.shape[-1]
+    Q = chunk
+    f32 = jnp.float32
+    sh = sh or ShardPlan()
+
+    # Ragged tail: pad S up to a chunk multiple with dt = 0 — zero dt means
+    # zero state contribution and exp(0) = 1 decay, so the final state is
+    # exact; padded y rows are sliced off.
+    S_orig = S
+    if S % Q:
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    # (nc, B, Q, ...) scan layouts.
+    xq = jnp.moveaxis(x.reshape(Bsz, nc, Q, nh, hd), 1, 0).astype(f32)
+    dtq = jnp.moveaxis(dt.reshape(Bsz, nc, Q, nh), 1, 0).astype(f32)
+    Bq = jnp.moveaxis(Bm.reshape(Bsz, nc, Q, ns), 1, 0).astype(f32)
+    Cq = jnp.moveaxis(Cm.reshape(Bsz, nc, Q, ns), 1, 0).astype(f32)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        xc, dtc, Bc, Cc = inp                   # (B,Q,nh,hd) (B,Q,nh) (B,Q,ns)
+        dA = dtc * A[None, None, :]             # (B,Q,nh), <= 0
+        cs = jnp.cumsum(dA, axis=1)
+        seg_end = cs[:, -1, :]                  # (B,nh)
+
+        # intra-chunk: L[i,j,h] = exp(cs_i - cs_j) for j <= i
+        diff = cs[:, :, None, :] - cs[:, None, :, :]       # (B,Q,Q,nh)
+        Lmat = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        G = jnp.einsum("bin,bjn->bij", Cc, Bc)             # (B,Q,Q)
+        M = G[..., None] * Lmat * dtc[:, None, :, :]       # (B,Q,Q,nh)
+        M = shard(M, sh.dp, None, None, sh.tp)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", M, xc)
+
+        # inter-chunk: contribution of the carried state, then update it.
+        y_inter = jnp.einsum("bin,bhdn,bih->bihd",
+                             Cc, state, jnp.exp(cs))
+        decay_to_end = jnp.exp(seg_end[:, None, :] - cs)   # (B,Q,nh)
+        st_c = jnp.einsum("bjn,bjh,bjhd->bhdn", Bc, dtc * decay_to_end, xc)
+        new_state = state * jnp.exp(seg_end)[:, :, None, None] + st_c
+        new_state = shard(new_state, sh.dp, sh.tp, None, None)
+
+        y = y_intra + y_inter + xc * D[None, None, :, None]
+        return new_state, y
+
+    st0 = (jnp.zeros((Bsz, nh, hd, ns), f32)
+           if init_state is None else init_state.astype(f32))
+    final, ys = pscan(chunk_step, st0, (xq, dtq, Bq, Cq))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, nh, hd)[:, :S_orig]
+    return y.astype(x.dtype), final
+
+
+def mamba_block(p: Pytree, x: jnp.ndarray, cfg: SSMConfig, sh: ShardPlan,
+                compute_dtype) -> jnp.ndarray:
+    """One Mamba2 block (pre-norm residual handled by caller).
+
+    x: (B, S, D) -> (B, S, D). p leaves are per-layer (no L dim).
+    """
+    B, S, D = x.shape
+    di, nh, hd, ns = cfg.d_inner, cfg.n_heads, cfg.head_dim, cfg.state
+    xc = x.astype(compute_dtype)
+    cd = compute_dtype
+    z = jnp.einsum("bsd,dk->bsk", xc, p["w_z"].astype(cd))
+    xs = jnp.einsum("bsd,dk->bsk", xc, p["w_x"].astype(cd))
+    Bm = jnp.einsum("bsd,dn->bsn", xc, p["w_B"].astype(cd))
+    Cm = jnp.einsum("bsd,dn->bsn", xc, p["w_C"].astype(cd))
+    dt = jnp.einsum("bsd,dh->bsh", xc, p["w_dt"].astype(cd))
+    xs = shard(xs, sh.dp, None, sh.tp)
+
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"].astype(cd)))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"].astype(cd)))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"].astype(cd)))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xs = shard(xs.reshape(B, S, nh, hd), sh.dp, None, sh.tp, None)
+
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], cfg.chunk, sh=sh)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"])
+    out = jnp.einsum("bsk,kd->bsd", y.astype(compute_dtype),
+                     p["out_proj"].astype(compute_dtype))
+    return shard(out, sh.dp, None, None)
+
+
+# ---------------------------------------------------------------------------
+# O(1) decode
+# ---------------------------------------------------------------------------
+
+
+class SSMCache(NamedTuple):
+    """conv_buf: (B, K-1, conv_ch) last inputs; state: (B, nh, hd, ns)."""
+
+    conv_buf: jnp.ndarray
+    state: jnp.ndarray
+
+
+def mamba_decode_step(p: Pytree, x: jnp.ndarray, cache: SSMCache,
+                      cfg: SSMConfig, sh: ShardPlan, compute_dtype
+                      ) -> Tuple[jnp.ndarray, SSMCache]:
+    """x: (B, 1, D) -> (B, 1, D); O(1) state update (the reason ssm/hybrid
+    archs run the long_500k cell)."""
+    B, _, D = x.shape
+    di, nh, hd, ns = cfg.d_inner, cfg.n_heads, cfg.head_dim, cfg.state
+    K = cfg.conv_dim
+    cd = compute_dtype
+    xc = x[:, 0].astype(cd)                               # (B, D)
+    z = jnp.einsum("bd,dk->bk", xc, p["w_z"].astype(cd))
+    xs = jnp.einsum("bd,dk->bk", xc, p["w_x"].astype(cd))
+    Bm = jnp.einsum("bd,dn->bn", xc, p["w_B"].astype(cd))
+    Cm = jnp.einsum("bd,dn->bn", xc, p["w_C"].astype(cd))
+    dt = jnp.einsum("bd,dh->bh", xc, p["w_dt"].astype(cd))
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)      # (B, conv_ch)
+    window = jnp.concatenate([cache.conv_buf, conv_in[:, None, :]], axis=1)
+    w = jnp.concatenate(                                  # (K, conv_ch)
+        [p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1).astype(cd)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w))
+    xs, Bm, Cm = (conv_out[..., :di], conv_out[..., di:di + ns],
+                  conv_out[..., di + ns:])
+    new_conv_buf = window[:, 1:, :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])  # (B,nh)
+    A = -jnp.exp(p["A_log"])                              # (nh,)
+    dA = jnp.exp(dt * A[None, :])                         # (B,nh)
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bh,bhd->bhdn", Bm.astype(jnp.float32),
+                     dt, xh)
+    state = cache.state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhdn->bhd", Cm.astype(jnp.float32), state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"])
+    out = jnp.einsum("bk,kd->bd", y.astype(compute_dtype),
+                     p["out_proj"].astype(compute_dtype))
+    return out[:, None, :], SSMCache(conv_buf=new_conv_buf, state=state)

@@ -1,0 +1,430 @@
+"""Decoder-only LM covering the dense / moe / vlm families.
+
+Structure: token (+ optional patch-prefix) embedding -> scan over layer
+GROUPS -> final norm -> (tied) LM head.  A "group" is the layer repeat
+unit: 1 for uniform archs, 2 for gemma2 (local, global) alternation.
+Scanning groups keeps per-layer-type KV caches shape-uniform (local
+layers get ring caches of length ``window``; global layers full-length).
+
+Loss is computed with a sequence-chunked LM head (scan over S blocks) so
+(B, S, vocab) logits are never materialized for the 256k-vocab archs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.attention import AttnConfig, attn_init, attention, decode_attention
+from repro.models.layers import (
+    pscan,
+    ShardPlan,
+    chunked_ce_loss,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    shard,
+    softcap,
+)
+
+Pytree = Any
+
+__all__ = ["DecoderLM"]
+
+_LOSS_CHUNK = 512           # sequence chunk for the LM-head loss
+_SEQ_SHARD_MIN = 8192       # decode caches at/above this length shard on seq
+
+
+def _attn_cfg(cfg: ModelConfig, *, local: bool) -> AttnConfig:
+    return AttnConfig(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta,
+        rope_fraction=cfg.rope_fraction,
+        window=cfg.window if local else None,
+        softcap=cfg.attn_logit_softcap,
+        qk_norm=cfg.qk_norm,
+        causal=True,
+    )
+
+
+class DecoderLM:
+    """Functional model bundle for one config (dense / moe / vlm)."""
+
+    def __init__(self, cfg: ModelConfig, sh: Optional[ShardPlan] = None):
+        self.cfg = cfg
+        self.sh = sh or ShardPlan()
+        # Layer grouping: gemma2 alternates (local, global).
+        if cfg.local_global_every:
+            self.group = 2
+            self.layer_kinds = ("local", "global")
+        else:
+            self.group = 1
+            self.layer_kinds = ("local" if cfg.window else "global",)
+        assert cfg.n_layers % self.group == 0
+        self.n_groups = cfg.n_layers // self.group
+        self.dtype = jnp.dtype(cfg.param_dtype)
+        self.cdtype = jnp.dtype(cfg.compute_dtype)
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> Pytree:
+        cfg = self.cfg
+        NG, D, Vp = self.n_groups, cfg.d_model, cfg.padded_vocab
+        keys = jax.random.split(key, 8)
+        blocks = {}
+        for gi, kind in enumerate(self.layer_kinds):
+            acfg = _attn_cfg(cfg, local=(kind == "local"))
+            sub = {
+                "ln1": jnp.ones((NG, D), self.dtype),
+                "ln2": jnp.ones((NG, D), self.dtype),
+                "attn": attn_init(jax.random.fold_in(keys[0], gi), NG, D,
+                                  acfg, self.dtype),
+            }
+            if cfg.sandwich_norm:
+                sub["ln1_post"] = jnp.ones((NG, D), self.dtype)
+                sub["ln2_post"] = jnp.ones((NG, D), self.dtype)
+            if cfg.n_experts:
+                sub["moe"] = moe_mod.moe_init(
+                    jax.random.fold_in(keys[1], gi), NG, D, cfg.n_experts,
+                    cfg.d_ff_expert, self.dtype)
+            else:
+                sub["mlp"] = mlp_init(jax.random.fold_in(keys[2], gi), NG, D,
+                                      cfg.d_ff, self.dtype)
+            blocks[f"g{gi}"] = sub
+        params = {
+            "embed": embed_init(keys[3], Vp, D, self.dtype),
+            "blocks": blocks,
+            "final_norm": jnp.ones((D,), self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[4], (D, Vp), self.dtype)
+        if cfg.family == "vlm":
+            params["patch_proj"] = dense_init(keys[5], (cfg.frontend_dim, D),
+                                              self.dtype)
+        return params
+
+    # ------------------------------------------------------------- specs
+
+    def param_specs(self) -> Pytree:
+        """PartitionSpec tree mirroring init() (for pjit in_shardings)."""
+        cfg, sh = self.cfg, self.sh
+        tp, fs = sh.tp, sh.fsdp
+        blocks = {}
+        for gi, kind in enumerate(self.layer_kinds):
+            attn = {
+                "wq": P(None, fs, tp),
+                "wk": P(None, fs, tp),
+                "wv": P(None, fs, tp),
+                "wo": P(None, tp, fs),
+            }
+            if cfg.qk_norm:
+                attn["q_norm"] = P(None, None)
+                attn["k_norm"] = P(None, None)
+            sub = {"ln1": P(None, None), "ln2": P(None, None), "attn": attn}
+            if cfg.sandwich_norm:
+                sub["ln1_post"] = P(None, None)
+                sub["ln2_post"] = P(None, None)
+            if cfg.n_experts:
+                ep = cfg.n_experts % 16 == 0  # EP when experts divide the TP axis
+                sub["moe"] = {
+                    "router": P(None, fs, None),
+                    "w_gate": P(None, tp, fs, None) if ep else P(None, None, fs, tp),
+                    "w_up": P(None, tp, fs, None) if ep else P(None, None, fs, tp),
+                    "w_down": P(None, tp, None, fs) if ep else P(None, None, tp, fs),
+                }
+            else:
+                sub["mlp"] = {
+                    "w_gate": P(None, fs, tp),
+                    "w_up": P(None, fs, tp),
+                    "w_down": P(None, tp, fs),
+                }
+            blocks[f"g{gi}"] = sub
+        specs = {
+            "embed": P(tp, fs),
+            "blocks": blocks,
+            "final_norm": P(None),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P(fs, tp)
+        if cfg.family == "vlm":
+            specs["patch_proj"] = P(None, fs)
+        return specs
+
+    # ----------------------------------------------------------- embedding
+
+    def _embed(self, params, tokens, patches=None):
+        cfg, sh = self.cfg, self.sh
+        x = params["embed"][tokens]                      # (B, S_text, D)
+        if cfg.scale_embed:
+            x = x * jnp.sqrt(cfg.d_model).astype(x.dtype)
+        if patches is not None:
+            pp = jnp.einsum("bpf,fd->bpd", patches.astype(self.cdtype),
+                            params["patch_proj"].astype(self.cdtype))
+            x = jnp.concatenate([pp.astype(x.dtype), x], axis=1)
+        return shard(x.astype(self.cdtype), sh.dp, None, sh.tp)
+
+    # ------------------------------------------------------------- forward
+
+    def _group_body(self, params_g, x, positions, gi_kind):
+        """One layer of kind gi_kind; params_g has NO leading group dim."""
+        cfg, sh = self.cfg, self.sh
+        acfg = _attn_cfg(cfg, local=(gi_kind == "local"))
+        h = rms_norm(x, params_g["ln1"], cfg.norm_eps)
+        a = attention(params_g["attn"], h, acfg, sh, self.cdtype,
+                      positions=positions)
+        if cfg.sandwich_norm:
+            a = rms_norm(a, params_g["ln1_post"], cfg.norm_eps)
+        x = x + a
+        h = rms_norm(x, params_g["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            m = moe_mod.moe_apply(params_g["moe"], h, top_k=cfg.top_k,
+                                  n_experts=cfg.n_experts,
+                                  capacity_factor=1.25, sh=sh,
+                                  compute_dtype=self.cdtype,
+                                  bulk_steal=cfg.moe_bulk_steal,
+                                  impl=cfg.moe_impl)
+        else:
+            m = mlp_apply(params_g["mlp"], h, sh, self.cdtype)
+        if cfg.sandwich_norm:
+            m = rms_norm(m, params_g["ln2_post"], cfg.norm_eps)
+        x = x + m
+        return shard(x, sh.dp, None, sh.tp)
+
+    def forward(self, params, tokens, patches=None,
+                positions=None) -> jnp.ndarray:
+        """(B, S) tokens -> (B, S_total, D) hidden (after final norm)."""
+        cfg, sh = self.cfg, self.sh
+        x = self._embed(params, tokens, patches)
+        S = x.shape[1]
+        if positions is None:
+            positions = jnp.arange(S, dtype=jnp.int32)
+
+        def group_fn(x, params_group):
+            for gi, kind in enumerate(self.layer_kinds):
+                x = self._group_body(params_group[f"g{gi}"], x, positions, kind)
+            return x, None
+
+        body = group_fn
+        if cfg.remat:
+            body = jax.checkpoint(
+                group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = pscan(body, x, params["blocks"])
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    # --------------------------------------------------------------- loss
+
+    def _head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def loss_fn(self, params, batch) -> jnp.ndarray:
+        """batch: tokens (B,S), labels (B,S), optional loss_mask, patches.
+
+        The LM head + CE runs in sequence chunks (layers.chunked_ce_loss)
+        so (B, S, V) is never materialized (V up to 256k).
+        """
+        cfg, sh = self.cfg, self.sh
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        patches = batch.get("patches")
+        hidden = self.forward(params, tokens, patches)
+        if patches is not None:
+            hidden = hidden[:, patches.shape[1]:]  # loss over text positions
+        head = self._head(params).astype(self.cdtype)
+        return chunked_ce_loss(hidden, head, labels, mask, sh,
+                               final_softcap=cfg.final_logit_softcap,
+                               chunk=_LOSS_CHUNK, remat=cfg.remat)
+
+    # ------------------------------------------------------------- serving
+
+    def cache_len(self, kind: str, seq_len: int) -> int:
+        if kind == "local" and self.cfg.window:
+            return min(self.cfg.window, seq_len)
+        return seq_len
+
+    def make_cache(self, batch: int, seq_len: int) -> Pytree:
+        """Zeroed KV caches, one stack per layer kind, + position scalar."""
+        cfg = self.cfg
+        NG = self.n_groups
+        cache = {"pos": jnp.zeros((), jnp.int32)}
+        for gi, kind in enumerate(self.layer_kinds):
+            C = self.cache_len(kind, seq_len)
+            cache[f"g{gi}"] = {
+                "k": jnp.zeros((NG, batch, C, cfg.n_kv_heads, cfg.hd), self.cdtype),
+                "v": jnp.zeros((NG, batch, C, cfg.n_kv_heads, cfg.hd), self.cdtype),
+            }
+        return cache
+
+    def cache_specs(self, seq_len: int, batch: int = 0) -> Pytree:
+        """PartitionSpecs for the cache.
+
+        batch >= 16: batch shards over dp, long seqs additionally over tp.
+        batch == 1 (long_500k): batch is unshardable — the sequence dim
+        shards over (dp + tp) combined instead (full SP).
+        """
+        sh = self.sh
+        tiny_batch = 0 < batch < 16
+        specs = {"pos": P()}
+        for gi, kind in enumerate(self.layer_kinds):
+            C = self.cache_len(kind, seq_len)
+            if tiny_batch:
+                kv = P(None, None, tuple(sh.dp) + (sh.tp,), None, None)
+            elif C >= _SEQ_SHARD_MIN:
+                kv = P(None, sh.dp, sh.tp, None, None)
+            else:
+                kv = P(None, sh.dp, None, None, None)
+            specs[f"g{gi}"] = {"k": kv, "v": kv}
+        return specs
+
+    def grow_cache(self, cache: Pytree, target_len: int) -> Pytree:
+        """Grow a prefill cache for decoding up to ``target_len`` total
+        positions.  Global (linear) caches zero-pad on the seq axis; local
+        RING caches re-layout from C=min(window, S) to C=min(window,
+        target) preserving the ``slot = pos % C`` invariant."""
+        pos = cache["pos"]
+        new = {"pos": pos}
+        for gi, kind in enumerate(self.layer_kinds):
+            cg = cache[f"g{gi}"]
+            C = cg["k"].shape[2]
+            C_new = self.cache_len(kind, target_len)
+            if C_new <= C:
+                new[f"g{gi}"] = cg
+                continue
+            if kind == "local" and self.cfg.window:
+                # ring re-layout: slots hold positions [pos-C, pos)
+                p = pos - C + jnp.arange(C, dtype=jnp.int32)
+                src = p % C
+                dst = p % C_new
+
+                def relay(x):
+                    out = jnp.zeros(x.shape[:2] + (C_new,) + x.shape[3:],
+                                    x.dtype)
+                    return out.at[:, :, dst].set(x[:, :, src])
+
+                new[f"g{gi}"] = {"k": relay(cg["k"]), "v": relay(cg["v"])}
+            else:
+                padw = [(0, 0)] * cg["k"].ndim
+                padw[2] = (0, C_new - C)
+                new[f"g{gi}"] = {"k": jnp.pad(cg["k"], padw),
+                                 "v": jnp.pad(cg["v"], padw)}
+        return new
+
+    def prefill(self, params, tokens, patches=None) -> Tuple[jnp.ndarray, Pytree]:
+        """Forward over the prompt; returns (last-position logits, cache)."""
+        cfg, sh = self.cfg, self.sh
+        x = self._embed(params, tokens, patches)
+        B, S, D = x.shape
+        positions = jnp.arange(S, dtype=jnp.int32)
+        caches = {"pos": jnp.int32(S)}
+
+        def group_fn(x, params_group):
+            kvs = {}
+            for gi, kind in enumerate(self.layer_kinds):
+                pg = params_group[f"g{gi}"]
+                acfg = _attn_cfg(cfg, local=(kind == "local"))
+                h = rms_norm(x, pg["ln1"], cfg.norm_eps)
+                a, (k, v) = attention(pg["attn"], h, acfg, sh, self.cdtype,
+                                      positions=positions, return_kv=True)
+                C = self.cache_len(kind, S)
+                if C < S:  # ring layout: slot = pos % C over the last C steps
+                    ridx = jnp.arange(S - C, S, dtype=jnp.int32) % C
+                    k = jnp.zeros((B, C) + k.shape[2:], k.dtype).at[:, ridx].set(k[:, S - C:])
+                    v = jnp.zeros((B, C) + v.shape[2:], v.dtype).at[:, ridx].set(v[:, S - C:])
+                kvs[f"g{gi}"] = {"k": k.astype(self.cdtype), "v": v.astype(self.cdtype)}
+                if cfg.sandwich_norm:
+                    a = rms_norm(a, pg["ln1_post"], cfg.norm_eps)
+                x = x + a
+                h = rms_norm(x, pg["ln2"], cfg.norm_eps)
+                if cfg.n_experts:
+                    m = moe_mod.moe_apply(pg["moe"], h, top_k=cfg.top_k,
+                                          n_experts=cfg.n_experts,
+                                          capacity_factor=1.25, sh=sh,
+                                          compute_dtype=self.cdtype,
+                                          bulk_steal=cfg.moe_bulk_steal,
+                                          impl=cfg.moe_impl)
+                else:
+                    m = mlp_apply(pg["mlp"], h, sh, self.cdtype)
+                if cfg.sandwich_norm:
+                    m = rms_norm(m, pg["ln2_post"], cfg.norm_eps)
+                x = x + m
+                x = shard(x, sh.dp, None, sh.tp)
+            return x, kvs
+
+        x, kvs = pscan(group_fn, x, params["blocks"])
+        caches.update(kvs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        last = x[:, -1:]
+        logits = jnp.einsum("bsd,dv->bsv", last,
+                            self._head(params).astype(self.cdtype))
+        logits = softcap(logits, cfg.final_logit_softcap)
+        return logits.astype(jnp.float32), caches
+
+    def decode_step(self, params, cache, tokens) -> Tuple[jnp.ndarray, Pytree]:
+        """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), cache)."""
+        cfg, sh = self.cfg, self.sh
+        x = self._embed(params, tokens)
+        pos = cache["pos"]
+        new_cache = {"pos": pos + 1}
+
+        def group_fn(carry, inp):
+            x = carry
+            params_group, cache_group = inp
+            new_kvs = {}
+            for gi, kind in enumerate(self.layer_kinds):
+                pg = params_group[f"g{gi}"]
+                cg = cache_group[f"g{gi}"]
+                acfg = _attn_cfg(cfg, local=(kind == "local"))
+                seq_shard = cg["k"].shape[1] >= _SEQ_SHARD_MIN
+                h = rms_norm(x, pg["ln1"], cfg.norm_eps)
+                out3 = None
+                if seq_shard and cfg.decode_impl == "flash_shardmap":
+                    out3 = attn_mod.decode_attention_shardmap(
+                        pg["attn"], h, cg["k"], cg["v"], pos, acfg, sh,
+                        self.cdtype)
+                if out3 is not None:
+                    a, nk, nv = out3
+                else:
+                    a, nk, nv = decode_attention(pg["attn"], h, cg["k"],
+                                                 cg["v"], pos, acfg, sh,
+                                                 self.cdtype,
+                                                 seq_shard=seq_shard)
+                new_kvs[f"g{gi}"] = {"k": nk, "v": nv}
+                if cfg.sandwich_norm:
+                    a = rms_norm(a, pg["ln1_post"], cfg.norm_eps)
+                x = x + a
+                h = rms_norm(x, pg["ln2"], cfg.norm_eps)
+                if cfg.n_experts:
+                    m = moe_mod.moe_apply(pg["moe"], h, top_k=cfg.top_k,
+                                          n_experts=cfg.n_experts,
+                                          capacity_factor=2.0, sh=sh,
+                                          compute_dtype=self.cdtype,
+                                          bulk_steal=cfg.moe_bulk_steal,
+                                          impl=cfg.moe_impl)
+                else:
+                    m = mlp_apply(pg["mlp"], h, sh, self.cdtype)
+                if cfg.sandwich_norm:
+                    m = rms_norm(m, pg["ln2_post"], cfg.norm_eps)
+                x = x + m
+            return x, new_kvs
+
+        layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_kvs = pscan(group_fn, x, (params["blocks"], layer_caches))
+        new_cache.update(new_kvs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            self._head(params).astype(self.cdtype))
+        logits = softcap(logits, cfg.final_logit_softcap)
+        return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,117 @@
+"""Model zoo: config -> model bundle + input_specs per shape cell.
+
+``build_model(cfg, parallel)`` dispatches on family; every model bundle
+exposes: init / loss_fn / prefill / decode_step / param_specs /
+(make_cache, cache_specs).
+
+``input_specs(cfg, shape, parallel)`` returns ShapeDtypeStructs (weak-type
+correct, shardable, never allocated) for the dry-run, plus the matching
+PartitionSpec tree for in_shardings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM, SSMLM
+from repro.models.layers import ShardPlan
+from repro.models.transformer import DecoderLM
+
+Pytree = Any
+
+__all__ = ["build_model", "input_specs", "batch_specs"]
+
+
+def build_model(cfg: ModelConfig, parallel: ParallelConfig | None = None):
+    sh = ShardPlan.from_parallel(parallel) if parallel else ShardPlan()
+    if cfg.family in ("decoder", "moe", "vlm"):
+        return DecoderLM(cfg, sh)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, sh)
+    if cfg.family == "ssm":
+        return SSMLM(cfg, sh)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, sh)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# input specs per shape cell (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                parallel: ParallelConfig | None = None
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (batch_sds, batch_pspecs) for the given (arch, shape) cell.
+
+    train:   tokens/labels (B, S) [+ patches / frames per family]
+    prefill: tokens (B, S) [+ patches / frames]
+    decode:  tokens (B, 1); the KV/SSM cache specs come from the model
+             bundle's make_cache/cache_specs (handled in launch.dryrun).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dp = parallel.batch_axes if parallel else ("data",)
+    i32, f32 = jnp.int32, jnp.float32
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            S_text = S - cfg.n_patches
+            sds = {
+                "tokens": _sds((B, S_text), i32),
+                "labels": _sds((B, S_text), i32),
+                "patches": _sds((B, cfg.n_patches, cfg.frontend_dim), f32),
+            }
+            ps = {"tokens": P(dp, None), "labels": P(dp, None),
+                  "patches": P(dp, None, None)}
+        elif cfg.family == "encdec":
+            sds = {
+                "frames": _sds((B, S, cfg.frontend_dim), f32),
+                "tokens": _sds((B, S), i32),
+                "labels": _sds((B, S), i32),
+            }
+            ps = {"frames": P(dp, None, None), "tokens": P(dp, None),
+                  "labels": P(dp, None)}
+        else:
+            sds = {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+            ps = {"tokens": P(dp, None), "labels": P(dp, None)}
+        return sds, ps
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            S_text = S - cfg.n_patches
+            sds = {
+                "tokens": _sds((B, S_text), i32),
+                "patches": _sds((B, cfg.n_patches, cfg.frontend_dim), f32),
+            }
+            ps = {"tokens": P(dp, None), "patches": P(dp, None, None)}
+        elif cfg.family == "encdec":
+            sds = {"frames": _sds((B, S, cfg.frontend_dim), f32),
+                   "tokens": _sds((B, S), i32)}
+            ps = {"frames": P(dp, None, None), "tokens": P(dp, None)}
+        else:
+            sds = {"tokens": _sds((B, S), i32)}
+            ps = {"tokens": P(dp, None)}
+        return sds, ps
+
+    # decode: one new token against a seq_len cache.  A batch of 1
+    # (long_500k) cannot shard over the batch axes — replicate it.
+    sds = {"tokens": _sds((B, 1), i32)}
+    ps = {"tokens": P(dp, None) if B >= 16 else P(None, None)}
+    return sds, ps
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                parallel: ParallelConfig | None = None):
+    """Alias kept for the benchmark harness."""
+    return input_specs(cfg, shape, parallel)

@@ -1,0 +1,103 @@
+"""Wave-batched serving engine.
+
+Each replica runs waves: pop up to ``wave_size`` requests from its queue
+(bulk), left-pad prompts to a common length, one batched prefill, then
+batched greedy decode until every request hits its ``max_new`` budget.
+Between waves the replica yields to the admission master's rebalance
+round (serve/scheduler.py).
+
+This is deliberately wave-synchronous (vLLM-style per-token continuous
+batching with paged KV is out of scope — see DESIGN.md); the paper's
+contribution lives in the QUEUE + MASTER layer, which is identical
+either way.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.kv_cache import pad_cache
+from repro.serve.scheduler import AdmissionMaster, Request
+
+__all__ = ["Replica", "ServeCluster"]
+
+
+class Replica:
+    def __init__(self, model, params, *, wave_size: int = 4,
+                 max_seq: int = 128):
+        self.model = model
+        self.params = params
+        self.wave_size = wave_size
+        self.max_seq = max_seq
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+        # ring-aware growth when the model provides it (local/SWA caches)
+        grow = getattr(model, "grow_cache", None) or (
+            lambda c, t: pad_cache(c, t))
+        self._pad = jax.jit(grow, static_argnums=1)
+        self.tokens_generated = 0
+        self.speed = 1.0   # straggler simulation hook (tests scale this)
+
+    def run_wave(self, wave: List[Request]) -> List[Request]:
+        if not wave:
+            return []
+        B = len(wave)
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(wave):  # left-pad with 0
+            toks[i, plen - len(r.prompt):] = r.prompt
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        cache = self._pad(cache, self.max_seq)  # head room for decode
+        out = [[] for _ in range(B)]
+        cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        max_new = max(r.max_new for r in wave)
+        for _ in range(min(max_new, self.max_seq - plen)):
+            for i in range(B):
+                out[i].append(int(cur[i]))
+            logits, cache = self._decode(self.params, cache, cur[:, None])
+            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            self.tokens_generated += B
+        for i, r in enumerate(wave):
+            r.output = out[i][: r.max_new]
+        return wave
+
+
+class ServeCluster:
+    """N replicas + one admission master; ``step()`` = each replica runs
+    one wave, then the master rebalances (the superstep structure of
+    core.master, at host level)."""
+
+    def __init__(self, replicas: List[Replica],
+                 master: Optional[AdmissionMaster] = None):
+        self.replicas = replicas
+        self.master = master or AdmissionMaster(len(replicas))
+        self.done: List[Request] = []
+
+    def submit(self, reqs: List[Request]):
+        self.master.submit(reqs)
+
+    def step(self) -> int:
+        served = 0
+        for rid, rep in enumerate(self.replicas):
+            rq = self.master.replicas[rid]
+            # straggler simulation: slow replicas take smaller waves
+            wave_n = max(1, int(rep.wave_size * rep.speed))
+            wave = rq.pop_wave(wave_n)
+            finished = rep.run_wave(wave)
+            rq.finish_wave(len(finished))
+            self.done.extend(finished)
+            served += len(finished)
+        self.master.rebalance()
+        return served
+
+    def run_until_drained(self, max_steps: int = 1000) -> List[Request]:
+        for _ in range(max_steps):
+            pending = sum(r.load() for r in self.master.replicas)
+            if pending == 0:
+                break
+            self.step()
+        return self.done

@@ -1,0 +1,51 @@
+"""KV-cache utilities for serving.
+
+Model ``prefill`` returns caches sized to the prompt; decode needs head
+room.  ``pad_cache`` grows every attention cache leaf (k/v, layout
+(L, B, C, K, hd)) along the sequence axis to ``target_len`` — zero-fill
+is safe because decode masks by position validity.  SSM caches (O(1)
+state) and enc-dec cross-attn caches (fixed source) are left untouched.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+__all__ = ["pad_cache", "cache_tokens"]
+
+
+def _is_growable(path) -> bool:
+    keys = [str(getattr(p, "key", "")) for p in path]
+    if "cross" in keys:       # enc-dec source KV never grows
+        return False
+    return keys[-1] in ("k", "v")
+
+
+def pad_cache(cache: Pytree, target_len: int) -> Pytree:
+    """Grow attention k/v leaves to seq length ``target_len`` (axis 2)."""
+
+    def pad(path, leaf):
+        if not _is_growable(path) or leaf.ndim != 5:
+            return leaf
+        C = leaf.shape[2]
+        if C >= target_len:
+            return leaf
+        pad_widths = [(0, 0)] * leaf.ndim
+        pad_widths[2] = (0, target_len - C)
+        return jnp.pad(leaf, pad_widths)
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def cache_tokens(cache: Pytree) -> int:
+    """Total KV slots held (for admission/capacity accounting)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if _is_growable(path) and hasattr(leaf, "ndim") and leaf.ndim == 5:
+            total += leaf.shape[1] * leaf.shape[2]
+    return total // 2  # k and v counted once

@@ -1,0 +1,123 @@
+"""Serving scheduler: per-replica request queues + single-master bulk steal.
+
+The paper's master-worker discipline applied to inference admission:
+
+* each model REPLICA owns a request queue (one owner: the replica's
+  engine loop popping work; one stealer: the admission master);
+* new requests are admitted in BULK to the least-loaded replica (one
+  splice — constant latency in the batch size, Fig. 6's property);
+* when a replica drains below the low watermark while another is above
+  the high watermark, the master steals ``proportion`` of the busy
+  replica's TAIL — the oldest requests, which preserves the busy
+  replica's locality with its in-flight wave (the paper's
+  locality-aware redistribution argument, §II.B).
+
+Queues are the faithful host port (LinkedWSQueue) — this scheduler runs
+on the serving controller host, not on the accelerator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.host_queue import LinkedWSQueue, llist_from_iter
+from repro.core.policy import StealPolicy
+
+__all__ = ["Request", "ReplicaQueue", "AdmissionMaster"]
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: Sequence[int]
+    max_new: int = 16
+    rid: int = dataclasses.field(default_factory=lambda: next(_ids))
+    output: Optional[List[int]] = None
+
+
+class ReplicaQueue:
+    def __init__(self, replica_id: int):
+        self.replica_id = replica_id
+        self.q = LinkedWSQueue()
+        self.in_flight = 0
+        self.completed = 0
+
+    def load(self) -> int:
+        return len(self.q) + self.in_flight
+
+    def pop_wave(self, max_wave: int) -> List[Request]:
+        wave = []
+        while len(wave) < max_wave:
+            r = self.q.pop()
+            if r is None:
+                break
+            wave.append(r)
+        self.in_flight += len(wave)
+        return wave
+
+    def finish_wave(self, n: int):
+        self.in_flight -= n
+        self.completed += n
+
+
+class AdmissionMaster:
+    """The single stealer + admission router."""
+
+    def __init__(self, n_replicas: int, policy: Optional[StealPolicy] = None):
+        self.replicas = [ReplicaQueue(i) for i in range(n_replicas)]
+        self.policy = policy or StealPolicy(proportion=0.5,
+                                            low_watermark=1,
+                                            high_watermark=8)
+        self.stolen = 0
+        self.rounds = 0
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, requests: Sequence[Request]) -> int:
+        """Bulk-admit to the least-loaded replica (ONE splice)."""
+        target = min(self.replicas, key=lambda r: r.load())
+        # reversed: oldest request at the queue tail => popped last... the
+        # engine pops newest-first (LIFO); for FIFO serving we push reversed.
+        target.q.push(llist_from_iter(reversed(list(requests))))
+        return target.replica_id
+
+    # -- rebalancing ---------------------------------------------------------
+
+    def rebalance(self) -> int:
+        """One master round: pair drained replicas with overloaded ones and
+        bulk-steal the victim's tail.  At most one steal per victim per
+        round (single-stealer invariant)."""
+        self.rounds += 1
+        pol = self.policy
+        idle = sorted((r for r in self.replicas
+                       if len(r.q) <= pol.low_watermark),
+                      key=lambda r: r.load())
+        busy = sorted((r for r in self.replicas
+                       if len(r.q) >= pol.high_watermark),
+                      key=lambda r: -len(r.q))
+        moved = 0
+        for thief, victim in zip(idle, busy):
+            begin, _, count = victim.q.steal_optimized(pol.proportion)
+            if not count:
+                continue
+            stolen = []
+            node = begin
+            while node is not None:
+                stolen.append(node.payload)
+                node = node.next
+            thief.q.push(llist_from_iter(reversed(stolen)))
+            moved += count
+        self.stolen += moved
+        return moved
+
+    def stats(self) -> Dict:
+        return {
+            "loads": [r.load() for r in self.replicas],
+            "queued": [len(r.q) for r in self.replicas],
+            "completed": [r.completed for r in self.replicas],
+            "stolen": self.stolen,
+            "rounds": self.rounds,
+        }

@@ -1,0 +1,129 @@
+"""Atomic, elastic checkpoints.
+
+Layout: <dir>/step_<N>/arrays.npz + meta.json, written to a tmp dir and
+renamed (atomic on POSIX) so a crash mid-write never corrupts the latest
+checkpoint.  ``keep`` old steps are retained.
+
+Elastic restore: arrays are saved as full (unsharded) host arrays keyed
+by pytree path, so a checkpoint written on one mesh restores onto ANY
+mesh/topology — ``restore(..., shardings=...)`` places each leaf with
+jax.device_put against the new mesh's NamedShardings (re-sharding a 256-
+chip checkpoint onto 512 chips or onto 1 CPU for debugging).
+
+Data-iterator state (a small dict) rides along in meta.json so resume
+is exact, not approximate.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+__all__ = ["save", "restore", "latest_step", "Checkpointer"]
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten(template: Pytree, flat: Dict[str, np.ndarray]) -> Pytree:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree: Pytree,
+         extra: Optional[dict] = None, keep: int = 3) -> str:
+    """Atomically write checkpoint for ``step``; GC old ones."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **_flatten(tree))
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "extra": extra or {}}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # keep-k GC
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+    return final
+
+
+def latest_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, template: Pytree, step: Optional[int] = None,
+            shardings: Optional[Pytree] = None) -> Tuple[Pytree, int, dict]:
+    """Load ``step`` (default: latest).  With ``shardings`` (a pytree of
+    jax.sharding.Sharding matching template) each leaf is device_put onto
+    the new mesh — the elastic-restore path."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    tree = _unflatten(template, flat)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, int(meta["step"]), meta.get("extra", {})
+
+
+class Checkpointer:
+    """Convenience wrapper bundling directory, cadence, and keep-k."""
+
+    def __init__(self, ckpt_dir: str, every: int = 100, keep: int = 3):
+        self.dir = ckpt_dir
+        self.every = max(every, 1)
+        self.keep = keep
+
+    def maybe_save(self, step: int, tree: Pytree,
+                   extra: Optional[dict] = None) -> Optional[str]:
+        if step % self.every == 0:
+            return save(self.dir, step, tree, extra, keep=self.keep)
+        return None

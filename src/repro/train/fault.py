@@ -1,0 +1,106 @@
+"""Fault tolerance: signal-triggered checkpoints, straggler detection,
+and a supervised restart loop.
+
+On a real multi-pod deployment each host runs the same SPMD program; the
+pieces here are the per-host controls that make a 1000-node run survivable:
+
+* ``GracefulExit`` — SIGTERM/SIGINT set a flag; the train loop checks it
+  once per step and writes a final checkpoint before exiting (preemption
+  handling on TPU pods, where eviction sends SIGTERM).
+* ``StragglerMonitor`` — EMA of step wall-time; a step slower than
+  ``threshold x`` the EMA marks this host as a straggler.  The hook is
+  wired to the data pipeline's bulk-steal rebalancing (a slow host's
+  unread work is stolen by the master — the paper's mechanism applied to
+  input data), and the decision is exported for external orchestrators
+  that replace chronically slow hosts.
+* ``run_supervised`` — restart-on-crash wrapper: run the train loop; on
+  an unhandled exception, restore from the latest checkpoint and resume,
+  up to ``max_restarts`` (node-failure recovery; with a cluster manager
+  the same entrypoint simply re-executes on a replacement node).
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+import traceback
+from typing import Callable, Optional
+
+__all__ = ["GracefulExit", "StragglerMonitor", "run_supervised"]
+
+
+class GracefulExit:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.requested = False
+        self._prev = {}
+        self._signals = signals
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def __enter__(self):
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        return False
+
+
+class StragglerMonitor:
+    """EMA step timer; ``observe()`` returns True when this step was a
+    straggler (> threshold x EMA)."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ema: Optional[float] = None
+        self.n = 0
+        self.straggler_steps = 0
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def observe(self) -> bool:
+        if self._t0 is None:
+            return False
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        self.n += 1
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = (self.n > self.warmup
+                        and dt > self.threshold * self.ema)
+        self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+        if is_straggler:
+            self.straggler_steps += 1
+        return is_straggler
+
+
+def run_supervised(run: Callable[[Optional[int]], int],
+                   max_restarts: int = 3,
+                   on_restart: Optional[Callable[[int, BaseException], None]] = None
+                   ) -> int:
+    """Call ``run(resume_step)``; on crash, retry from the latest
+    checkpoint (run() is responsible for restoring when resume_step is
+    not None).  Returns the final step."""
+    resume: Optional[int] = None
+    for attempt in range(max_restarts + 1):
+        try:
+            return run(resume)
+        except KeyboardInterrupt:
+            raise
+        except BaseException as e:  # noqa: BLE001 — restart-on-anything
+            if attempt == max_restarts:
+                raise
+            traceback.print_exc()
+            if on_restart is not None:
+                on_restart(attempt, e)
+            resume = -1  # sentinel: restore from latest
+    raise RuntimeError("unreachable")

@@ -1,0 +1,69 @@
+"""Train-step builder: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation structured so XLA's latency-hiding scheduler can
+overlap each microbatch's reduce-scatter with the next one's compute.
+
+The returned function is pjit-ready: callers pass in_shardings built from
+``model.param_specs()`` / ``opt_state_specs`` / the batch pspecs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update
+
+Pytree = Any
+
+__all__ = ["make_train_step", "TrainState"]
+
+
+class TrainState:
+    """Lightweight container (params, opt) — kept as a plain tuple pytree
+    in the step function itself for pjit friendliness."""
+
+
+def make_train_step(model, opt_cfg: AdamWConfig,
+                    microbatch: int = 0) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    microbatch > 1 splits the batch leading dim into that many chunks and
+    accumulates grads with a lax.scan (each chunk's backward ends in the
+    FSDP reduce-scatter; the scan structure lets XLA overlap it with the
+    next chunk's compute).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def train_step(params, opt_state: OptState, batch):
+        if microbatch and microbatch > 1:
+            def split(x):
+                B = x.shape[0]
+                return x.reshape((microbatch, B // microbatch) + x.shape[1:])
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(carry, mb_batch):
+                acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb_batch)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return acc, loss
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(acc_fn, zeros, mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, grads)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        params, opt_state, metrics = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,62 @@
+"""DD solver: bound sandwich properties (hypothesis), B&B vs DP oracle,
+parallel == sequential."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dd.bnb import solve
+from repro.core.dd.diagram import build_bounds
+from repro.core.dd.knapsack import Knapsack, dp_solve, paper_example, random_instance
+from repro.core.dd.parallel import parallel_solve
+
+
+def test_paper_example_figures():
+    """Fig. 2: exact optimum 15.  Fig. 3/4: restricted 13 <= 15 <= relaxed 19
+    at max-width 3 (the paper's figures use width 3)."""
+    inst = paper_example()
+    assert dp_solve(inst) == 15
+    primal, dual = build_bounds(
+        jnp.int32(inst.capacity), jnp.int32(0), jnp.int32(0),
+        jnp.asarray(inst.weights, jnp.int32),
+        jnp.asarray(inst.profits, jnp.int32), width=3, n_vars=inst.n)
+    assert int(primal) <= 15 <= int(dual)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 12), st.integers(2, 8))
+def test_bound_sandwich(seed, n, width):
+    """restricted <= exact <= relaxed for any instance and width."""
+    inst = random_instance(n, seed=seed)
+    opt = dp_solve(inst)
+    primal, dual = build_bounds(
+        jnp.int32(inst.capacity), jnp.int32(0), jnp.int32(0),
+        jnp.asarray(inst.weights, jnp.int32),
+        jnp.asarray(inst.profits, jnp.int32), width=width, n_vars=inst.n)
+    assert int(primal) <= opt <= int(dual)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_bnb_matches_dp(seed):
+    inst = random_instance(12, seed=seed)
+    got, _ = solve(inst, width=8)
+    assert got == dp_solve(inst)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_parallel_matches_sequential(seed):
+    inst = random_instance(12, seed=seed)
+    expect = dp_solve(inst)
+    got, stats = parallel_solve(inst, n_workers=4, explore_width=8, batch=4)
+    assert got == expect
+    assert stats["explored"] >= 1
+
+
+def test_parallel_balances_load():
+    """The master's bulk steal spreads exploration across workers."""
+    inst = random_instance(16, seed=1)
+    _, stats = parallel_solve(inst, n_workers=8, explore_width=8, batch=4)
+    per = stats["per_worker_explored"]
+    assert stats["transferred"] > 0          # steals happened
+    assert sum(1 for x in per if x > 0) >= 4  # work reached >= half the pool

@@ -1,0 +1,139 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs the
+pure-jnp oracle (assigned requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dd_expand.ops import expand_layer_bulk
+from repro.kernels.dd_expand.ref import expand_ref
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.queue_steal.ops import steal_gather
+from repro.kernels.queue_steal.ref import ring_gather_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- flash
+
+FLASH_CASES = [
+    # (B, S, T, H, K, hd, causal, window, softcap, dtype)
+    (2, 128, 128, 4, 2, 64, True, None, None, jnp.float32),
+    (1, 256, 256, 4, 4, 64, True, 128, None, jnp.float32),
+    (2, 128, 256, 8, 2, 32, True, None, 50.0, jnp.float32),
+    (1, 128, 128, 2, 1, 128, False, None, None, jnp.float32),
+    (1, 128, 128, 4, 4, 64, True, None, None, jnp.bfloat16),
+    (2, 128, 256, 4, 2, 32, True, 64, 30.0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref(case):
+    B, S, T, H, K, hd, causal, window, cap, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, K, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, K, hd), jnp.float32).astype(dtype)
+    out_k = mha(q, k, v, causal=causal, window=window, softcap=cap,
+                interpret=True)
+    ke = jnp.repeat(k, H // K, 2)
+    ve = jnp.repeat(v, H // K, 2)
+    out_r = attention_ref(q, ke, ve, causal=causal, window=window,
+                          softcap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ----------------------------------------------------------- queue_steal
+
+STEAL_CASES = [
+    (512, 8, 256, 0, 100, jnp.float32),
+    (512, 8, 256, 500, 256, jnp.float32),     # wraps
+    (1024, 16, 512, 777, 333, jnp.float32),
+    (256, 4, 256, 255, 256, jnp.int32),       # full wrap, int payload
+    (256, 4, 128, 13, 0, jnp.float32),        # empty steal
+    (256, 128, 256, 100, 200, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", STEAL_CASES)
+def test_queue_steal_matches_ref(case):
+    cap, W, max_steal, lo, n, dtype = case
+    if jnp.issubdtype(dtype, jnp.integer):
+        buf = jax.random.randint(KEY, (cap, W), 0, 1000, dtype)
+    else:
+        buf = jax.random.normal(KEY, (cap, W), jnp.float32).astype(dtype)
+    out_k = steal_gather(buf, jnp.int32(lo), jnp.int32(n),
+                         max_steal=max_steal, interpret=True)
+    out_r = ring_gather_ref(buf, lo, n, max_steal)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+# --------------------------------------------------------------- ssd_scan
+
+SSD_CASES = [
+    (2, 64, 4, 16, 32, 16),
+    (1, 128, 2, 32, 16, 32),
+    (2, 256, 8, 64, 128, 128),
+    (1, 64, 1, 8, 8, 64),       # single chunk (S == Q)
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_ref(case):
+    B, S, nh, hd, ns, Q = case
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, ns)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, ns)) * 0.3
+    D = jnp.ones((nh,))
+    y_k, fin_k = ssd(x, dt, A, Bm, Cm, D, chunk=Q, interpret=True)
+    y_r, fin_r = ssd_chunked(x, dt, A, Bm, Cm, D, Q)
+    np.testing.assert_allclose(y_k, y_r, atol=5e-5, rtol=5e-4)
+    np.testing.assert_allclose(fin_k, fin_r, atol=5e-5, rtol=5e-4)
+
+
+def test_ssd_decode_consistency():
+    """Chunked scan == running mamba_decode_step token by token (state)."""
+    from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+
+    Q, hd, ns = 16, 8, 4
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Q, hd)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Q,)))
+    a = -jnp.exp(jax.random.normal(ks[2], ()) * 0.3)
+    Bm = jax.random.normal(ks[3], (Q, ns)) * 0.3
+    Cm = jax.random.normal(ks[4], (Q, ns)) * 0.3
+    y, state = ssd_chunk_ref(x, dt, a, Bm, Cm, jnp.float32(0.0),
+                             jnp.zeros((hd, ns)))
+    # sequential recurrence oracle
+    st = jnp.zeros((hd, ns))
+    ys = []
+    for t in range(Q):
+        dA = jnp.exp(dt[t] * a)
+        st = st * dA + dt[t] * jnp.outer(x[t], Bm[t])
+        ys.append(st @ Cm[t])
+    np.testing.assert_allclose(y, jnp.stack(ys), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(state, st, atol=1e-4, rtol=1e-3)
+
+
+# -------------------------------------------------------------- dd_expand
+
+@pytest.mark.parametrize("N", [256, 512, 1024])
+@pytest.mark.parametrize("wp", [(3, 8), (50, 1), (0, 0)])
+def test_dd_expand_matches_ref(N, wp):
+    w, p = wp
+    s = jax.random.randint(KEY, (N,), -1, 100, jnp.int32)
+    v = jax.random.randint(KEY, (N,), 0, 50, jnp.int32)
+    sk, vk = expand_layer_bulk(s, v, w, p, interpret=True)
+    sr, vr = expand_ref(s, v, w, p)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))

@@ -1,0 +1,104 @@
+"""Tests for the virtual-master rebalancing superstep.
+
+Collectives are exercised through ``jax.vmap(axis_name=...)`` which gives the
+exact SPMD semantics on one CPU device; the multi-device shard_map path is
+covered by tests/test_master_spmd.py (subprocess with fake devices) and by
+the production dry-run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queue as q_ops
+from repro.core.master import superstep
+from repro.core.policy import StealPolicy
+from repro.core.sharded_queue import make_sharded_queues, vmapped_superstep
+
+SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def fill(qs, sizes):
+    """Fill worker i with ``sizes[i]`` distinct task ids."""
+    W = len(sizes)
+    nxt = 1
+    for i, n in enumerate(sizes):
+        vals = np.zeros((max(sizes) + 1,), np.int32)
+        vals[:n] = range(nxt, nxt + n)
+        nxt += n
+        qi = jax.tree_util.tree_map(lambda x: x[i], qs)
+        qi, _ = q_ops.push(qi, jnp.asarray(vals), n)
+        qs = jax.tree_util.tree_map(
+            lambda full, one: full.at[i].set(one), qs, qi
+        )
+    return qs, nxt - 1
+
+
+def totals(qs):
+    """Multiset of live task ids across all workers."""
+    out = []
+    W = qs.size.shape[0]
+    for i in range(W):
+        qi = jax.tree_util.tree_map(lambda x: x[i], qs)
+        while int(qi.size) > 0:
+            qi, item, valid = q_ops.pop(qi)
+            assert bool(valid)
+            out.append(int(item))
+    return out
+
+
+def test_superstep_moves_work_to_idle():
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=6, max_steal=16)
+    qs = make_sharded_queues(4, 64, SPEC)
+    qs, n_total = fill(qs, [20, 0, 0, 12])
+    step = vmapped_superstep(pol)
+    qs, stats = step(qs)
+    sizes = np.asarray(qs.size)
+    assert sizes.sum() == n_total  # conservation
+    assert sizes[1] > 0 and sizes[2] > 0  # both idle lanes got work
+    assert sizes[0] == 10  # victim 0 donated floor(20*0.5)
+    assert sizes[3] == 6
+
+
+def test_superstep_noop_when_balanced():
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=6, max_steal=16)
+    qs = make_sharded_queues(4, 64, SPEC)
+    qs, n_total = fill(qs, [4, 5, 4, 5])
+    step = vmapped_superstep(pol)
+    qs2, stats = step(qs)
+    np.testing.assert_array_equal(np.asarray(qs2.size), np.asarray(qs.size))
+    assert int(stats.n_transferred[0]) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=2, max_size=6), st.integers(1, 4))
+def test_superstep_conserves_tasks(sizes, rounds):
+    W = len(sizes)
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8, max_steal=32)
+    qs = make_sharded_queues(W, 128, SPEC)
+    qs, n_total = fill(qs, sizes)
+    ids_before = sorted(totals(qs))
+    qs = make_sharded_queues(W, 128, SPEC)
+    qs, _ = fill(qs, sizes)
+    step = vmapped_superstep(pol)
+    for _ in range(rounds):
+        qs, _ = step(qs)
+    ids_after = sorted(totals(qs))
+    assert ids_after == ids_before  # nothing lost, duplicated, or invented
+
+
+def test_superstep_reduces_imbalance():
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8, max_steal=64)
+    qs = make_sharded_queues(8, 256, SPEC)
+    sizes = [100, 0, 0, 0, 0, 0, 0, 0]
+    qs, _ = fill(qs, sizes)
+    step = vmapped_superstep(pol)
+    for _ in range(6):
+        qs, _ = step(qs)
+    s = np.asarray(qs.size)
+    assert s.sum() == 100
+    assert s.max() <= 60  # load spread out
+    assert (s > 0).sum() >= 4

@@ -1,0 +1,230 @@
+"""Unit + property tests for the JAX bulk work-stealing queue.
+
+The linearizability property tests mirror the paper's §III-B argument: for
+any sequence of owner bulk-pushes / pops and stealer bulk-steals, the queue
+behaves exactly like a sequential deque where the owner operates at the head
+and the stealer detaches suffixes at the tail — no task is lost, duplicated,
+or reordered.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queue as q_ops
+
+CAP = 64
+SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def batch_of(values):
+    """Fixed-width batch buffer (width 16) holding ``values``."""
+    buf = np.zeros((16,), np.int32)
+    buf[: len(values)] = values
+    return jnp.asarray(buf), len(values)
+
+
+def test_push_pop_lifo():
+    q = q_ops.make_queue(CAP, SPEC)
+    b, n = batch_of([1, 2, 3])
+    q, pushed = q_ops.push(q, b, n)
+    assert int(pushed) == 3 and int(q.size) == 3
+    q, item, valid = q_ops.pop(q)
+    assert bool(valid) and int(item) == 3  # owner pops newest (LIFO)
+    q, item, valid = q_ops.pop(q)
+    assert int(item) == 2
+    q, item, valid = q_ops.pop(q)
+    assert int(item) == 1
+    q, _, valid = q_ops.pop(q)
+    assert not bool(valid) and int(q.size) == 0
+
+
+def test_pop_empty_is_null():
+    q = q_ops.make_queue(CAP, SPEC)
+    q, _, valid = q_ops.pop(q)
+    assert not bool(valid)
+    assert int(q.size) == 0
+
+
+def test_push_clamps_to_capacity():
+    q = q_ops.make_queue(4, SPEC)
+    b, n = batch_of([1, 2, 3, 4, 5, 6])
+    q, pushed = q_ops.push(q, b, n)
+    assert int(pushed) == 4 and int(q.size) == 4
+
+
+def test_steal_proportion_matches_paper_arithmetic():
+    # Listing 4: keep floor(sz * (1-p)); steal the rest.
+    q = q_ops.make_queue(CAP, SPEC)
+    b, n = batch_of(list(range(1, 11)))  # 10 items, oldest=1
+    q, _ = q_ops.push(q, b, n)
+    q, stolen, ns = q_ops.steal(q, 0.3, max_steal=16)
+    assert int(ns) == 10 - int(10 * 0.7)  # = 3
+    np.testing.assert_array_equal(np.asarray(stolen)[: int(ns)], [1, 2, 3])
+    assert int(q.size) == 7
+
+
+def test_steal_aborts_below_queue_limit():
+    q = q_ops.make_queue(CAP, SPEC)
+    b, n = batch_of([7])
+    q, _ = q_ops.push(q, b, n)
+    q, _, ns = q_ops.steal(q, 0.9, max_steal=16, queue_limit=2)
+    assert int(ns) == 0 and int(q.size) == 1
+
+
+def test_steal_takes_oldest_side():
+    q = q_ops.make_queue(CAP, SPEC)
+    b, n = batch_of([10, 11, 12, 13])
+    q, _ = q_ops.push(q, b, n)
+    q, stolen, ns = q_ops.steal(q, 0.5, max_steal=16)
+    np.testing.assert_array_equal(np.asarray(stolen)[: int(ns)], [10, 11])
+    # Owner still pops newest first.
+    q, item, _ = q_ops.pop(q)
+    assert int(item) == 13
+
+
+def test_steal_exact_masks_dead_rows():
+    q = q_ops.make_queue(CAP, SPEC)
+    b, n = batch_of([5, 6, 7, 8])
+    q, _ = q_ops.push(q, b, n)
+    q, blk, ns = q_ops.steal_exact(q, 2, max_steal=8)
+    arr = np.asarray(blk)
+    np.testing.assert_array_equal(arr[:2], [5, 6])
+    assert (arr[2:] == 0).all()  # masked — safe for summing collectives
+
+
+def test_steal_counted_equals_steal():
+    q1 = q_ops.make_queue(CAP, SPEC)
+    b, n = batch_of(list(range(1, 13)))
+    q1, _ = q_ops.push(q1, b, n)
+    q2 = q_ops.QueueState(*q1)
+    a1, s1, n1 = q_ops.steal(q1, 0.4, max_steal=16)
+    a2, s2, n2 = q_ops.steal_counted(q2, 0.4, max_steal=16)
+    assert int(n1) == int(n2)
+    np.testing.assert_array_equal(
+        np.asarray(s1)[: int(n1)], np.asarray(s2)[: int(n2)]
+    )
+    assert int(a1.size) == int(a2.size)
+
+
+def test_ring_wraparound():
+    q = q_ops.make_queue(8, SPEC)
+    seq = 0
+    for _ in range(10):  # cycle the ring several times
+        b, n = batch_of([seq, seq + 1, seq + 2])
+        q, pushed = q_ops.push(q, b, n)
+        assert int(pushed) == 3
+        got = []
+        for _ in range(3):
+            q, item, valid = q_ops.pop(q)
+            assert bool(valid)
+            got.append(int(item))
+        assert got == [seq + 2, seq + 1, seq]
+        seq += 3
+
+
+def test_pop_bulk_order():
+    q = q_ops.make_queue(CAP, SPEC)
+    b, n = batch_of([1, 2, 3, 4, 5])
+    q, _ = q_ops.push(q, b, n)
+    q, blk, ns = q_ops.pop_bulk(q, 4, 3)
+    assert int(ns) == 3
+    np.testing.assert_array_equal(np.asarray(blk)[:3], [3, 4, 5])
+    assert int(q.size) == 2
+
+
+# ---------------------------------------------------------------------------
+# Property: linearizability against a sequential deque model
+# ---------------------------------------------------------------------------
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("push"), st.integers(1, 12)),
+        st.tuples(st.just("pop"), st.just(0)),
+        st.tuples(st.just("pop_bulk"), st.integers(1, 8)),
+        st.tuples(st.just("steal"), st.floats(0.05, 0.95)),
+    ),
+    min_size=1,
+    max_size=40,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops_strategy)
+def test_linearizable_against_model(ops):
+    """Every interleaving of bulk ops at superstep granularity matches the
+    sequential deque: owner at head, stealer at tail, nothing lost/dup'd."""
+    q = q_ops.make_queue(128, SPEC)
+    model = []  # index 0 = oldest (tail), -1 = newest (head)
+    next_val = 1
+    produced, consumed = set(), []
+
+    for op, arg in ops:
+        if op == "push":
+            vals = list(range(next_val, next_val + arg))
+            next_val += arg
+            b, n = batch_of(vals)
+            q, pushed = q_ops.push(q, b, n)
+            pushed = int(pushed)
+            model.extend(vals[:pushed])
+            produced.update(vals[:pushed])
+        elif op == "pop":
+            q, item, valid = q_ops.pop(q)
+            if model:
+                assert bool(valid) and int(item) == model.pop()
+                consumed.append(int(item))
+            else:
+                assert not bool(valid)
+        elif op == "pop_bulk":
+            q, blk, ns = q_ops.pop_bulk(q, 8, arg)
+            ns = int(ns)
+            expect = model[len(model) - ns :]
+            del model[len(model) - ns :]
+            np.testing.assert_array_equal(np.asarray(blk)[:ns], expect)
+            consumed.extend(expect)
+        elif op == "steal":
+            q, blk, ns = q_ops.steal(q, arg, max_steal=64)
+            ns = int(ns)
+            # Paper arithmetic on the model:
+            sz = len(model)
+            expect_n = 0 if sz < 2 else min(sz - int(sz * (1.0 - arg)), 64)
+            assert ns == expect_n
+            expect = model[:ns]
+            del model[:ns]
+            np.testing.assert_array_equal(np.asarray(blk)[:ns], expect)
+            consumed.extend(expect)
+        assert int(q.size) == len(model)
+
+    # Conservation: consumed + remaining == produced, no duplicates.
+    remaining = model
+    assert len(set(consumed)) == len(consumed)
+    assert set(consumed) | set(remaining) == produced
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(2, 6),
+    st.lists(st.integers(0, 40), min_size=2, max_size=6),
+)
+def test_plan_transfers_invariants(n_workers, sizes):
+    from repro.core.policy import StealPolicy, plan_transfers
+
+    sizes = (sizes + [0] * n_workers)[:n_workers]
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=8, max_steal=32)
+    plan = np.asarray(plan_transfers(jnp.asarray(sizes, jnp.int32), pol))
+    srcs = plan[:, 0]
+    amts = plan[:, 1]
+    assert (amts >= 0).all() and (amts <= 32).all()
+    # At most one steal per victim (single-stealer invariant).
+    victims = srcs[amts > 0]
+    assert len(victims) == len(set(victims.tolist()))
+    # A victim never donates more than it has, and only if above watermark.
+    for t in range(n_workers):
+        if amts[t] > 0:
+            v = srcs[t]
+            assert v != t
+            assert sizes[v] >= pol.high_watermark
+            assert amts[t] <= sizes[v]
+            assert sizes[t] <= pol.low_watermark

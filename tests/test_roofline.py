@@ -1,0 +1,46 @@
+"""Roofline extraction: collective-bytes HLO parsing on known snippets."""
+
+import pytest
+
+from repro.launch.roofline import collective_bytes, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("bf16[2,4,8]") == 2 * 4 * 8 * 2
+    assert _shape_bytes("pred[10]") == 10
+    assert _shape_bytes("token[]") == 0
+
+
+def test_all_gather_result_bytes():
+    hlo = """
+  %ag = f32[64,128]{1,0} all-gather(f32[4,128]{1,0} %x), dimensions={0},
+      replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}
+"""
+    out = collective_bytes(hlo, 16)
+    expect = 64 * 128 * 4 * (15 / 16)
+    assert abs(out["all-gather"] - expect) < 1
+
+
+def test_all_reduce_ring_bytes():
+    hlo = "%ar = f32[1024]{0} all-reduce(f32[1024]{0} %g), replica_groups={{0,1,2,3}}"
+    out = collective_bytes(hlo, 4)
+    expect = 2 * 1024 * 4 * (3 / 4)
+    assert abs(out["all-reduce"] - expect) < 1
+
+
+def test_permute_and_mixed():
+    hlo = """
+  %cp = bf16[8,8]{1,0} collective-permute(bf16[8,8]{1,0} %x), source_target_pairs={{0,1}}
+  %rs = f32[16]{0} reduce-scatter(f32[64]{0} %y), replica_groups={{0,1,2,3}}
+"""
+    out = collective_bytes(hlo, 4)
+    assert out["collective-permute"] == 8 * 8 * 2
+    assert abs(out["reduce-scatter"] - 64 * 4 * 0.75) < 1
+    assert out["total"] == pytest.approx(
+        out["collective-permute"] + out["reduce-scatter"])
+
+
+def test_ignores_non_collectives():
+    hlo = "%d = f32[128,128]{1,0} dot(f32[128,128] %a, f32[128,128] %b)"
+    assert collective_bytes(hlo, 8)["total"] == 0

@@ -1,0 +1,107 @@
+"""Serving: prefill+decode consistency vs teacher-forced forward, the
+wave engine, and the admission master's bulk-steal invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import build_model
+from repro.serve.engine import Replica, ServeCluster
+from repro.serve.kv_cache import pad_cache
+from repro.serve.scheduler import AdmissionMaster, Request
+from repro.core.policy import StealPolicy
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-9b", "mamba2-2.7b",
+                                  "zamba2-7b", "qwen3-moe-30b-a3b"])
+def test_prefill_decode_matches_forward(arch):
+    """Greedy decode logits from (prefill + decode_step*) must match the
+    teacher-forced forward pass at the same positions.
+
+    MoE archs get a loose absolute tolerance: capacity routing is batch-
+    dependent (the bulk steal reroutes overflow differently for a 2-token
+    decode step than for the 40-token forward), a known property of
+    capacity-based MoE inference.
+    """
+    cfg = configs.reduced(configs.get(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, extra = 2, 16, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + extra), 1,
+                              cfg.vocab_size, jnp.int32)
+    # cached path
+    logits_p, cache = jax.jit(model.prefill)(params, toks[:, :S])
+    cache = model.grow_cache(cache, S + extra)
+    got = [logits_p[:, 0]]
+    for t in range(extra - 1):
+        lg, cache = jax.jit(model.decode_step)(params, cache,
+                                               toks[:, S + t:S + t + 1])
+        got.append(lg[:, 0])
+    got = jnp.stack(got, axis=1)          # (B, extra, V)
+    # teacher-forced path: hidden -> head at the same positions
+    hidden = model.forward(params, toks)
+    head = model._head(params).astype(model.cdtype)
+    ref_all = jnp.einsum("bsd,dv->bsv", hidden, head).astype(jnp.float32)
+    from repro.models.layers import softcap
+    ref_all = softcap(ref_all, cfg.final_logit_softcap)
+    ref = ref_all[:, S - 1:S + extra - 1]
+    if cfg.n_experts:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-1, rtol=0)
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-2, rtol=2e-2)
+
+
+def test_wave_engine_generates():
+    cfg = configs.reduced(configs.get("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rep = Replica(model, params, wave_size=4, max_seq=64)
+    reqs = [Request(prompt=[1, 2, 3], max_new=5) for _ in range(3)]
+    done = rep.run_wave(reqs)
+    assert all(len(r.output) == 5 for r in done)
+
+
+def test_cluster_serves_all_with_straggler():
+    cfg = configs.reduced(configs.get("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reps = [Replica(model, params, wave_size=4, max_seq=64)
+            for _ in range(2)]
+    reps[0].speed = 0.25   # straggler
+    # aggressive watermarks so the master keeps feeding the fast replica
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=2)
+    cluster = ServeCluster(reps, AdmissionMaster(2, policy=pol))
+    reqs = [Request(prompt=[1, 2], max_new=2) for _ in range(12)]
+    cluster.submit(reqs)
+    done = cluster.run_until_drained()
+    assert len(done) == 12
+    st_ = cluster.master.stats()
+    assert st_["stolen"] > 0, "master never rebalanced the straggler"
+    assert st_["completed"][1] > st_["completed"][0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 20), min_size=1, max_size=12),
+       st.integers(2, 5))
+def test_admission_master_conserves_requests(batch_sizes, n_replicas):
+    """No request lost or duplicated across admission + rebalance rounds."""
+    master = AdmissionMaster(n_replicas)
+    all_ids = set()
+    for n in batch_sizes:
+        reqs = [Request(prompt=[1], max_new=1) for _ in range(n)]
+        all_ids.update(r.rid for r in reqs)
+        master.submit(reqs)
+        master.rebalance()
+    seen = []
+    for rq in master.replicas:
+        while True:
+            r = rq.q.pop()
+            if r is None:
+                break
+            seen.append(r.rid)
+    assert sorted(seen) == sorted(all_ids)

@@ -1,0 +1,122 @@
+"""Training substrate: convergence, grad-accumulation equivalence,
+checkpoint atomicity + elastic restore, fault handling."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.synthetic import synth_batch
+from repro.models import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.fault import StragglerMonitor, run_supervised
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.trainer import make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.reduced(configs.get("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _batch(cfg, step=0, B=8, S=32):
+    raw = synth_batch(0, 0, step, B, S, cfg.vocab_size)
+    return {"tokens": jnp.asarray(raw["tokens"]),
+            "labels": jnp.asarray(raw["labels"])}
+
+
+def test_loss_decreases(setup):
+    cfg, model, params = setup
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=3e-3, warmup_steps=2,
+                                                      total_steps=30)))
+    first = None
+    for i in range(30):
+        params, opt, m = step(params, opt, _batch(cfg, i))
+        if first is None:
+            first = float(m["loss"])
+    assert float(m["loss"]) < first * 0.8, (first, float(m["loss"]))
+
+
+def test_grad_accumulation_equivalence(setup):
+    """microbatch=2 must match the full-batch gradient step (same math,
+    different schedule — the overlap trick must not change results)."""
+    cfg, model, params = setup
+    batch = _batch(cfg, B=8)
+    ocfg = AdamWConfig(lr=1e-3)
+    full = jax.jit(make_train_step(model, ocfg, microbatch=0))
+    acc = jax.jit(make_train_step(model, ocfg, microbatch=2))
+    p1, _, m1 = full(params, adamw_init(params), batch)
+    p2, _, m2 = acc(params, adamw_init(params), batch)
+    # loss means over microbatches differ by chunking of the mean; params
+    # must agree to fp tolerance
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    cfg, model, params = setup
+    opt = adamw_init(params)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, (params, opt), extra={"data": {"step": 7}})
+    (p2, o2), step, extra = ckpt.restore(d, (params, opt))
+    assert step == 7 and extra["data"]["step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k(tmp_path, setup):
+    cfg, model, params = setup
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, {"w": jnp.full((2,), s)}, keep=2)
+    assert ckpt.latest_steps(d) == [4, 5]
+
+
+def test_elastic_restore_device_put(tmp_path, setup):
+    """Restore places leaves with explicit shardings (single-device here;
+    the same path re-shards onto any mesh)."""
+    cfg, model, params = setup
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, params)
+    shardings = jax.tree_util.tree_map(
+        lambda _: jax.devices()[0], params)
+    p2, _, _ = ckpt.restore(d, params, shardings=shardings)
+    for leaf in jax.tree_util.tree_leaves(p2):
+        assert leaf.devices() == {jax.devices()[0]}
+
+
+def test_run_supervised_restarts():
+    calls = []
+
+    def run(resume):
+        calls.append(resume)
+        if len(calls) < 3:
+            raise RuntimeError("simulated node failure")
+        return 42
+
+    assert run_supervised(run, max_restarts=3) == 42
+    assert calls == [None, -1, -1]
+
+
+def test_straggler_monitor_flags_slow_steps():
+    import time
+
+    mon = StragglerMonitor(alpha=0.5, threshold=1.5, warmup=1)
+    flagged = 0
+    for i in range(8):
+        mon.start()
+        time.sleep(0.03 if i == 5 else 0.002)
+        flagged += bool(mon.observe())
+    assert flagged >= 1
+    assert mon.straggler_steps == flagged
