@@ -14,7 +14,9 @@ __all__ = ["time_ns", "Table"]
 def time_ns(setup: Callable[[], object], op: Callable[[object], None],
             repeats: int = 200, warmup: int = 20) -> float:
     """Mean ns per op; ``setup`` builds fresh state per iteration
-    (the paper resets the queue every iteration)."""
+    (the paper resets the queue every iteration).  For A/B comparisons on
+    noisy shared machines use interleaved min-of-samples instead (see
+    ``fig8_optimized_steal._ab_min``)."""
     for _ in range(warmup):
         st = setup()
         op(st)

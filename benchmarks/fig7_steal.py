@@ -42,13 +42,14 @@ def _bench_host(cls, p: float) -> float:
     return time_ns(setup, op, repeats=60, warmup=6)
 
 
-def _bench_jax(p: float) -> float:
+def _bench_jax(p: float, use_kernel: bool = False) -> float:
     spec = jnp.zeros((), jnp.int32)
     q0 = q_ops.make_queue(16_384, spec)
     items = jnp.arange(INITIAL, dtype=jnp.int32)
     q0, _ = jax.jit(q_ops.push)(q0, items, jnp.int32(INITIAL))
     jax.block_until_ready(q0.size)
-    steal = jax.jit(lambda q: q_ops.steal(q, p, max_steal=8192))
+    steal = jax.jit(lambda q: q_ops.steal(q, p, max_steal=8192,
+                                          use_kernel=use_kernel))
 
     def setup():
         return q0
@@ -63,13 +64,14 @@ def _bench_jax(p: float) -> float:
 def run() -> Table:
     t = Table(f"Fig. 7: steal latency (ns) vs proportion (initial {INITIAL})",
               "steal %", ["LF_Queue", "TF_UB-style", "TF_BD-style",
-                          "LFQ-JAX(dev)"])
+                          "LFQ-JAX(dev)", "LFQ-JAX(kernel)"])
     for p in PROPORTIONS:
         t.add(f"{int(p*100)}%", [
             _bench_host(LinkedWSQueue, p),
             _bench_host(PerItemDequeQueue, p),
             _bench_host(ResizingArrayQueue, p),
             _bench_jax(p),
+            _bench_jax(p, use_kernel=True),
         ])
     return t
 

@@ -23,7 +23,9 @@ def main():
     t0 = time.time()
     fig6_push.run().show()
     fig7_steal.run().show()
-    fig8_optimized_steal.run().show()
+    fig8_table, fig8b_table, _, _ = fig8_optimized_steal.run()
+    fig8_table.show()
+    fig8b_table.show()
     pop_parity.run().show()
     moe_steal.run().show()
     solver_scale.run().show()

@@ -49,6 +49,12 @@ def main():
           f"{args.workers} workers, {par_stats['supersteps']} supersteps, "
           f"{par_stats['transferred']} nodes bulk-stolen, {t_par:.1f}s)")
     print(f"per-worker explored: {par_stats['per_worker_explored']}")
+    tele = par_stats["telemetry"]
+    print(f"runtime telemetry: {tele['steals']} steals moved "
+          f"{tele['items_transferred']} nodes "
+          f"({tele['bytes_transferred']} B) over {tele['rounds']} rounds; "
+          f"adaptive proportion mean={tele['proportion_mean']:.3f} "
+          f"final={tele['proportion_final']:.3f}")
     assert seq_opt == expect == par_opt
 
 

@@ -6,15 +6,20 @@ BULK (one vectorized push); the virtual master (core.master.superstep)
 observes queue sizes and bulk-steals proportionally from busy workers to
 feed drained ones — the single-stealer, watermark-gated policy of §II.B.
 
-One solver superstep (jitted, vmapped over the worker axis — the same
-code shard_maps onto a mesh axis):
+The solver runs on :class:`repro.runtime.StealRuntime` — the unified
+executor — so its steal hot path is the same kernel-backed, adaptively
+tuned path the benchmarks and the serving scheduler exercise.  The
+per-worker body (vmapped over the worker axis; the same code shard_maps
+onto a mesh axis) is:
 
   1. pop_bulk(E)           — owner-side bulk pop
   2. explore_batch         — restricted/relaxed DD bounds + exact frontier
   3. pmax incumbent        — global bound (the master's bookkeeping)
   4. prune + compact       — children of dominated nodes are dropped
   5. push(children)        — owner-side bulk push
-  6. master.superstep      — proportional bulk-steal rebalancing
+
+and the runtime appends 6. master.superstep (proportional bulk-steal
+rebalancing with the adaptive proportion) and records telemetry.
 
 The incumbent is monotone and every subproblem is either solved exactly,
 pruned, or partitioned by its children, so the parallel solver returns
@@ -23,29 +28,22 @@ the same optimum as the sequential oracle (tests assert this).
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import master as master_ops
 from repro.core import queue as q_ops
 from repro.core.dd.bnb import Subproblem, explore_batch
 from repro.core.dd.diagram import NEG
 from repro.core.dd.knapsack import Knapsack
 from repro.core.policy import StealPolicy
-from repro.core.sharded_queue import make_sharded_queues
+from repro.runtime import StealRuntime
 
-__all__ = ["parallel_solve", "SolverState"]
+__all__ = ["parallel_solve"]
 
-
-class SolverState(NamedTuple):
-    queues: q_ops.QueueState     # stacked (W, ...) per-worker queues
-    incumbent: jnp.ndarray       # (W,) replicated scalar per worker
-    explored: jnp.ndarray        # (W,) counters
-    transferred: jnp.ndarray     # (W,) rebalance volume
+AXIS = "workers"
 
 
 def _item_spec():
@@ -53,61 +51,60 @@ def _item_spec():
     return {"layer": z, "state": z, "value": z}
 
 
-def _superstep(state: SolverState, weights, profits, *, explore_width: int,
-               batch: int, n_vars: int, policy: StealPolicy,
-               axis_name: str) -> SolverState:
-    """One worker's slice of the solver superstep (runs under vmap)."""
-    q = state.queues
-    # 1. bulk pop up to `batch` subproblems
-    q, items, n_popped = q_ops.pop_bulk(q, batch, jnp.int32(batch))
-    valid = jnp.arange(batch, dtype=jnp.int32) < n_popped
-    subs = Subproblem(layer=items["layer"], state=items["state"],
-                      value=items["value"])
+def _make_worker_body(weights, profits, *, explore_width: int, batch: int,
+                      n_vars: int):
+    """One worker's slice of the solver superstep (runs under vmap with
+    the runtime's axis name in scope)."""
 
-    # 2. explore
-    out = explore_batch(subs, valid, weights, profits,
-                        width=explore_width, n_vars=n_vars)
+    def body(q: q_ops.QueueState, carry):
+        # 1. bulk pop up to `batch` subproblems
+        q, items, n_popped = q_ops.pop_bulk(q, batch, jnp.int32(batch))
+        valid = jnp.arange(batch, dtype=jnp.int32) < n_popped
+        subs = Subproblem(layer=items["layer"], state=items["state"],
+                          value=items["value"])
 
-    # 3. global incumbent via the master's bookkeeping (all-reduce max)
-    local_best = jnp.maximum(state.incumbent, jnp.max(out["primal"]))
-    incumbent = lax.pmax(local_best, axis_name)
+        # 2. explore
+        out = explore_batch(subs, valid, weights, profits,
+                            width=explore_width, n_vars=n_vars)
 
-    # 4. prune: a subproblem's children survive iff dual > incumbent
-    keep = (out["dual"] > incumbent)[:, None]
-    ch = out["children"]
-    live = keep & (ch.layer >= 0)                  # (batch, width)
-    flat = {
-        "layer": ch.layer.reshape(-1),
-        "state": ch.state.reshape(-1),
-        "value": ch.value.reshape(-1),
-    }
-    flive = live.reshape(-1)
-    # compact live children to the front (single sort — bulk, no per-node op)
-    order = jnp.argsort(~flive, stable=True)
-    flat = jax.tree_util.tree_map(lambda x: x[order], flat)
-    n_children = jnp.sum(flive.astype(jnp.int32))
+        # 3. global incumbent via the master's bookkeeping (all-reduce max)
+        local_best = jnp.maximum(carry["incumbent"], jnp.max(out["primal"]))
+        incumbent = lax.pmax(local_best, AXIS)
 
-    # 5. bulk push
-    q, _ = q_ops.push(q, flat, n_children)
+        # 4. prune: a subproblem's children survive iff dual > incumbent
+        keep = (out["dual"] > incumbent)[:, None]
+        ch = out["children"]
+        live = keep & (ch.layer >= 0)                  # (batch, width)
+        flat = {
+            "layer": ch.layer.reshape(-1),
+            "state": ch.state.reshape(-1),
+            "value": ch.value.reshape(-1),
+        }
+        flive = live.reshape(-1)
+        # compact live children to the front (single sort — bulk, no
+        # per-node op)
+        order = jnp.argsort(~flive, stable=True)
+        flat = jax.tree_util.tree_map(lambda x: x[order], flat)
+        n_children = jnp.sum(flive.astype(jnp.int32))
 
-    # 6. master rebalancing round
-    q, stats = master_ops.superstep(q, policy, axis_name=axis_name)
+        # 5. bulk push (step 6, the rebalancing superstep, is appended by
+        # the runtime)
+        q, _ = q_ops.push(q, flat, n_children)
+        return q, {"incumbent": incumbent,
+                   "explored": carry["explored"] + n_popped}
 
-    return SolverState(
-        queues=q,
-        incumbent=incumbent,
-        explored=state.explored + n_popped,
-        transferred=state.transferred + stats.n_transferred,
-    )
+    return body
 
 
 def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
                    explore_width: int = 16, batch: int = 8,
                    capacity: int = 4096, policy: StealPolicy | None = None,
-                   max_supersteps: int = 10_000) -> Tuple[int, dict]:
-    """Solve on W vmapped workers (same superstep shard_maps onto a mesh).
+                   max_supersteps: int = 10_000, adaptive: bool = True,
+                   use_kernel: bool = True) -> Tuple[int, dict]:
+    """Solve on W executor lanes (the same round shard_maps onto a mesh).
 
-    Returns (optimum, stats).
+    Returns (optimum, stats); ``stats["telemetry"]`` carries the
+    runtime's per-round rebalancing summary.
     """
     policy = policy or StealPolicy(proportion=0.5, high_watermark=4,
                                    low_watermark=0,
@@ -115,40 +112,31 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
     w = jnp.asarray(inst.weights, jnp.int32)
     p = jnp.asarray(inst.profits, jnp.int32)
 
-    queues = make_sharded_queues(n_workers, capacity, _item_spec())
+    runtime = StealRuntime(n_workers, capacity, _item_spec(),
+                           policy=policy, adaptive=adaptive,
+                           use_kernel=use_kernel, axis_name=AXIS)
     # seed: root subproblem on worker 0
-    root = {"layer": jnp.zeros((n_workers, 1), jnp.int32),
-            "state": jnp.full((n_workers, 1), inst.capacity, jnp.int32),
-            "value": jnp.zeros((n_workers, 1), jnp.int32)}
-    seed_n = jnp.zeros((n_workers,), jnp.int32).at[0].set(1)
-    queues, _ = jax.vmap(q_ops.push)(queues, root, seed_n)
+    runtime.push(0, {"layer": jnp.zeros((1,), jnp.int32),
+                     "state": jnp.full((1,), inst.capacity, jnp.int32),
+                     "value": jnp.zeros((1,), jnp.int32)}, 1)
 
-    state = SolverState(
-        queues=queues,
-        incumbent=jnp.full((n_workers,), NEG, jnp.int32),
-        explored=jnp.zeros((n_workers,), jnp.int32),
-        transferred=jnp.zeros((n_workers,), jnp.int32),
-    )
-
-    step = jax.jit(jax.vmap(
-        functools.partial(_superstep, explore_width=explore_width,
-                          batch=batch, n_vars=inst.n, policy=policy,
-                          axis_name="workers"),
-        axis_name="workers",
-        in_axes=(0, None, None),
-    ), static_argnums=())
+    body = _make_worker_body(w, p, explore_width=explore_width, batch=batch,
+                             n_vars=inst.n)
+    carry = {"incumbent": jnp.full((n_workers,), NEG, jnp.int32),
+             "explored": jnp.zeros((n_workers,), jnp.int32)}
 
     supersteps = 0
     while supersteps < max_supersteps:
-        state = step(state, w, p)
+        carry, _ = runtime.round(body, carry)
         supersteps += 1
-        if int(jnp.sum(state.queues.size)) == 0:
+        if runtime.total_size() == 0:
             break
 
     stats = {
         "supersteps": supersteps,
-        "explored": int(jnp.sum(state.explored)),
-        "transferred": int(jnp.sum(state.transferred)) // max(n_workers, 1),
-        "per_worker_explored": [int(x) for x in state.explored],
+        "explored": int(jnp.sum(carry["explored"])),
+        "transferred": runtime.telemetry.total_transferred,
+        "per_worker_explored": [int(x) for x in carry["explored"]],
+        "telemetry": runtime.telemetry.summary(),
     }
-    return int(state.incumbent[0]), stats
+    return int(carry["incumbent"][0]), stats

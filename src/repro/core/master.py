@@ -71,7 +71,9 @@ def superstep(
     """One rebalancing round.  Must run inside ``shard_map`` (or
     ``vmap(axis_name=...)`` for host-side testing) over ``axis_name`` where
     each lane owns one :class:`QueueState`."""
-    n_workers = lax.axis_size(axis_name)
+    # psum of a literal folds to the static axis size (jax<0.5 has no
+    # lax.axis_size).
+    n_workers = lax.psum(1, axis_name)
     me = lax.axis_index(axis_name)
     idx = jnp.arange(n_workers, dtype=jnp.int32)
 
@@ -88,7 +90,11 @@ def superstep(
     thief_id = jnp.argmax(steals_me).astype(jnp.int32)  # 0 when none (amt==0)
 
     # (3) victim severs its tail block — single cursor bump linearizes.
-    q, block, n_out = q_ops.steal_exact(q, stolen_amt, max_steal=policy.max_steal)
+    # With policy.use_kernel the detach is the Pallas ring-gather kernel.
+    q, block, n_out = q_ops.steal_exact(
+        q, stolen_amt, max_steal=policy.max_steal,
+        use_kernel=policy.use_kernel,
+    )
 
     # Outbox: one row per peer, only the thief's row is populated.
     def _outbox(x):

@@ -30,6 +30,9 @@ class StealPolicy:
       high_watermark: a worker is a steal *victim* only above this.
       max_steal: static upper bound on a single bulk transfer (ring/buffer
         size on device).
+      use_kernel: route the victim-side block detach through the Pallas
+        ring-gather kernel (``repro.kernels.queue_steal``); falls back to
+        the jnp oracle on non-TPU backends or incompatible geometries.
     """
 
     proportion: float = 0.5
@@ -37,6 +40,7 @@ class StealPolicy:
     low_watermark: int = 1
     high_watermark: int = 8
     max_steal: int = 256
+    use_kernel: bool = False
 
 
 def proportional(p: float, **kw) -> StealPolicy:

@@ -48,7 +48,13 @@ __all__ = [
     "pop",
     "pop_bulk",
     "steal",
+    "steal_exact",
     "steal_counted",
+    "kernel_steal_available",
+    "inplace_ops",
+    "push_inplace",
+    "pop_bulk_inplace",
+    "steal_exact_inplace",
     "PagedQueue",
 ]
 
@@ -168,6 +174,45 @@ def pop_bulk(
 # ---------------------------------------------------------------------------
 
 
+def kernel_steal_available(capacity: int, max_steal: int) -> bool:
+    """Whether the Pallas ring-gather kernel can serve a steal of this
+    geometry (the kernel module owns the block-tiling rule)."""
+    from repro.kernels.queue_steal.kernel import ring_gather_supported
+
+    return ring_gather_supported(capacity, max_steal)
+
+
+def _gather_block(q: QueueState, n: jnp.ndarray, max_steal: int,
+                  use_kernel: bool) -> Pytree:
+    """Detach ``max_steal`` rows starting at ``lo`` (rows >= ``n`` zeroed).
+
+    ``use_kernel=True`` routes the copy through
+    :func:`repro.kernels.queue_steal.ops.steal_gather`: the Pallas TPU
+    kernel on TPU backends, the jnp oracle (``ref.py``) everywhere else —
+    the production steal hot path.  ``use_kernel=False`` keeps the
+    original inline gather (still used by the counted baseline so Fig. 8
+    measures what it claims to).
+    """
+    cap = _capacity(q)
+    if use_kernel and kernel_steal_available(cap, max_steal):
+        from repro.kernels.queue_steal.ops import steal_gather
+
+        return steal_gather(
+            q.buf, q.lo, n, max_steal=max_steal,
+            use_pallas=jax.default_backend() == "tpu",
+        )
+    offs = jnp.arange(max_steal, dtype=jnp.int32)
+    phys = (q.lo + offs) % cap
+    batch = jax.tree_util.tree_map(lambda b: b[phys], q.buf)
+    live = offs < n
+
+    def _mask(x):
+        shape = (max_steal,) + (1,) * (x.ndim - 1)
+        return jnp.where(live.reshape(shape), x, jnp.zeros_like(x))
+
+    return jax.tree_util.tree_map(_mask, batch)
+
+
 def _steal_plan(
     size: jnp.ndarray, proportion, queue_limit: int, max_steal: int
 ) -> jnp.ndarray:
@@ -192,6 +237,7 @@ def steal(
     *,
     max_steal: int,
     queue_limit: int = DEFAULT_QUEUE_LIMIT,
+    use_kernel: bool = False,
 ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
     """Bulk steal of ``~proportion`` of the queue from the tail (oldest side).
 
@@ -203,13 +249,13 @@ def steal(
 
     Returns ``(new_state, stolen_batch, n_stolen)``; leaves of
     ``stolen_batch`` have static leading dim ``max_steal`` with valid rows
-    ``[0, n_stolen)`` in queue order (oldest first).
+    ``[0, n_stolen)`` in queue order (oldest first); rows ``>= n_stolen``
+    are zeroed.  ``use_kernel=True`` moves the block through the Pallas
+    ring-gather kernel (see :func:`_gather_block`).
     """
     cap = _capacity(q)
     n = _steal_plan(q.size, proportion, queue_limit, max_steal)
-    offs = jnp.arange(max_steal, dtype=jnp.int32)
-    phys = (q.lo + offs) % cap
-    batch = jax.tree_util.tree_map(lambda b: b[phys], q.buf)
+    batch = _gather_block(q, n, max_steal, use_kernel)
     new_lo = (q.lo + n) % cap
     return QueueState(buf=q.buf, lo=new_lo, size=q.size - n), batch, n
 
@@ -219,23 +265,16 @@ def steal_exact(
     n: jnp.ndarray,
     *,
     max_steal: int,
+    use_kernel: bool = False,
 ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
     """Steal exactly ``n`` items (clamped to size / ``max_steal``) from the
     tail.  Used by the virtual master once the plan has fixed per-victim
     amounts; rows ``>= n`` of the returned batch are zeroed so the batch can
-    be moved through summing collectives safely."""
+    be moved through summing collectives safely.  ``use_kernel=True``
+    routes the block detach through the Pallas ring-gather kernel."""
     n = jnp.clip(jnp.asarray(n, jnp.int32), 0, jnp.minimum(q.size, max_steal))
     cap = _capacity(q)
-    offs = jnp.arange(max_steal, dtype=jnp.int32)
-    phys = (q.lo + offs) % cap
-    batch = jax.tree_util.tree_map(lambda b: b[phys], q.buf)
-    live = offs < n
-
-    def _mask(x):
-        shape = (max_steal,) + (1,) * (x.ndim - 1)
-        return jnp.where(live.reshape(shape), x, jnp.zeros_like(x))
-
-    batch = jax.tree_util.tree_map(_mask, batch)
+    batch = _gather_block(q, n, max_steal, use_kernel)
     new_lo = (q.lo + n) % cap
     return QueueState(buf=q.buf, lo=new_lo, size=q.size - n), batch, n
 
@@ -273,6 +312,61 @@ def steal_counted(
     # ``count == n`` always; fold the dead value in so the loop is not DCE'd.
     n = count + jnp.asarray(acc, jnp.int32) * 0
     return new_q, batch, n
+
+
+# ---------------------------------------------------------------------------
+# In-place (donating) entry points
+# ---------------------------------------------------------------------------
+#
+# The functional ops above copy-on-write the full-capacity ring every call
+# when used as plain host-called jits.  These wrappers jit them with the
+# queue state DONATED, so XLA aliases the input ring buffer to the output
+# ring buffer and the update lowers to an in-place scatter/cursor bump —
+# no full-capacity copy per superstep.  Semantics are identical (tests
+# assert equivalence); the only behavioural difference is that the caller
+# must not reuse the donated input state afterwards.  Donation is a no-op
+# (with identical results) on backends that don't implement it (CPU).
+
+
+class InPlaceOps(NamedTuple):
+    push: Any
+    pop: Any
+    pop_bulk: Any
+    steal: Any
+    steal_exact: Any
+
+
+@functools.lru_cache(maxsize=None)
+def inplace_ops() -> InPlaceOps:
+    """Jitted, donation-enabled variants of the queue ops (cached)."""
+    donate = () if jax.default_backend() == "cpu" else (0,)
+    return InPlaceOps(
+        push=jax.jit(push, donate_argnums=donate),
+        pop=jax.jit(pop, donate_argnums=donate),
+        pop_bulk=jax.jit(pop_bulk, static_argnums=(1,),
+                         donate_argnums=donate),
+        steal=jax.jit(steal,
+                      static_argnames=("max_steal", "queue_limit",
+                                       "use_kernel"),
+                      donate_argnums=donate),
+        steal_exact=jax.jit(steal_exact,
+                            static_argnames=("max_steal", "use_kernel"),
+                            donate_argnums=donate),
+    )
+
+
+def push_inplace(q: QueueState, batch: Pytree, n) -> Tuple[QueueState, jnp.ndarray]:
+    return inplace_ops().push(q, batch, n)
+
+
+def pop_bulk_inplace(q: QueueState, max_n: int, n) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    return inplace_ops().pop_bulk(q, max_n, n)
+
+
+def steal_exact_inplace(q: QueueState, n, *, max_steal: int,
+                        use_kernel: bool = False):
+    return inplace_ops().steal_exact(q, n, max_steal=max_steal,
+                                     use_kernel=use_kernel)
 
 
 # ---------------------------------------------------------------------------

@@ -28,9 +28,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["ring_gather", "DEFAULT_BLOCK"]
+__all__ = ["ring_gather", "ring_gather_supported", "DEFAULT_BLOCK"]
 
 DEFAULT_BLOCK = 128
+
+
+def ring_gather_supported(capacity: int, max_steal: int, *,
+                          block: int = DEFAULT_BLOCK) -> bool:
+    """Whether :func:`ring_gather` admits this geometry.  Mirrors the
+    block selection below: the ring and the transfer buffer must both be
+    whole numbers of (possibly shrunken) blocks.  Callers use this to
+    fall back to the jnp oracle instead of tripping the kernel assert."""
+    block = min(block, max_steal, capacity)
+    return block > 0 and capacity % block == 0 and max_steal % block == 0
 
 
 def _kernel(lo_ref, n_ref, a_ref, b_ref, o_ref, *, block: int, width: int):

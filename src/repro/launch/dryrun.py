@@ -180,8 +180,9 @@ def _cost_points(cfg: ModelConfig):
 
 
 def _cost_dict(compiled, hlo, n_devices):
-    ca = compiled.cost_analysis() or {}
-    from repro.launch.roofline import collective_bytes
+    from repro.launch.roofline import collective_bytes, normalize_cost_analysis
+
+    ca = normalize_cost_analysis(compiled.cost_analysis())
 
     d = {"flops": float(ca.get("flops", 0.0)),
          "bytes": float(ca.get("bytes accessed", 0.0))}

@@ -27,13 +27,36 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HW", "RooflineReport", "analyze_compiled", "collective_bytes"]
+__all__ = ["HW", "RooflineReport", "analyze_compiled", "collective_bytes",
+           "normalize_cost_analysis"]
 
 PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip
 ICI_BW = 50e9              # bytes/s per link
 
 HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    jax <= 0.4.30 returns a flat dict, jax 0.4.31+ (incl. 0.4.37) returns
+    a *list* with one dict per program, and either may be ``None``/empty.
+    Returns one flat dict (numeric values summed across programs) so
+    callers can ``.get("flops", 0)`` unconditionally.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    out: Dict[str, float] = {}
+    for entry in ca:  # list/tuple of per-program dicts
+        for k, v in (entry or {}).items():
+            if isinstance(v, (int, float)) and k in out:
+                out[k] += v
+            else:
+                out[k] = v
+    return out
+
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -162,7 +185,7 @@ class RooflineReport:
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      n_devices: int, model_flops: float,
                      hlo_text: Optional[str] = None) -> RooflineReport:
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -1,0 +1,46 @@
+"""Unified work-stealing runtime: one entry point for every workload.
+
+This package is the production layer over the paper's data structure and
+virtual master.  It exists so that the DAG solver, the serving scheduler
+and the benchmarks all drive the *same* steal hot path — the Pallas
+ring-gather kernel — instead of each consumer re-wiring
+``core.queue``/``core.master`` by hand:
+
+* :class:`~repro.runtime.executor.StealRuntime` owns a stack of
+  per-worker queues (``core.sharded_queue``) and runs
+  ``master.superstep`` / ``hierarchical_superstep`` rounds over them,
+  optionally interleaved with a user worker body (pop → compute → push).
+* :class:`~repro.runtime.adaptive.AdaptiveController` replaces the
+  static ``StealPolicy.proportion`` with a feedback loop on the observed
+  queue-size imbalance (``RebalanceStats``), fed back as a *traced*
+  scalar so re-tuning never recompiles.
+* :mod:`~repro.runtime.telemetry` records per-round steal counts,
+  transfer bytes and queue-depth histograms.
+
+How the paper's single-stealer invariant is preserved
+-----------------------------------------------------
+The paper requires one owner and (at most) one concurrent stealer per
+queue (§II.B).  The executor enforces this at *superstep granularity*:
+within one round, a lane's owner ops (the worker body's ``pop_bulk`` /
+``push``) complete before the replicated master plan severs at most ONE
+tail block per victim (``plan_transfers`` pairs each victim with exactly
+one thief), and the spliced inbox lands after the cut.  Because the
+whole round is a single deterministic collective schedule, owner and
+stealer can never interleave *within* a round, so the paper's
+acquire/release and drain re-check machinery is unnecessary — the
+conservation property (no task lost or duplicated) is asserted by
+``tests/test_runtime.py`` across arbitrary adaptive rounds.
+"""
+
+from repro.runtime.adaptive import AdaptiveConfig, AdaptiveController
+from repro.runtime.executor import StealRuntime
+from repro.runtime.telemetry import RoundRecord, Telemetry, item_nbytes
+
+__all__ = [
+    "AdaptiveConfig",
+    "AdaptiveController",
+    "StealRuntime",
+    "RoundRecord",
+    "Telemetry",
+    "item_nbytes",
+]

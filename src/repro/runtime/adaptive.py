@@ -1,0 +1,72 @@
+"""Adaptive steal-proportion control for the executor.
+
+The paper's ``steal(p)`` takes a static proportion; §V cites
+Adnan-Sato-style dynamic chunk sizing as the natural extension.  Here the
+master's observed queue sizes (``RebalanceStats.sizes_after``) feed a
+small host-side controller that servos the proportion toward
+``core.policy.adaptive_chunk``'s idle/busy-ratio target:
+
+* many idle workers + few victims -> steal a larger fraction so one
+  round can feed several drained lanes from one victim;
+* few idle workers -> steal less, preserving victim locality (the
+  paper's argument for leaving the owner's hot head intact).
+
+The proportion is fed into the jitted superstep as a *traced* scalar
+(see ``executor.StealRuntime``), so updating it never recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.policy import StealPolicy, adaptive_chunk
+
+__all__ = ["AdaptiveConfig", "AdaptiveController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Controller bounds and dynamics.
+
+    Attributes:
+      min_proportion / max_proportion: clamp range (the paper's Fig. 7/8
+        sweep stays within [0.1, 0.6]; stealing > 3/4 would invert the
+        imbalance).
+      gain: first-order smoothing toward the target (1.0 = jump straight
+        to the target each round).
+    """
+
+    min_proportion: float = 0.125
+    max_proportion: float = 0.75
+    gain: float = 0.5
+
+
+class AdaptiveController:
+    """Servo ``proportion`` from observed queue-size imbalance."""
+
+    def __init__(self, policy: StealPolicy,
+                 config: Optional[AdaptiveConfig] = None):
+        self.policy = policy
+        self.config = config or AdaptiveConfig()
+        self.proportion = float(policy.proportion)
+        self.history: List[float] = [self.proportion]
+
+    def update(self, sizes) -> float:
+        """One feedback step from the post-round size vector."""
+        sizes = np.asarray(sizes)
+        n_idle = int(np.sum(sizes <= self.policy.low_watermark))
+        n_busy = int(np.sum(sizes >= self.policy.high_watermark))
+        if n_idle > 0 and n_busy > 0:
+            target = adaptive_chunk(n_idle, n_busy,
+                                    base=self.policy.proportion)
+            cfg = self.config
+            p = self.proportion + cfg.gain * (target - self.proportion)
+            self.proportion = float(
+                min(max(p, cfg.min_proportion), cfg.max_proportion))
+        # Otherwise the plan pairs no (victim, thief) this round — there is
+        # no transfer to size, so hold rather than servo on zero signal.
+        self.history.append(self.proportion)
+        return self.proportion

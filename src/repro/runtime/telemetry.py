@@ -1,0 +1,107 @@
+"""Per-round observability for the steal runtime.
+
+Host-side, numpy-only (it must also serve the serving controller, which
+never touches a device): each rebalancing round appends one
+:class:`RoundRecord` with the steal count, items/bytes moved, the
+queue-depth histogram and imbalance statistics.  ``summary()`` collapses
+the log into the numbers EXPERIMENTS.md wants (total transfer volume,
+mean/final proportion, final imbalance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["item_nbytes", "RoundRecord", "Telemetry"]
+
+
+def item_nbytes(item_spec: Any) -> int:
+    """Bytes per queue item: sum over payload-pytree leaves."""
+    import jax
+    import jax.numpy as jnp
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(item_spec):
+        total += int(np.prod(leaf.shape, dtype=np.int64)) * jnp.dtype(
+            leaf.dtype).itemsize
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    """One rebalancing round, as observed by the master."""
+
+    round: int
+    proportion: float          # steal proportion used THIS round
+    n_steals: int              # victim->thief transfers planned
+    n_transferred: int         # items moved
+    transfer_bytes: int        # payload bytes moved
+    sizes_total: int
+    sizes_max: int
+    sizes_mean: float
+    depth_hist: Sequence[int]  # queue-depth histogram over workers
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean load ratio (1.0 = perfectly balanced)."""
+        return self.sizes_max / self.sizes_mean if self.sizes_mean else 0.0
+
+
+class Telemetry:
+    """Append-only per-round log + aggregate summary."""
+
+    def __init__(self, item_bytes: int = 1, capacity: Optional[int] = None,
+                 n_bins: int = 8):
+        self.item_bytes = int(item_bytes)
+        self.capacity = capacity
+        self.n_bins = n_bins
+        self.rounds: List[RoundRecord] = []
+
+    def record(self, *, sizes, n_steals: int, n_transferred: int,
+               proportion: float) -> RoundRecord:
+        sizes = np.asarray(sizes)
+        hi = self.capacity if self.capacity else max(int(sizes.max()), 1)
+        hist, _ = np.histogram(sizes, bins=self.n_bins, range=(0, hi))
+        rec = RoundRecord(
+            round=len(self.rounds),
+            proportion=float(proportion),
+            n_steals=int(n_steals),
+            n_transferred=int(n_transferred),
+            transfer_bytes=int(n_transferred) * self.item_bytes,
+            sizes_total=int(sizes.sum()),
+            sizes_max=int(sizes.max()) if sizes.size else 0,
+            sizes_mean=float(sizes.mean()) if sizes.size else 0.0,
+            depth_hist=tuple(int(x) for x in hist),
+        )
+        self.rounds.append(rec)
+        return rec
+
+    # -- aggregates ----------------------------------------------------------
+
+    @property
+    def total_steals(self) -> int:
+        return sum(r.n_steals for r in self.rounds)
+
+    @property
+    def total_transferred(self) -> int:
+        return sum(r.n_transferred for r in self.rounds)
+
+    @property
+    def total_transfer_bytes(self) -> int:
+        return sum(r.transfer_bytes for r in self.rounds)
+
+    def summary(self) -> Dict[str, Any]:
+        props = [r.proportion for r in self.rounds]
+        return {
+            "rounds": len(self.rounds),
+            "steals": self.total_steals,
+            "items_transferred": self.total_transferred,
+            "bytes_transferred": self.total_transfer_bytes,
+            "proportion_mean": float(np.mean(props)) if props else 0.0,
+            "proportion_final": props[-1] if props else 0.0,
+            "imbalance_final": self.rounds[-1].imbalance if self.rounds
+            else 0.0,
+        }

@@ -13,7 +13,11 @@ The paper's master-worker discipline applied to inference admission:
   locality-aware redistribution argument, §II.B).
 
 Queues are the faithful host port (LinkedWSQueue) — this scheduler runs
-on the serving controller host, not on the accelerator.
+on the serving controller host, not on the accelerator.  The steal
+proportion and observability come from the same runtime layer the
+device executor uses (``repro.runtime.adaptive`` / ``.telemetry``): the
+master servos its proportion on the observed queue imbalance and logs
+per-round steal counts and depth histograms.
 """
 
 from __future__ import annotations
@@ -24,6 +28,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.host_queue import LinkedWSQueue, llist_from_iter
 from repro.core.policy import StealPolicy
+from repro.runtime.adaptive import AdaptiveConfig, AdaptiveController
+from repro.runtime.telemetry import Telemetry
 
 __all__ = ["Request", "ReplicaQueue", "AdmissionMaster"]
 
@@ -66,13 +72,23 @@ class ReplicaQueue:
 class AdmissionMaster:
     """The single stealer + admission router."""
 
-    def __init__(self, n_replicas: int, policy: Optional[StealPolicy] = None):
+    def __init__(self, n_replicas: int, policy: Optional[StealPolicy] = None,
+                 adaptive: bool = True,
+                 adaptive_config: Optional[AdaptiveConfig] = None):
         self.replicas = [ReplicaQueue(i) for i in range(n_replicas)]
         self.policy = policy or StealPolicy(proportion=0.5,
                                             low_watermark=1,
                                             high_watermark=8)
+        self.controller = (AdaptiveController(self.policy, adaptive_config)
+                           if adaptive else None)
+        self.telemetry = Telemetry()  # item_bytes unknown host-side: counts
         self.stolen = 0
         self.rounds = 0
+
+    @property
+    def proportion(self) -> float:
+        return (self.controller.proportion if self.controller
+                else self.policy.proportion)
 
     # -- admission -----------------------------------------------------------
 
@@ -92,6 +108,7 @@ class AdmissionMaster:
         round (single-stealer invariant)."""
         self.rounds += 1
         pol = self.policy
+        proportion = self.proportion
         idle = sorted((r for r in self.replicas
                        if len(r.q) <= pol.low_watermark),
                       key=lambda r: r.load())
@@ -99,8 +116,9 @@ class AdmissionMaster:
                        if len(r.q) >= pol.high_watermark),
                       key=lambda r: -len(r.q))
         moved = 0
+        n_steals = 0
         for thief, victim in zip(idle, busy):
-            begin, _, count = victim.q.steal_optimized(pol.proportion)
+            begin, _, count = victim.q.steal_optimized(proportion)
             if not count:
                 continue
             stolen = []
@@ -110,7 +128,13 @@ class AdmissionMaster:
                 node = node.next
             thief.q.push(llist_from_iter(reversed(stolen)))
             moved += count
+            n_steals += 1
         self.stolen += moved
+        sizes = [len(r.q) for r in self.replicas]
+        self.telemetry.record(sizes=sizes, n_steals=n_steals,
+                              n_transferred=moved, proportion=proportion)
+        if self.controller is not None:
+            self.controller.update(sizes)
         return moved
 
     def stats(self) -> Dict:
@@ -120,4 +144,6 @@ class AdmissionMaster:
             "completed": [r.completed for r in self.replicas],
             "stolen": self.stolen,
             "rounds": self.rounds,
+            "proportion": self.proportion,
+            "telemetry": self.telemetry.summary(),
         }

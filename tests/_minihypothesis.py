@@ -1,0 +1,154 @@
+"""Dependency-free stand-in for the slice of the ``hypothesis`` API this
+suite uses, so the property tests still *run* (not just skip) on minimal
+environments without network access.
+
+Covered: ``given``, ``settings(max_examples=..., deadline=...)`` and the
+strategies ``integers, floats, booleans, just, sampled_from, one_of,
+lists, tuples``.  Not covered (by design): shrinking, the example
+database, ``assume``, stateful testing.  Examples are drawn from an RNG
+seeded by the test's qualified name, so runs are deterministic and a
+failure reproduces; the falsifying example is appended to the raised
+error.
+
+``install()`` registers this module as ``hypothesis`` /
+``hypothesis.strategies`` in ``sys.modules``; ``tests/conftest.py`` calls
+it only when the real package is missing, so a real hypothesis install
+always wins.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class Strategy:
+    """A strategy is just a draw function ``Random -> value``."""
+
+    def __init__(self, draw, label: str = "strategy"):
+        self._draw = draw
+        self._label = label
+
+    def __repr__(self):
+        return f"<mini {self._label}>"
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda r: r.randint(min_value, max_value),
+                    f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, **_kw) -> Strategy:
+    return Strategy(lambda r: r.uniform(min_value, max_value),
+                    f"floats({min_value}, {max_value})")
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda r: bool(r.getrandbits(1)), "booleans()")
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda r: value, f"just({value!r})")
+
+
+def sampled_from(seq) -> Strategy:
+    seq = list(seq)
+    return Strategy(lambda r: r.choice(seq), f"sampled_from({seq!r})")
+
+
+def one_of(*strategies) -> Strategy:
+    if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+        strategies = tuple(strategies[0])
+    return Strategy(lambda r: r.choice(strategies)._draw(r), "one_of(...)")
+
+
+def lists(elements: Strategy, *, min_size: int = 0, max_size: int = 10,
+          **_kw) -> Strategy:
+    return Strategy(
+        lambda r: [elements._draw(r)
+                   for _ in range(r.randint(min_size, max_size))],
+        "lists(...)")
+
+
+def tuples(*elements: Strategy) -> Strategy:
+    return Strategy(lambda r: tuple(e._draw(r) for e in elements),
+                    "tuples(...)")
+
+
+class settings:
+    """Decorator recording run options; composes with ``given`` in either
+    order (it only sets an attribute the ``given`` wrapper reads)."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_kw):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._mh_settings = self
+        return fn
+
+
+def given(*strategies: Strategy, **kw_strategies: Strategy):
+    def decorate(fn):
+        # Like hypothesis, positional strategies fill the RIGHTMOST
+        # parameters; bind them by name so pytest fixtures occupying the
+        # left positions can't collide with drawn examples.
+        param_names = list(inspect.signature(fn).parameters)
+        strat_names = (param_names[len(param_names) - len(strategies):]
+                       if strategies else [])
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            opts = (getattr(wrapper, "_mh_settings", None)
+                    or getattr(fn, "_mh_settings", None))
+            n = opts.max_examples if opts else DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                example = {name: s._draw(rng)
+                           for name, s in zip(strat_names, strategies)}
+                example.update({k: s._draw(rng)
+                                for k, s in kw_strategies.items()})
+                try:
+                    fn(*args, **kwargs, **example)
+                except Exception as e:
+                    msg = (f"[minihypothesis] falsifying example "
+                           f"(#{i + 1}/{n}): {example!r}")
+                    e.args = ((f"{e.args[0]}\n{msg}" if e.args else msg),
+                              *e.args[1:])
+                    raise
+
+        # Hide the strategy-bound parameters from pytest's fixture
+        # resolution: like hypothesis, positional strategies fill the
+        # RIGHTMOST parameters; anything left is a fixture.
+        params = list(inspect.signature(fn).parameters.values())
+        if strategies:
+            params = params[:-len(strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register as ``hypothesis`` + ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.__version__ = "0.0-mini"
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from",
+                 "one_of", "lists", "tuples"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -4,6 +4,8 @@ parallel == sequential."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # real install or conftest's mini-shim
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dd.bnb import solve

@@ -3,6 +3,8 @@
 import threading
 
 import pytest
+
+pytest.importorskip("hypothesis")  # real install or conftest's mini-shim
 from hypothesis import given, settings, strategies as st
 
 from repro.core.host_queue import (

@@ -7,6 +7,9 @@ disabling the steal reproduces the GShard drop baseline."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # real install or conftest's mini-shim
 from hypothesis import given, settings, strategies as st
 
 from repro.models.moe import route_with_bulk_steal

@@ -1,0 +1,203 @@
+"""The unified runtime: executor conservation across adaptive rounds,
+kernel-path parity (dynamic ``lo`` straddling block boundaries), and
+in-place vs. functional queue-op equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import queue as q_ops
+from repro.core.policy import StealPolicy
+from repro.kernels.queue_steal.kernel import DEFAULT_BLOCK
+from repro.kernels.queue_steal.ops import steal_gather
+from repro.kernels.queue_steal.ref import ring_gather_ref
+from repro.runtime import AdaptiveConfig, StealRuntime
+
+SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def _seed(rt, sizes):
+    """Fill lane i with ``sizes[i]`` distinct ids; returns the id set."""
+    nxt = 1
+    for i, n in enumerate(sizes):
+        if n:
+            rt.push(i, jnp.arange(nxt, nxt + n, dtype=jnp.int32), n)
+            nxt += n
+    return set(range(1, nxt))
+
+
+def _drained_ids(rt):
+    return sorted(int(x) for lane in rt.drain() for x in lane)
+
+
+# ------------------------------------------------------------- conservation
+
+
+@pytest.mark.parametrize("sizes,rounds", [
+    ([40, 0, 0, 0], 5),
+    ([0, 17, 3, 25, 0, 9], 4),
+    ([100, 0, 0, 0, 0, 0, 0, 0], 8),
+])
+def test_executor_conserves_tasks_across_adaptive_rounds(sizes, rounds):
+    """No task lost or duplicated while the controller re-tunes the
+    proportion every round (traced scalar => same compiled round)."""
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32)
+    rt = StealRuntime(len(sizes), 128, SPEC, policy=pol, adaptive=True)
+    ids = _seed(rt, sizes)
+    props = set()
+    for _ in range(rounds):
+        props.add(rt.proportion)
+        rt.round()
+    assert _drained_ids(rt) == sorted(ids)
+    # the controller actually moved (imbalanced seed => feedback signal)
+    assert len(rt.controller.history) == rounds + 1
+    assert rt.telemetry.summary()["rounds"] == rounds
+
+
+def test_executor_conserves_with_worker_body():
+    """Conservation holds when a worker body pops/pushes between steals
+    (ids are consumed exactly once across lanes)."""
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=6,
+                      max_steal=16)
+    W = 4
+    rt = StealRuntime(W, 128, SPEC, policy=pol)
+    ids = _seed(rt, [30, 0, 0, 0])
+
+    def body(q, carry):
+        q, item, valid = q_ops.pop(q)
+        carry = carry + jnp.where(valid, item, 0)
+        return q, carry
+
+    carry = jnp.zeros((W,), jnp.int32)
+    for _ in range(60):
+        carry, _ = rt.round(body, carry)
+        if rt.total_size() == 0:
+            break
+    assert rt.total_size() == 0
+    # sum of consumed ids == sum of produced ids (nothing lost/dup'd)
+    assert int(jnp.sum(carry)) == sum(ids)
+
+
+def test_executor_hierarchical_conserves():
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32)
+    rt = StealRuntime(8, 128, SPEC, policy=pol, pod_size=4)
+    ids = _seed(rt, [50, 0, 0, 0, 0, 12, 0, 0])
+    for _ in range(5):
+        rt.round()
+    assert _drained_ids(rt) == sorted(ids)
+
+
+def test_executor_spreads_load():
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=64)
+    rt = StealRuntime(8, 256, SPEC, policy=pol,
+                      adaptive_config=AdaptiveConfig(gain=1.0))
+    _seed(rt, [100, 0, 0, 0, 0, 0, 0, 0])
+    for _ in range(6):
+        rt.round()
+    s = rt.sizes()
+    assert s.sum() == 100
+    assert (s > 0).sum() >= 4
+    assert rt.telemetry.total_transferred > 0
+
+
+# ----------------------------------------------- kernel path: block straddle
+
+
+STRADDLE_CASES = [
+    # (cap, width, max_steal, lo, n) — lo chosen to straddle the
+    # DEFAULT_BLOCK-aligned DMA windows of the Pallas kernel
+    (512, 8, 256, DEFAULT_BLOCK - 1, 200),
+    (512, 8, 256, DEFAULT_BLOCK + 1, 256),
+    (512, 8, 512, 2 * DEFAULT_BLOCK - 7, 300),   # wraps past cap
+    (256, 4, 256, 255, 129),                      # full wrap from last row
+    (1024, 16, 256, 3 * DEFAULT_BLOCK + 63, 255),
+]
+
+
+@pytest.mark.parametrize("case", STRADDLE_CASES)
+def test_ring_gather_interpret_parity_straddling_blocks(case):
+    cap, width, max_steal, lo, n = case
+    buf = jax.random.normal(jax.random.PRNGKey(7), (cap, width), jnp.float32)
+    out_k = steal_gather(buf, jnp.int32(lo), jnp.int32(n),
+                         max_steal=max_steal, use_pallas=True,
+                         interpret=True)
+    out_r = ring_gather_ref(buf, lo, n, max_steal)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("lo,n", [(120, 60), (250, 200), (0, 0)])
+def test_steal_exact_kernel_route_matches_plain(lo, n):
+    """core.queue.steal_exact(use_kernel=True) == the plain gather for
+    dynamic lo (the dispatcher picks ref on CPU, Pallas on TPU)."""
+    cap, max_steal = 256, 128
+    q = q_ops.QueueState(
+        buf={"a": jnp.arange(cap, dtype=jnp.int32),
+             "b": jnp.arange(cap * 2, dtype=jnp.float32).reshape(cap, 2)},
+        lo=jnp.int32(lo), size=jnp.int32(min(cap, 220)))
+    q1, b1, n1 = q_ops.steal_exact(q, jnp.int32(n), max_steal=max_steal)
+    q2, b2, n2 = q_ops.steal_exact(q, jnp.int32(n), max_steal=max_steal,
+                                   use_kernel=True)
+    assert int(n1) == int(n2)
+    assert int(q1.lo) == int(q2.lo) and int(q1.size) == int(q2.size)
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+
+
+def test_kernel_steal_available_geometry():
+    assert q_ops.kernel_steal_available(512, 256)
+    assert q_ops.kernel_steal_available(256, 128)
+    assert q_ops.kernel_steal_available(64, 32)       # block shrinks to 32
+    assert not q_ops.kernel_steal_available(500, 256)  # cap not block-aligned
+    assert not q_ops.kernel_steal_available(512, 200)  # max_steal unaligned
+
+
+# ------------------------------------------- in-place vs functional parity
+
+
+def test_inplace_ops_match_functional():
+    b = jnp.arange(1, 17, dtype=jnp.int32)
+    q_f = q_ops.make_queue(64, SPEC)
+    q_i = q_ops.make_queue(64, SPEC)
+
+    q_f, n_f = q_ops.push(q_f, b, jnp.int32(10))
+    q_i, n_i = q_ops.push_inplace(q_i, b, jnp.int32(10))
+    assert int(n_f) == int(n_i) == 10
+
+    q_f, blk_f, p_f = q_ops.pop_bulk(q_f, 8, jnp.int32(3))
+    q_i, blk_i, p_i = q_ops.pop_bulk_inplace(q_i, 8, jnp.int32(3))
+    assert int(p_f) == int(p_i)
+    np.testing.assert_array_equal(np.asarray(blk_f), np.asarray(blk_i))
+
+    q_f, s_f, ns_f = q_ops.steal_exact(q_f, jnp.int32(4), max_steal=8)
+    q_i, s_i, ns_i = q_ops.steal_exact_inplace(q_i, jnp.int32(4),
+                                               max_steal=8)
+    assert int(ns_f) == int(ns_i)
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_i))
+    assert int(q_f.lo) == int(q_i.lo) and int(q_f.size) == int(q_i.size)
+    np.testing.assert_array_equal(np.asarray(q_f.buf), np.asarray(q_i.buf))
+
+
+# ----------------------------------------------------------- adaptive servo
+
+
+def test_adaptive_controller_tracks_imbalance():
+    from repro.runtime.adaptive import AdaptiveController
+
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=8)
+    ctl = AdaptiveController(pol, AdaptiveConfig(gain=1.0))
+    # many idle, one busy -> target rises toward max
+    p_hungry = ctl.update(np.array([100, 0, 0, 0, 0, 0, 0, 0]))
+    assert p_hungry > 0.5
+    # one idle of many busy -> steal only a small slice per round
+    p_calm = ctl.update(np.array([30, 30, 30, 30, 30, 30, 30, 0]))
+    assert p_calm < p_hungry
+    # balanced above watermarks -> no possible transfer -> hold
+    held = ctl.update(np.array([10, 10, 10, 10, 10, 10, 10, 10]))
+    assert held == p_calm
+    # nothing stealable -> hold
+    held2 = ctl.update(np.array([2, 2, 2, 2, 2, 2, 2, 2]))
+    assert held2 == p_calm

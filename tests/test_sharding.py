@@ -17,6 +17,7 @@ _SCRIPT = textwrap.dedent("""
 
     from repro import configs
     from repro.configs.base import ParallelConfig, ShapeConfig
+    from repro.launch.roofline import normalize_cost_analysis
     from repro.models import build_model
     from repro.models.zoo import input_specs
     from repro.train.optimizer import AdamWConfig, adamw_init, opt_state_specs
@@ -47,7 +48,7 @@ _SCRIPT = textwrap.dedent("""
                           ns(ps)),
         ).lower(params_sds, opt_sds, sds)
         compiled = lowered.compile()
-        ca = compiled.cost_analysis()
+        ca = normalize_cost_analysis(compiled.cost_analysis())
     assert ca.get("flops", 0) > 0
     print("SHARDED-OK", arch, int(ca["flops"]))
 """)
