@@ -9,11 +9,20 @@ sharply.  Columns:
   TF_BD-style   — resizing circular array (bounded baseline)
   LFQ-JAX(dev)  — this framework's device ring queue (jitted masked
                   scatter; one fused kernel regardless of batch size)
+  LFQ-JAX(kern) — the same push routed through the queue_push
+                  ring-scatter kernel path (Pallas on TPU — an in-place
+                  aliased splice — the jnp oracle elsewhere)
+
+The kernel column is the acceptance gate for the fused-superstep PR:
+its latency must stay flat (<= 1.5x from batch 1 to 1024); ``run()``
+returns the raw numbers so ``benchmarks/run.py --json`` can record the
+ratio in BENCH_PR2.json.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +33,10 @@ from repro.core.host_queue import (LinkedWSQueue, PerItemDequeQueue,
 from repro.core import queue as q_ops
 
 BATCHES = (1, 128, 512, 1024)
+CAPACITY = 4096
 
 
-def _bench_host(cls, batch: int) -> float:
+def _bench_host(cls, batch: int, repeats: int = 200) -> float:
     payload = list(range(batch))
 
     if cls is LinkedWSQueue:
@@ -42,14 +52,16 @@ def _bench_host(cls, batch: int) -> float:
 
         def op(q):
             q.push(payload)
-    return time_ns(setup, op)
+    return time_ns(setup, op, repeats=repeats)
 
 
-def _bench_jax(batch: int) -> float:
+def _bench_jax(batch: int, use_kernel: bool = False,
+               repeats: int = 100) -> float:
     spec = jnp.zeros((), jnp.int32)
-    q0 = q_ops.make_queue(4096, spec)
+    q0 = q_ops.make_queue(CAPACITY, spec)
     items = jnp.arange(batch, dtype=jnp.int32)
-    push = jax.jit(q_ops.push).lower(q0, items, jnp.int32(batch)).compile()
+    fn = functools.partial(q_ops.push, use_kernel=use_kernel)
+    push = jax.jit(fn).lower(q0, items, jnp.int32(batch)).compile()
 
     def setup():
         return q0
@@ -58,22 +70,46 @@ def _bench_jax(batch: int) -> float:
         st, _ = push(q, items, jnp.int32(batch))
         jax.block_until_ready(st.size)
 
-    return time_ns(setup, op, repeats=100)
+    return time_ns(setup, op, repeats=repeats)
 
 
-def run() -> Table:
+def run(tiny: bool = False) -> Tuple[Table, Dict]:
     t = Table("Fig. 6: push latency (ns) vs batch size",
               "batch", ["LF_Queue", "TF_UB-style", "TF_BD-style",
-                        "LFQ-JAX(dev)"])
+                        "LFQ-JAX(dev)", "LFQ-JAX(kern)"])
+    repeats = 20 if tiny else 200
+    jrepeats = 20 if tiny else 100
+    data: Dict = {"batches": list(BATCHES), "columns": {}}
+    cols = {
+        "LF_Queue": lambda b: _bench_host(LinkedWSQueue, b, repeats),
+        "TF_UB-style": lambda b: _bench_host(PerItemDequeQueue, b, repeats),
+        "TF_BD-style": lambda b: _bench_host(ResizingArrayQueue, b, repeats),
+        "LFQ-JAX(dev)": lambda b: _bench_jax(b, repeats=jrepeats),
+        "LFQ-JAX(kern)": lambda b: _bench_jax(b, use_kernel=True,
+                                              repeats=jrepeats),
+    }
+    for name in cols:
+        data["columns"][name] = []
     for b in BATCHES:
-        t.add(b, [
-            _bench_host(LinkedWSQueue, b),
-            _bench_host(PerItemDequeQueue, b),
-            _bench_host(ResizingArrayQueue, b),
-            _bench_jax(b),
-        ])
-    return t
+        row = []
+        for name, bench in cols.items():
+            ns = bench(b)
+            data["columns"][name].append(ns)
+            row.append(ns)
+        t.add(b, row)
+    kern = data["columns"]["LFQ-JAX(kern)"]
+    data["kernel_flatness_1_to_1024"] = kern[-1] / max(kern[0], 1.0)
+    # Off-TPU the kernel column measures the dispatcher's oracle path
+    # (ring_scatter_ref — same structure, O(capacity) splice); record
+    # which path produced the numbers so BENCH_PR2.json is unambiguous.
+    data["kernel_column_path"] = ("pallas"
+                                  if jax.default_backend() == "tpu"
+                                  else "oracle")
+    return t, data
 
 
 if __name__ == "__main__":
-    run().show()
+    table, data = run()
+    table.show()
+    print(f"kernel flatness batch 1 -> {BATCHES[-1]}: "
+          f"{data['kernel_flatness_1_to_1024']:.2f}x")

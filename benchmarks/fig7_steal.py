@@ -8,6 +8,8 @@ linearly with the stolen count.  LFQ-JAX(dev) is the device ring gather.
 
 from __future__ import annotations
 
+from typing import Dict, Tuple
+
 import jax
 import jax.numpy as jnp
 
@@ -20,7 +22,7 @@ PROPORTIONS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6)
 INITIAL = 10_000
 
 
-def _bench_host(cls, p: float) -> float:
+def _bench_host(cls, p: float, repeats: int = 60) -> float:
     items = list(range(INITIAL))
 
     if cls is LinkedWSQueue:
@@ -39,10 +41,11 @@ def _bench_host(cls, p: float) -> float:
 
         def op(q):
             q.steal(p)
-    return time_ns(setup, op, repeats=60, warmup=6)
+    return time_ns(setup, op, repeats=repeats, warmup=6)
 
 
-def _bench_jax(p: float, use_kernel: bool = False) -> float:
+def _bench_jax(p: float, use_kernel: bool = False,
+               repeats: int = 60) -> float:
     spec = jnp.zeros((), jnp.int32)
     q0 = q_ops.make_queue(16_384, spec)
     items = jnp.arange(INITIAL, dtype=jnp.int32)
@@ -58,23 +61,34 @@ def _bench_jax(p: float, use_kernel: bool = False) -> float:
         st, batch, n = steal(q)
         jax.block_until_ready(n)
 
-    return time_ns(setup, op, repeats=60, warmup=6)
+    return time_ns(setup, op, repeats=repeats, warmup=6)
 
 
-def run() -> Table:
+def run(tiny: bool = False) -> Tuple[Table, Dict]:
     t = Table(f"Fig. 7: steal latency (ns) vs proportion (initial {INITIAL})",
               "steal %", ["LF_Queue", "TF_UB-style", "TF_BD-style",
                           "LFQ-JAX(dev)", "LFQ-JAX(kernel)"])
+    repeats = 10 if tiny else 60
+    data: Dict = {"proportions": list(PROPORTIONS), "columns": {}}
+    cols = {
+        "LF_Queue": lambda p: _bench_host(LinkedWSQueue, p, repeats),
+        "TF_UB-style": lambda p: _bench_host(PerItemDequeQueue, p, repeats),
+        "TF_BD-style": lambda p: _bench_host(ResizingArrayQueue, p, repeats),
+        "LFQ-JAX(dev)": lambda p: _bench_jax(p, repeats=repeats),
+        "LFQ-JAX(kernel)": lambda p: _bench_jax(p, use_kernel=True,
+                                                repeats=repeats),
+    }
+    for name in cols:
+        data["columns"][name] = []
     for p in PROPORTIONS:
-        t.add(f"{int(p*100)}%", [
-            _bench_host(LinkedWSQueue, p),
-            _bench_host(PerItemDequeQueue, p),
-            _bench_host(ResizingArrayQueue, p),
-            _bench_jax(p),
-            _bench_jax(p, use_kernel=True),
-        ])
-    return t
+        row = []
+        for name, bench in cols.items():
+            ns = bench(p)
+            data["columns"][name].append(ns)
+            row.append(ns)
+        t.add(f"{int(p*100)}%", row)
+    return t, data
 
 
 if __name__ == "__main__":
-    run().show()
+    run()[0].show()

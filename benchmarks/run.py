@@ -1,34 +1,87 @@
 """Benchmark entrypoint: one table per paper figure + the roofline report.
 
   PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run --json [--tiny] [--out BENCH_PR2.json]
+
+``--json`` runs the figures that seed the repo's perf trajectory (Fig. 6
+push latency incl. the kernel column, Fig. 7 steal latency, the Fig. 9
+device workload's fused-vs-per-round supersteps) and writes the raw
+numbers to a JSON file; ``--tiny`` shrinks repeats/sizes so the whole
+sweep fits a CPU CI smoke job.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+
+def run_json(out: str, tiny: bool) -> int:
+    import jax
+
+    from benchmarks import fig6_push, fig7_steal, fig9_dag
+
+    t0 = time.time()
+    results = {
+        "meta": {
+            "bench": "BENCH_PR2",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "tiny": tiny,
+        }
+    }
+    t6, d6 = fig6_push.run(tiny=tiny)
+    t6.show()
+    results["fig6_push"] = d6
+    t7, d7 = fig7_steal.run(tiny=tiny)
+    t7.show()
+    results["fig7_steal"] = d7
+    t9, d9 = fig9_dag.device_run(tiny=tiny)
+    t9.show()
+    results["fig9_device_fused"] = d9
+    results["meta"]["wall_s"] = time.time() - t0
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[benchmarks] wrote {out} "
+          f"(kernel push flatness {d6['kernel_flatness_1_to_1024']:.2f}x, "
+          f"fused speedup {d9['fused_speedup']:.2f}x, "
+          f"{results['meta']['wall_s']:.1f}s)")
+    return 0
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the DAG workload (slowest)")
+    ap.add_argument("--json", action="store_true",
+                    help="write machine-readable results to --out")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (implies --json)")
+    ap.add_argument("--out", default="BENCH_PR2.json",
+                    help="output path for --json mode")
     args = ap.parse_args()
+
+    if args.json or args.tiny:
+        return run_json(args.out, args.tiny)
 
     from benchmarks import (fig6_push, fig7_steal, fig8_optimized_steal,
                             pop_parity, fig9_dag, roofline_report,
                             moe_steal, solver_scale)
 
     t0 = time.time()
-    fig6_push.run().show()
-    fig7_steal.run().show()
+    fig6_push.run()[0].show()
+    fig7_steal.run()[0].show()
     fig8_table, fig8b_table, _, _ = fig8_optimized_steal.run()
     fig8_table.show()
     fig8b_table.show()
     pop_parity.run().show()
     moe_steal.run().show()
     solver_scale.run().show()
+    fig9_dag.device_run()[0].show()
     if not args.quick:
         fig9_dag.run().show()
     tb = roofline_report.run()

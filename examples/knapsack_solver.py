@@ -20,6 +20,9 @@ def main():
     ap.add_argument("--n", type=int, default=18)
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--fused", type=int, default=8,
+                    help="supersteps per device dispatch "
+                         "(StealRuntime.run_fused; 1 = per-round)")
     args = ap.parse_args()
 
     # 1. the paper's running example (Eq. 1 / Figs. 2-4)
@@ -41,12 +44,14 @@ def main():
     t_seq = time.time() - t0
     t0 = time.time()
     par_opt, par_stats = parallel_solve(inst, n_workers=args.workers,
-                                        explore_width=args.width, batch=4)
+                                        explore_width=args.width, batch=4,
+                                        fused_rounds=args.fused)
     t_par = time.time() - t0
     print(f"[n={args.n}] DP oracle={expect}  sequential={seq_opt} "
           f"({seq_stats['explored']} explored, {t_seq:.1f}s)  "
           f"parallel={par_opt} ({par_stats['explored']} explored over "
-          f"{args.workers} workers, {par_stats['supersteps']} supersteps, "
+          f"{args.workers} workers, {par_stats['supersteps']} supersteps "
+          f"fused {args.fused}/dispatch, "
           f"{par_stats['transferred']} nodes bulk-stolen, {t_par:.1f}s)")
     print(f"per-worker explored: {par_stats['per_worker_explored']}")
     tele = par_stats["telemetry"]

@@ -19,7 +19,11 @@ onto a mesh axis) is:
   5. push(children)        — owner-side bulk push
 
 and the runtime appends 6. master.superstep (proportional bulk-steal
-rebalancing with the adaptive proportion) and records telemetry.
+rebalancing with the adaptive proportion) and records telemetry.  By
+default the solver advances ``fused_rounds`` supersteps per device
+dispatch (``StealRuntime.run_fused``): explore, rebalance and the
+adaptive update are one ``lax.scan`` so the hot loop never leaves the
+device between supersteps.
 
 The incumbent is monotone and every subproblem is either solved exactly,
 pruned, or partitioned by its children, so the parallel solver returns
@@ -52,13 +56,16 @@ def _item_spec():
 
 
 def _make_worker_body(weights, profits, *, explore_width: int, batch: int,
-                      n_vars: int):
+                      n_vars: int, use_kernel: bool = False):
     """One worker's slice of the solver superstep (runs under vmap with
-    the runtime's axis name in scope)."""
+    the runtime's axis name in scope).  With ``use_kernel`` the owner-side
+    bulk pop and push run the Pallas ring-slice / ring-scatter kernels —
+    the same hot path the master's steal already uses."""
 
     def body(q: q_ops.QueueState, carry):
         # 1. bulk pop up to `batch` subproblems
-        q, items, n_popped = q_ops.pop_bulk(q, batch, jnp.int32(batch))
+        q, items, n_popped = q_ops.pop_bulk(q, batch, jnp.int32(batch),
+                                            use_kernel=use_kernel)
         valid = jnp.arange(batch, dtype=jnp.int32) < n_popped
         subs = Subproblem(layer=items["layer"], state=items["state"],
                           value=items["value"])
@@ -89,7 +96,7 @@ def _make_worker_body(weights, profits, *, explore_width: int, batch: int,
 
         # 5. bulk push (step 6, the rebalancing superstep, is appended by
         # the runtime)
-        q, _ = q_ops.push(q, flat, n_children)
+        q, _ = q_ops.push(q, flat, n_children, use_kernel=use_kernel)
         return q, {"incumbent": incumbent,
                    "explored": carry["explored"] + n_popped}
 
@@ -100,8 +107,15 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
                    explore_width: int = 16, batch: int = 8,
                    capacity: int = 4096, policy: StealPolicy | None = None,
                    max_supersteps: int = 10_000, adaptive: bool = True,
-                   use_kernel: bool = True) -> Tuple[int, dict]:
+                   use_kernel: bool = True,
+                   fused_rounds: int = 8) -> Tuple[int, dict]:
     """Solve on W executor lanes (the same round shard_maps onto a mesh).
+
+    ``fused_rounds > 1`` advances that many supersteps per device
+    dispatch (``StealRuntime.run_fused`` — worker explore, rebalance and
+    the adaptive proportion update all inside one ``lax.scan``); the
+    drain check runs between fused blocks, so the trailing block may run
+    a few empty no-op rounds past the drain — supersteps counts them.
 
     Returns (optimum, stats); ``stats["telemetry"]`` carries the
     runtime's per-round rebalancing summary.
@@ -121,19 +135,15 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
                      "value": jnp.zeros((1,), jnp.int32)}, 1)
 
     body = _make_worker_body(w, p, explore_width=explore_width, batch=batch,
-                             n_vars=inst.n)
+                             n_vars=inst.n, use_kernel=use_kernel)
     carry = {"incumbent": jnp.full((n_workers,), NEG, jnp.int32),
              "explored": jnp.zeros((n_workers,), jnp.int32)}
 
-    supersteps = 0
-    while supersteps < max_supersteps:
-        carry, _ = runtime.round(body, carry)
-        supersteps += 1
-        if runtime.total_size() == 0:
-            break
+    carry = runtime.run(body, carry, max_rounds=max_supersteps,
+                        fused=fused_rounds)
 
     stats = {
-        "supersteps": supersteps,
+        "supersteps": runtime.rounds_run,
         "explored": int(jnp.sum(carry["explored"])),
         "transferred": runtime.telemetry.total_transferred,
         "per_worker_explored": [int(x) for x in carry["explored"]],

@@ -46,12 +46,26 @@ Pytree = Any
 
 
 class RebalanceStats(NamedTuple):
-    """Per-round observability (replicated values). NamedTuple => pytree."""
+    """Per-round observability (replicated values). NamedTuple => pytree.
+
+    ``n_transferred`` / ``n_steals`` count the transfers planned at THIS
+    level's axis (replicated across the lanes that computed the plan).
+    Under :func:`hierarchical_superstep` they hold the intra-pod share
+    only (distinct per pod, replicated within a pod) while
+    ``n_transferred_xpod`` / ``n_steals_xpod`` hold the cross-pod share
+    — nonzero only on each pod's lane-0 representative and replicated
+    across pods there, so an exact global total is
+    ``sum_over_pods(intra at lane 0) + xpod at any lane 0`` with no
+    double counting (the flat superstep reports zeros for the xpod
+    fields).
+    """
 
     sizes_before: jnp.ndarray
     sizes_after: jnp.ndarray
     n_transferred: jnp.ndarray
     n_steals: jnp.ndarray
+    n_transferred_xpod: jnp.ndarray
+    n_steals_xpod: jnp.ndarray
 
 
 def _mask_rows(batch: Pytree, live: jnp.ndarray) -> Pytree:
@@ -112,10 +126,11 @@ def superstep(
     counts_in = lax.all_to_all(counts, axis_name, split_axis=0, concat_axis=0)
 
     # (4) thief splices: at most one row is non-empty, blocks are pre-masked
-    # so a sum collapses the inbox without a gather.
+    # so a sum collapses the inbox without a gather.  With
+    # policy.use_kernel the splice is the Pallas ring-scatter kernel.
     recv_n = jnp.sum(counts_in)
     recv = jax.tree_util.tree_map(lambda x: jnp.sum(x, axis=0), inbox)
-    q, _ = q_ops.push(q, recv, recv_n)
+    q, _ = q_ops.push(q, recv, recv_n, use_kernel=policy.use_kernel)
 
     sizes_after = lax.all_gather(q.size, axis_name)
     stats = RebalanceStats(
@@ -123,6 +138,8 @@ def superstep(
         sizes_after=sizes_after,
         n_transferred=jnp.sum(jnp.where(amt > 0, amt, 0)),
         n_steals=jnp.sum((amt > 0).astype(jnp.int32)),
+        n_transferred_xpod=jnp.int32(0),
+        n_steals_xpod=jnp.int32(0),
     )
     return q, stats
 
@@ -152,9 +169,14 @@ def hierarchical_superstep(
     delta = q_eff.size - eff_size
     q = q_ops.QueueState(buf=q_eff.buf, lo=q_eff.lo, size=q.size + delta)
 
+    # Exact per-level accounting: the intra-pod share stays in
+    # n_transferred/n_steals; the pod-level plan's counts go in the xpod
+    # fields.  Lanes l > 0 gathered sentinel sizes at pod level, so their
+    # pod_stats are zero — the xpod fields are nonzero only on lane-0
+    # representatives, where they are replicated across pods.
     stats = stats._replace(
-        n_transferred=stats.n_transferred + pod_stats.n_transferred,
-        n_steals=stats.n_steals + pod_stats.n_steals,
+        n_transferred_xpod=pod_stats.n_transferred,
+        n_steals_xpod=pod_stats.n_steals,
         sizes_after=pod_stats.sizes_after,
     )
     return q, stats

@@ -17,7 +17,12 @@ re-thought for a functional, static-shape SPMD runtime:
   and is not needed (see DESIGN.md §2).
 * Bulk operations are O(batch) *vectorized* copies that fuse into a single
   XLA kernel — per-item cost is constant and latency is flat in the batch
-  size, reproducing the paper's Fig. 6 claim natively.
+  size, reproducing the paper's Fig. 6 claim natively.  With
+  ``use_kernel=True`` every hot-path op is a hand-written Pallas kernel:
+  the steal-side detach (``kernels.queue_steal.ring_gather``), the push
+  splice (``kernels.queue_push.ring_scatter`` — in-place aliased, never an
+  O(capacity) copy) and the owner-side bulk pop
+  (``kernels.queue_push.ring_slice``).
 * The paper's **optimized steal** (skip the tail re-traversal when the owner
   is idle) is the TPU-native default: the stolen count is always known from
   cursors.  ``steal_counted`` additionally performs the sequential traversal
@@ -51,6 +56,8 @@ __all__ = [
     "steal_exact",
     "steal_counted",
     "kernel_steal_available",
+    "kernel_push_available",
+    "kernel_pop_available",
     "inplace_ops",
     "push_inplace",
     "pop_bulk_inplace",
@@ -110,7 +117,24 @@ def queue_size(q: QueueState) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def push(q: QueueState, batch: Pytree, n: jnp.ndarray) -> Tuple[QueueState, jnp.ndarray]:
+def kernel_push_available(capacity: int, max_push: int) -> bool:
+    """Whether the Pallas ring-scatter kernel can serve a push of this
+    geometry (the kernel module owns the block-tiling rule)."""
+    from repro.kernels.queue_push.kernel import ring_scatter_supported
+
+    return ring_scatter_supported(capacity, max_push)
+
+
+def kernel_pop_available(capacity: int, max_n: int) -> bool:
+    """Whether the Pallas ring-slice kernel can serve a bulk pop of this
+    geometry."""
+    from repro.kernels.queue_push.kernel import ring_slice_supported
+
+    return ring_slice_supported(capacity, max_n)
+
+
+def push(q: QueueState, batch: Pytree, n: jnp.ndarray, *,
+         use_kernel: bool = False) -> Tuple[QueueState, jnp.ndarray]:
     """Bulk push ``n`` items (owner side).
 
     ``batch`` leaves have static leading dim ``B >= n``; only the first ``n``
@@ -119,12 +143,25 @@ def push(q: QueueState, batch: Pytree, n: jnp.ndarray) -> Tuple[QueueState, jnp.
     wrap the queue in :class:`PagedQueue`).
 
     Cost: one masked ring-scatter — O(B) vectorized, constant per item.
-    The ``size + n`` update is the linearization point.
+    The ``size + n`` update is the linearization point.  ``use_kernel=True``
+    routes the splice through
+    :func:`repro.kernels.queue_push.ops.push_scatter` (the Pallas
+    ring-scatter on TPU — an in-place aliased splice that never copies the
+    full ring — and the jnp oracle elsewhere); the generic XLA scatter
+    below remains the fallback for unsupported geometries.
     """
     cap = _capacity(q)
     bsz = _batch_size(batch)
     n = jnp.minimum(jnp.asarray(n, jnp.int32), jnp.int32(cap) - q.size)
     n = jnp.maximum(n, 0)
+    if use_kernel and kernel_push_available(cap, bsz):
+        from repro.kernels.queue_push.ops import push_scatter
+
+        buf = push_scatter(
+            q.buf, batch, (q.lo + q.size) % cap, n,
+            use_pallas=jax.default_backend() == "tpu",
+        )
+        return QueueState(buf=buf, lo=q.lo, size=q.size + n), n
     offs = jnp.arange(bsz, dtype=jnp.int32)
     phys = (q.lo + q.size + offs) % cap
     # Rows beyond ``n`` are routed out of bounds and dropped.
@@ -150,22 +187,41 @@ def pop(q: QueueState) -> Tuple[QueueState, Pytree, jnp.ndarray]:
 
 
 def pop_bulk(
-    q: QueueState, max_n: int, n: jnp.ndarray
+    q: QueueState, max_n: int, n: jnp.ndarray, *, use_kernel: bool = False
 ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
     """Bulk pop up to ``n`` newest items (owner side).
 
     Returns ``(new_state, batch, n_popped)``; ``batch`` leaves have static
     leading dim ``max_n`` with valid rows ``[0, n_popped)`` in queue order
-    (oldest of the popped block first).  Used by vectorized explorers that
-    consume several tasks per superstep.
+    (oldest of the popped block first) and rows ``>= n_popped`` zeroed
+    (safe for summing collectives, and identical across the kernel and
+    fallback paths).  Used by vectorized explorers that consume several
+    tasks per superstep.  ``use_kernel=True`` routes the detach through
+    :func:`repro.kernels.queue_push.ops.pop_slice` (Pallas ring-slice on
+    TPU, the jnp oracle elsewhere).
     """
     cap = _capacity(q)
     n = jnp.minimum(jnp.minimum(jnp.asarray(n, jnp.int32), q.size), max_n)
     n = jnp.maximum(n, 0)
+    if use_kernel and kernel_pop_available(cap, max_n):
+        from repro.kernels.queue_push.ops import pop_slice
+
+        batch = pop_slice(
+            q.buf, q.lo, q.size, n, max_n=max_n,
+            use_pallas=jax.default_backend() == "tpu",
+        )
+        return QueueState(buf=q.buf, lo=q.lo, size=q.size - n), batch, n
     offs = jnp.arange(max_n, dtype=jnp.int32)
     start = q.size - n  # logical offset of the popped block
     phys = (q.lo + start + offs) % cap
     batch = jax.tree_util.tree_map(lambda b: b[phys], q.buf)
+    live = offs < n
+
+    def _mask(x):
+        shape = (max_n,) + (1,) * (x.ndim - 1)
+        return jnp.where(live.reshape(shape), x, jnp.zeros_like(x))
+
+    batch = jax.tree_util.tree_map(_mask, batch)
     return QueueState(buf=q.buf, lo=q.lo, size=q.size - n), batch, n
 
 
@@ -341,9 +397,11 @@ def inplace_ops() -> InPlaceOps:
     """Jitted, donation-enabled variants of the queue ops (cached)."""
     donate = () if jax.default_backend() == "cpu" else (0,)
     return InPlaceOps(
-        push=jax.jit(push, donate_argnums=donate),
+        push=jax.jit(push, static_argnames=("use_kernel",),
+                     donate_argnums=donate),
         pop=jax.jit(pop, donate_argnums=donate),
         pop_bulk=jax.jit(pop_bulk, static_argnums=(1,),
+                         static_argnames=("use_kernel",),
                          donate_argnums=donate),
         steal=jax.jit(steal,
                       static_argnames=("max_steal", "queue_limit",
@@ -355,12 +413,15 @@ def inplace_ops() -> InPlaceOps:
     )
 
 
-def push_inplace(q: QueueState, batch: Pytree, n) -> Tuple[QueueState, jnp.ndarray]:
-    return inplace_ops().push(q, batch, n)
+def push_inplace(q: QueueState, batch: Pytree, n, *,
+                 use_kernel: bool = False) -> Tuple[QueueState, jnp.ndarray]:
+    return inplace_ops().push(q, batch, n, use_kernel=use_kernel)
 
 
-def pop_bulk_inplace(q: QueueState, max_n: int, n) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    return inplace_ops().pop_bulk(q, max_n, n)
+def pop_bulk_inplace(q: QueueState, max_n: int, n, *,
+                     use_kernel: bool = False
+                     ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    return inplace_ops().pop_bulk(q, max_n, n, use_kernel=use_kernel)
 
 
 def steal_exact_inplace(q: QueueState, n, *, max_steal: int,
@@ -428,7 +489,14 @@ class PagedQueue:
         if int(self.state.size) <= self.low_watermark and self.pages:
             batch, n = self.pages.pop()
             dev = jax.device_put(batch)
-            self.state, _ = push(self.state, dev, n)
+            self.state, pushed = push(self.state, dev, n)
+            pushed = int(pushed)
+            if pushed < n:
+                # Page larger than the ring's free space: keep the
+                # un-spliced tail as a (smaller) host page instead of
+                # silently dropping it.
+                rest = jax.tree_util.tree_map(lambda x: x[pushed:], batch)
+                self.pages.append((rest, n - pushed))
 
     # -- stealer side -------------------------------------------------------
 

@@ -1,0 +1,17 @@
+"""Owner-side bulk ring kernels: push splice + pop_bulk detach."""
+
+from repro.kernels.queue_push.kernel import (DEFAULT_BLOCK, ring_scatter,
+                                             ring_scatter_supported,
+                                             ring_slice,
+                                             ring_slice_supported)
+from repro.kernels.queue_push.ops import pop_slice, push_scatter
+
+__all__ = [
+    "DEFAULT_BLOCK",
+    "ring_scatter",
+    "ring_scatter_supported",
+    "ring_slice",
+    "ring_slice_supported",
+    "push_scatter",
+    "pop_slice",
+]

@@ -1,0 +1,66 @@
+"""Jitted wrappers: owner-side bulk ring ops for arbitrary payload pytrees.
+
+Leaves are flattened to ``(cap, -1)`` / ``(batch, -1)``, moved with the
+Pallas kernels (TPU) or the jnp oracles (elsewhere), and reshaped back.
+Used by ``core.queue.push`` / ``core.queue.pop_bulk`` when
+``use_kernel`` is enabled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.queue_push.kernel import ring_scatter, ring_slice
+from repro.kernels.queue_push.ref import ring_scatter_ref, ring_slice_ref
+
+__all__ = ["push_scatter", "pop_slice"]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def push_scatter(buf_tree, batch_tree, start, n, *, use_pallas: bool = False,
+                 interpret: bool = False):
+    """Splice ``batch_tree[i] -> buf_tree[(start + i) % cap]`` for
+    ``i < n``; returns the updated ring pytree.  The Pallas path aliases
+    the ring input to the output (``input_output_aliases``) so under a
+    donating caller the splice is in place, never an O(capacity) copy."""
+    bsz = jax.tree_util.tree_leaves(batch_tree)[0].shape[0]
+    n = jnp.minimum(jnp.asarray(n, jnp.int32), jnp.int32(bsz))
+
+    def one(buf, batch):
+        shape = buf.shape
+        flat = buf.reshape(shape[0], -1)
+        fbatch = batch.reshape(bsz, -1)
+        if use_pallas or interpret:
+            out = ring_scatter(flat, fbatch, start, n,
+                               interpret=interpret or
+                               jax.default_backend() != "tpu")
+        else:
+            out = ring_scatter_ref(flat, fbatch, start, n)
+        return out.reshape(shape)
+
+    return jax.tree_util.tree_map(one, buf_tree, batch_tree)
+
+
+@functools.partial(jax.jit, static_argnames=("max_n", "use_pallas",
+                                             "interpret"))
+def pop_slice(buf_tree, lo, size, n, *, max_n: int, use_pallas: bool = False,
+              interpret: bool = False):
+    """Detach the newest ``n`` rows (``n`` pre-clamped to ``size``):
+    pytree of ``(cap, ...)`` arrays -> pytree of ``(max_n, ...)`` with
+    rows >= ``n`` zeroed, oldest of the block first."""
+
+    def one(buf):
+        shape = buf.shape
+        flat = buf.reshape(shape[0], -1)
+        if use_pallas or interpret:
+            out = ring_slice(flat, lo, size, n, max_n,
+                             interpret=interpret or
+                             jax.default_backend() != "tpu")
+        else:
+            out = ring_slice_ref(flat, lo, size, n, max_n)
+        return out.reshape((max_n,) + shape[1:])
+
+    return jax.tree_util.tree_map(one, buf_tree)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the owner-side bulk ring ops (push / pop_bulk).
+
+``ring_scatter_ref(buf, batch, start, n)``: splice rows ``batch[i]`` into
+``buf[(start + i) % cap]`` for ``i < n`` — exactly the masked ring-scatter
+``core.queue.push`` performs at ``start = lo + size``.
+
+``ring_slice_ref(buf, lo, size, n, max_n)``: rows
+``(lo + size - n + i) % cap`` for ``i < n`` (rows >= n zeroed) — the
+newest-``n`` block ``core.queue.pop_bulk`` detaches, oldest-of-block
+first.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ring_scatter_ref", "ring_slice_ref"]
+
+
+def ring_scatter_ref(buf: jnp.ndarray, batch: jnp.ndarray, start, n
+                     ) -> jnp.ndarray:
+    """``n`` must be pre-clamped to ``batch.shape[0]`` (ops.py does)."""
+    cap = buf.shape[0]
+    bsz = batch.shape[0]
+    # Mirror the kernel's structure — a read-modify-write over the static
+    # ring (one gather + select, O(capacity) regardless of batch size) —
+    # rather than an XLA scatter, whose CPU lowering is per-row and would
+    # make the oracle's latency grow with the batch.
+    off = (jnp.arange(cap, dtype=jnp.int32)
+           - jnp.asarray(start, jnp.int32)) % cap
+    live = off < jnp.asarray(n, jnp.int32)
+    vals = batch[jnp.minimum(off, bsz - 1)]
+    return jnp.where(live.reshape((cap,) + (1,) * (buf.ndim - 1)),
+                     vals, buf)
+
+
+def ring_slice_ref(buf: jnp.ndarray, lo, size, n, max_n: int) -> jnp.ndarray:
+    cap = buf.shape[0]
+    start = (jnp.asarray(lo, jnp.int32) + jnp.asarray(size, jnp.int32)
+             - jnp.asarray(n, jnp.int32)) % cap
+    offs = jnp.arange(max_n, dtype=jnp.int32)
+    phys = (start + offs) % cap
+    out = buf[phys]
+    live = offs < jnp.asarray(n, jnp.int32)
+    return jnp.where(live.reshape((max_n,) + (1,) * (buf.ndim - 1)),
+                     out, jnp.zeros_like(out))

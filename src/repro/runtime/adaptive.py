@@ -2,17 +2,29 @@
 
 The paper's ``steal(p)`` takes a static proportion; §V cites
 Adnan-Sato-style dynamic chunk sizing as the natural extension.  Here the
-master's observed queue sizes (``RebalanceStats.sizes_after``) feed a
-small host-side controller that servos the proportion toward
-``core.policy.adaptive_chunk``'s idle/busy-ratio target:
+master's observed queue sizes feed a small controller that servos the
+proportion toward ``core.policy.adaptive_chunk``'s idle/busy-ratio
+target:
 
 * many idle workers + few victims -> steal a larger fraction so one
   round can feed several drained lanes from one victim;
 * few idle workers -> steal less, preserving victim locality (the
   paper's argument for leaving the owner's hot head intact).
 
-The proportion is fed into the jitted superstep as a *traced* scalar
-(see ``executor.StealRuntime``), so updating it never recompiles.
+The feedback step itself is :func:`adaptive_update` — PURE jnp, float32
+— so it runs in two places with one source of truth:
+
+* **on device**, inside ``StealRuntime.run_fused``'s ``lax.scan`` carry,
+  where the proportion is re-tuned every fused round without ever
+  leaving the device (zero recompiles, zero host syncs);
+* **on host**, via :class:`AdaptiveController`, for per-round driving
+  (``StealRuntime.round``) and host-level consumers (the serving
+  admission master) — the proportion is fed into the jitted superstep
+  as a *traced* scalar, so updating it never recompiles.
+
+Because both paths evaluate the identical float32 computation, a fused
+k-round run follows the same proportion trajectory as k sequential
+host-driven rounds.
 """
 
 from __future__ import annotations
@@ -20,11 +32,12 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import StealPolicy, adaptive_chunk
+from repro.core.policy import StealPolicy
 
-__all__ = ["AdaptiveConfig", "AdaptiveController"]
+__all__ = ["AdaptiveConfig", "AdaptiveController", "adaptive_update"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,29 +57,58 @@ class AdaptiveConfig:
     gain: float = 0.5
 
 
+def adaptive_update(proportion, sizes, *, policy: StealPolicy,
+                    config: AdaptiveConfig) -> jnp.ndarray:
+    """One feedback step: float32 scalar in, float32 scalar out.
+
+    Pure jnp (usable inside jit / scan).  The target is
+    ``core.policy.adaptive_chunk`` vectorized: scale the stolen
+    proportion with the idle/busy imbalance, clamped to [0.125, 0.75],
+    then first-order-smooth toward it.  When the plan can pair no
+    (victim, thief) this round there is no transfer to size, so hold
+    rather than servo on zero signal.
+    """
+    sizes = jnp.asarray(sizes)
+    p = jnp.asarray(proportion, jnp.float32)
+    n_idle = jnp.sum((sizes <= policy.low_watermark).astype(jnp.int32))
+    n_busy = jnp.sum((sizes >= policy.high_watermark).astype(jnp.int32))
+    ratio = (n_idle.astype(jnp.float32)
+             / jnp.maximum(n_idle + n_busy, 1).astype(jnp.float32))
+    target = jnp.clip(jnp.float32(policy.proportion) * 2.0 * ratio,
+                      0.125, 0.75)
+    p_new = p + jnp.float32(config.gain) * (target - p)
+    p_new = jnp.clip(p_new, config.min_proportion, config.max_proportion)
+    return jnp.where((n_idle > 0) & (n_busy > 0), p_new, p)
+
+
 class AdaptiveController:
-    """Servo ``proportion`` from observed queue-size imbalance."""
+    """Host-side wrapper: history + the NEXT round's proportion.
+
+    Delegates the arithmetic to :func:`adaptive_update` so the host
+    trajectory is bit-identical to the on-device fused one.
+    """
 
     def __init__(self, policy: StealPolicy,
                  config: Optional[AdaptiveConfig] = None):
         self.policy = policy
         self.config = config or AdaptiveConfig()
-        self.proportion = float(policy.proportion)
+        self.proportion = float(jnp.float32(policy.proportion))
         self.history: List[float] = [self.proportion]
 
     def update(self, sizes) -> float:
         """One feedback step from the post-round size vector."""
-        sizes = np.asarray(sizes)
-        n_idle = int(np.sum(sizes <= self.policy.low_watermark))
-        n_busy = int(np.sum(sizes >= self.policy.high_watermark))
-        if n_idle > 0 and n_busy > 0:
-            target = adaptive_chunk(n_idle, n_busy,
-                                    base=self.policy.proportion)
-            cfg = self.config
-            p = self.proportion + cfg.gain * (target - self.proportion)
-            self.proportion = float(
-                min(max(p, cfg.min_proportion), cfg.max_proportion))
-        # Otherwise the plan pairs no (victim, thief) this round — there is
-        # no transfer to size, so hold rather than servo on zero signal.
-        self.history.append(self.proportion)
-        return self.proportion
+        p = float(adaptive_update(jnp.float32(self.proportion),
+                                  jnp.asarray(np.asarray(sizes), jnp.int32),
+                                  policy=self.policy, config=self.config))
+        self.proportion = p
+        self.history.append(p)
+        return p
+
+    def absorb(self, proportions_used, final_proportion) -> None:
+        """Sync host state after an on-device fused run: ``proportions_used``
+        are the k per-round values the scan consumed (element 0 is the
+        pre-run proportion already in ``history``), ``final_proportion``
+        the post-run carry value."""
+        post = [float(x) for x in np.asarray(proportions_used)[1:]]
+        self.proportion = float(final_proportion)
+        self.history.extend(post + [self.proportion])

@@ -7,13 +7,14 @@ branch-and-bound, serving admission replay, the Fig. 7/8 benchmarks).  A
     [worker body: pop_bulk -> compute -> push]   (optional, per lane)
     master.superstep / hierarchical_superstep    (bulk steal rebalance)
 
-compiled ONCE as a single jitted function.  Three properties make it the
+compiled ONCE as a single jitted function.  Four properties make it the
 production hot path:
 
-* **Kernel-backed steals** — the policy is pinned with
-  ``use_kernel=True`` (default), so every victim-side block detach inside
-  the superstep goes through ``repro.kernels.queue_steal.ring_gather``
-  (Pallas on TPU, the jnp oracle elsewhere).
+* **Kernel-backed queue ops** — the policy is pinned with
+  ``use_kernel=True`` (default), so every victim-side block detach goes
+  through ``repro.kernels.queue_steal.ring_gather`` and every thief-side
+  splice through ``repro.kernels.queue_push.ring_scatter`` (Pallas on
+  TPU, the jnp oracles elsewhere).
 * **Donated queue state** — the round function donates the stacked
   ``QueueState``, so XLA aliases the ring buffers input->output and the
   rebalance updates in place instead of copying the full-capacity rings
@@ -21,6 +22,11 @@ production hot path:
 * **Traced proportion** — the steal proportion enters as a scalar
   argument, so the :class:`~repro.runtime.adaptive.AdaptiveController`
   can re-tune it every round with zero recompiles.
+* **Fused supersteps** — :meth:`StealRuntime.run_fused` ``lax.scan``s k
+  rounds in ONE dispatch: the adaptive update runs on device inside the
+  scan carry and per-round telemetry is stacked ``(k, ...)`` and read
+  back once, so autotuning never leaves the device and k rounds cost one
+  dispatch + one host sync instead of k of each.
 
 Worker bodies run *under vmap/shard_map* with the runtime's axis name in
 scope, so they may use collectives (e.g. ``lax.pmax`` for a global
@@ -36,11 +42,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax import lax
+
 from repro.core import master as master_ops
 from repro.core import queue as q_ops
 from repro.core.policy import StealPolicy
 from repro.core.sharded_queue import make_sharded_queues
-from repro.runtime.adaptive import AdaptiveConfig, AdaptiveController
+from repro.runtime.adaptive import (AdaptiveConfig, AdaptiveController,
+                                    adaptive_update)
 from repro.runtime.telemetry import Telemetry, item_nbytes
 
 Pytree = Any
@@ -138,7 +147,8 @@ class StealRuntime:
 
     # -- the round -----------------------------------------------------------
 
-    def _compile(self, worker_fn: Optional[WorkerFn]) -> Callable:
+    def _make_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
+        """Un-jitted ``(qs, carry, proportion) -> (qs, carry, stats)``."""
         policy = self.policy
         axis_name, pod_axis = self.axis_name, self.pod_axis
         pod_size = self.pod_size
@@ -175,8 +185,60 @@ class StealRuntime:
                     (qs2, carry2, stats))
                 return merge
 
-        donate = () if jax.default_backend() == "cpu" else (0,)
-        return jax.jit(step, donate_argnums=donate)
+        return step
+
+    @staticmethod
+    def _donate_argnums() -> tuple:
+        return () if jax.default_backend() == "cpu" else (0,)
+
+    def _compile(self, worker_fn: Optional[WorkerFn]) -> Callable:
+        return jax.jit(self._make_step(worker_fn),
+                       donate_argnums=self._donate_argnums())
+
+    def _compile_fused(self, worker_fn: Optional[WorkerFn],
+                       k: int) -> Callable:
+        """One dispatch for k rounds: the superstep scanned on device with
+        the adaptive proportion updated as a traced scalar inside the
+        carry, telemetry stacked ``(k, ...)`` along the scan axis."""
+        step = self._make_step(worker_fn)
+        policy, controller = self.policy, self.controller
+        config = controller.config if controller else None
+
+        def fused(qs, carry, p0):
+            def body(state, _):
+                qs, carry, p = state
+                qs, carry, stats = step(qs, carry, p)
+                tele = {"stats": stats, "sizes": qs.size, "proportion": p}
+                if controller is not None:
+                    p = adaptive_update(p, qs.size, policy=policy,
+                                        config=config)
+                return (qs, carry, p), tele
+
+            (qs, carry, p), tele = lax.scan(body, (qs, carry, p0), None,
+                                            length=k)
+            return qs, carry, p, tele
+
+        return jax.jit(fused, donate_argnums=self._donate_argnums())
+
+    def _round_counts(self, stats) -> Tuple[int, int]:
+        """Exact (n_steals, n_transferred) for one round's stats (numpy
+        leaves, leading axis = lanes)."""
+        if self.pod_size is None:
+            # Per-lane stats are replicated in flat mode: element 0 exact.
+            return (int(np.asarray(stats.n_steals).reshape(-1)[0]),
+                    int(np.asarray(stats.n_transferred).reshape(-1)[0]))
+        # Hierarchical mode: lane (p, 0) carries pod p's intra-pod share;
+        # the cross-pod share lives in the *_xpod fields, nonzero only on
+        # lane-0 representatives and replicated across them — summing
+        # intra over pods and adding xpod ONCE is exact (the former
+        # upper-bound replication is gone).
+        n_pods = self.n_workers // self.pod_size
+        rep = lambda x: np.asarray(x).reshape(n_pods, -1)[:, 0]
+        n_steals = int(rep(stats.n_steals).sum()) + int(
+            rep(stats.n_steals_xpod)[0])
+        n_transferred = int(rep(stats.n_transferred).sum()) + int(
+            rep(stats.n_transferred_xpod)[0])
+        return n_steals, n_transferred
 
     def round(self, worker_fn: Optional[WorkerFn] = None,
               carry: Optional[Pytree] = None
@@ -201,21 +263,7 @@ class StealRuntime:
         self.queues, carry, stats = fn(self.queues, carry,
                                        jnp.float32(proportion))
         sizes = self.sizes()
-        if self.pod_size is None:
-            # Per-lane stats are replicated in flat mode: element 0 exact.
-            n_steals = int(np.asarray(stats.n_steals).reshape(-1)[0])
-            n_transferred = int(
-                np.asarray(stats.n_transferred).reshape(-1)[0])
-        else:
-            # Hierarchical mode: lane (p, 0) reports intra-pod(p) +
-            # cross-pod, with the cross-pod share replicated across pods —
-            # summing pod representatives over-counts it (P-1) times, so
-            # this is an UPPER BOUND on items moved (exact per-level
-            # counters are a ROADMAP follow-on).
-            n_pods = self.n_workers // self.pod_size
-            rep = lambda x: np.asarray(x).reshape(n_pods, -1)[:, 0]
-            n_steals = int(rep(stats.n_steals).sum())
-            n_transferred = int(rep(stats.n_transferred).sum())
+        n_steals, n_transferred = self._round_counts(stats)
         self.telemetry.record(sizes=sizes, n_steals=n_steals,
                               n_transferred=n_transferred,
                               proportion=proportion)
@@ -224,13 +272,71 @@ class StealRuntime:
         self.rounds_run += 1
         return carry, stats
 
+    def run_fused(self, k: int, worker_fn: Optional[WorkerFn] = None,
+                  carry: Optional[Pytree] = None
+                  ) -> Tuple[Pytree, master_ops.RebalanceStats]:
+        """Run ``k`` rounds in ONE device dispatch (a ``lax.scan`` over the
+        compiled superstep).
+
+        Versus ``k`` calls to :meth:`round`, this removes ``k - 1``
+        dispatch + host-sync round trips: the queue state is donated and
+        threaded through the scan carry, the adaptive proportion is
+        updated on device as a traced scalar
+        (:func:`repro.runtime.adaptive.adaptive_update` — the same
+        float32 computation the host controller runs, so the trajectory
+        is identical), and per-round telemetry is stacked ``(k, ...)``
+        along the scan axis and read back once at the end.
+
+        Returns ``(carry_out, stats)`` where ``stats`` leaves carry a
+        leading ``(k,)`` round axis.  The same caching rule as
+        :meth:`round` applies: pass the same ``worker_fn`` object every
+        call — the compiled scan is cached by ``(worker_fn, k)``.
+        """
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        key = ("fused", worker_fn, k)
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = self._compiled[key] = self._compile_fused(worker_fn, k)
+        if carry is None:
+            carry = jnp.zeros((self.n_workers,), jnp.int32)
+        p0 = jnp.float32(self.proportion)
+        self.queues, carry, p_final, tele = fn(self.queues, carry, p0)
+        # ONE host read-back for the whole fused run.
+        tele = jax.tree_util.tree_map(np.asarray, tele)
+        stats = tele["stats"]
+        for r in range(k):
+            stats_r = jax.tree_util.tree_map(lambda x: x[r], stats)
+            n_steals, n_transferred = self._round_counts(stats_r)
+            self.telemetry.record(sizes=tele["sizes"][r],
+                                  n_steals=n_steals,
+                                  n_transferred=n_transferred,
+                                  proportion=float(tele["proportion"][r]))
+        if self.controller is not None:
+            self.controller.absorb(tele["proportion"], float(p_final))
+        self.rounds_run += k
+        return carry, stats
+
     def run(self, worker_fn: Optional[WorkerFn] = None,
             carry: Optional[Pytree] = None, *,
             max_rounds: int = 10_000,
-            stop_when_empty: bool = True) -> Pytree:
-        """Drive rounds until the queues drain (or ``max_rounds``)."""
-        for _ in range(max_rounds):
-            carry, _ = self.round(worker_fn, carry)
+            stop_when_empty: bool = True,
+            fused: int = 1) -> Pytree:
+        """Drive rounds until the queues drain (or ``max_rounds``).
+
+        With ``fused > 1`` the loop advances ``fused`` rounds per device
+        dispatch (:meth:`run_fused`) and only checks the drain condition
+        between fused blocks — the single-dispatch superstep pipeline.
+        """
+        rounds = 0
+        while rounds < max_rounds:
+            if fused > 1:
+                k = min(fused, max_rounds - rounds)
+                carry, _ = self.run_fused(k, worker_fn, carry)
+                rounds += k
+            else:
+                carry, _ = self.round(worker_fn, carry)
+                rounds += 1
             if stop_when_empty and self.total_size() == 0:
                 break
         return carry

@@ -69,12 +69,18 @@ class Replica:
 class ServeCluster:
     """N replicas + one admission master; ``step()`` = each replica runs
     one wave, then the master rebalances (the superstep structure of
-    core.master, at host level)."""
+    core.master, at host level).  ``rebalance_rounds > 1`` lets the
+    master run several steal rounds per wave tick
+    (``AdmissionMaster.rebalance_many`` — the host analogue of the
+    executor's fused supersteps), which converges a badly skewed cluster
+    within one tick."""
 
     def __init__(self, replicas: List[Replica],
-                 master: Optional[AdmissionMaster] = None):
+                 master: Optional[AdmissionMaster] = None,
+                 rebalance_rounds: int = 1):
         self.replicas = replicas
         self.master = master or AdmissionMaster(len(replicas))
+        self.rebalance_rounds = int(rebalance_rounds)
         self.done: List[Request] = []
 
     def submit(self, reqs: List[Request]):
@@ -91,7 +97,7 @@ class ServeCluster:
             rq.finish_wave(len(finished))
             self.done.extend(finished)
             served += len(finished)
-        self.master.rebalance()
+        self.master.rebalance_many(self.rebalance_rounds)
         return served
 
     def run_until_drained(self, max_steps: int = 1000) -> List[Request]:

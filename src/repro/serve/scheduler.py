@@ -16,8 +16,12 @@ Queues are the faithful host port (LinkedWSQueue) — this scheduler runs
 on the serving controller host, not on the accelerator.  The steal
 proportion and observability come from the same runtime layer the
 device executor uses (``repro.runtime.adaptive`` / ``.telemetry``): the
-master servos its proportion on the observed queue imbalance and logs
-per-round steal counts and depth histograms.
+master servos its proportion with the SAME float32 feedback step
+(``adaptive_update``) the device executor scans inside
+``StealRuntime.run_fused``, and logs per-round steal counts and depth
+histograms.  ``rebalance_many(k)`` mirrors the executor's fused
+supersteps at host level: k rounds per controller tick, stopping early
+once a round moves nothing.
 """
 
 from __future__ import annotations
@@ -135,6 +139,20 @@ class AdmissionMaster:
                               n_transferred=moved, proportion=proportion)
         if self.controller is not None:
             self.controller.update(sizes)
+        return moved
+
+    def rebalance_many(self, k: int) -> int:
+        """Run up to ``k`` rebalance rounds in one controller tick (the
+        host-level analogue of ``StealRuntime.run_fused``), stopping
+        early once a round moves nothing — a severely imbalanced cluster
+        converges in one tick instead of one round per tick.  Returns
+        total requests moved."""
+        moved = 0
+        for _ in range(k):
+            step = self.rebalance()
+            moved += step
+            if step == 0:
+                break
         return moved
 
     def stats(self) -> Dict:

@@ -1,6 +1,7 @@
-"""The unified runtime: executor conservation across adaptive rounds,
-kernel-path parity (dynamic ``lo`` straddling block boundaries), and
-in-place vs. functional queue-op equivalence."""
+"""The unified runtime: executor conservation across adaptive rounds
+(per-round and fused), kernel-path parity for the steal gather, the push
+ring-scatter and the pop ring-slice (dynamic cursors straddling block
+boundaries), and in-place vs. functional queue-op equivalence."""
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +10,8 @@ import pytest
 
 from repro.core import queue as q_ops
 from repro.core.policy import StealPolicy
+from repro.kernels.queue_push.kernel import ring_scatter, ring_slice
+from repro.kernels.queue_push.ref import ring_scatter_ref, ring_slice_ref
 from repro.kernels.queue_steal.kernel import DEFAULT_BLOCK
 from repro.kernels.queue_steal.ops import steal_gather
 from repro.kernels.queue_steal.ref import ring_gather_ref
@@ -153,6 +156,191 @@ def test_kernel_steal_available_geometry():
     assert q_ops.kernel_steal_available(64, 32)       # block shrinks to 32
     assert not q_ops.kernel_steal_available(500, 256)  # cap not block-aligned
     assert not q_ops.kernel_steal_available(512, 200)  # max_steal unaligned
+
+
+# ------------------------------------- push/pop kernels: wraparound parity
+
+
+SCATTER_CASES = [
+    # (cap, width, max_push, start, n) — start chosen to straddle the
+    # DEFAULT_BLOCK-aligned splice windows / wrap past the ring end
+    (512, 8, 256, DEFAULT_BLOCK - 1, 200),
+    (512, 8, 256, DEFAULT_BLOCK + 1, 256),
+    (512, 4, 256, 512 - 7, 256),                 # wraps past cap
+    (512, 8, 256, 0, 0),                          # n = 0: pure pass-through
+    (256, 4, 128, 255, 128),                      # full wrap from last row
+    (1024, 16, 512, 3 * DEFAULT_BLOCK + 63, 511),
+    (64, 3, 32, 33, 32),                          # shrunken block (32)
+]
+
+
+@pytest.mark.parametrize("case", SCATTER_CASES)
+def test_ring_scatter_interpret_parity_straddling_blocks(case):
+    cap, width, max_push, start, n = case
+    key = jax.random.PRNGKey(3)
+    buf = jax.random.normal(key, (cap, width), jnp.float32)
+    batch = jax.random.normal(jax.random.fold_in(key, 1),
+                              (max_push, width), jnp.float32)
+    out_k = ring_scatter(buf, batch, jnp.int32(start), jnp.int32(n),
+                         interpret=True)
+    out_r = ring_scatter_ref(buf, batch, start, n)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    # Untouched ring rows must be preserved bit-exactly.
+    offs = (np.arange(cap) - start) % cap
+    keep = offs >= n
+    np.testing.assert_array_equal(np.asarray(out_k)[keep],
+                                  np.asarray(buf)[keep])
+
+
+SLICE_CASES = [
+    # (cap, width, max_n, lo, size, n)
+    (512, 8, 256, DEFAULT_BLOCK - 1, 300, 200),
+    (512, 8, 512, 2 * DEFAULT_BLOCK - 7, 512, 512),   # n = capacity
+    (512, 8, 256, 17, 40, 0),                          # n = 0
+    (256, 4, 256, 255, 200, 129),                      # wraps from last row
+    (1024, 16, 256, 3 * DEFAULT_BLOCK + 63, 900, 255),
+    (64, 3, 32, 61, 40, 32),                           # shrunken block
+]
+
+
+@pytest.mark.parametrize("case", SLICE_CASES)
+def test_ring_slice_interpret_parity_straddling_blocks(case):
+    cap, width, max_n, lo, size, n = case
+    buf = jax.random.normal(jax.random.PRNGKey(5), (cap, width), jnp.float32)
+    out_k = ring_slice(buf, jnp.int32(lo), jnp.int32(size), jnp.int32(n),
+                       max_n, interpret=True)
+    out_r = ring_slice_ref(buf, lo, size, n, max_n)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("lo,size,n_push,n_pop", [
+    (0, 0, 10, 4), (120, 60, 16, 16), (250, 4, 8, 12), (100, 200, 0, 0),
+])
+def test_push_pop_kernel_route_matches_plain(lo, size, n_push, n_pop):
+    """core.queue.push/pop_bulk(use_kernel=True) == the plain path for
+    dynamic cursors (the dispatcher picks the oracle on CPU, Pallas on
+    TPU)."""
+    cap, max_n = 256, 16
+    q = q_ops.QueueState(
+        buf={"a": jnp.arange(cap, dtype=jnp.int32),
+             "b": jnp.arange(cap * 2, dtype=jnp.float32).reshape(cap, 2)},
+        lo=jnp.int32(lo), size=jnp.int32(size))
+    batch = {"a": jnp.arange(1, max_n + 1, dtype=jnp.int32),
+             "b": jnp.ones((max_n, 2), jnp.float32)}
+    q1, p1 = q_ops.push(q, batch, jnp.int32(n_push))
+    q2, p2 = q_ops.push(q, batch, jnp.int32(n_push), use_kernel=True)
+    assert int(p1) == int(p2)
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(np.asarray(q1.buf[k]),
+                                      np.asarray(q2.buf[k]))
+    q1, b1, n1 = q_ops.pop_bulk(q1, max_n, jnp.int32(n_pop))
+    q2, b2, n2 = q_ops.pop_bulk(q2, max_n, jnp.int32(n_pop),
+                                use_kernel=True)
+    assert int(n1) == int(n2)
+    assert int(q1.size) == int(q2.size)
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+
+
+def test_kernel_push_pop_available_geometry():
+    assert q_ops.kernel_push_available(512, 256)
+    assert q_ops.kernel_push_available(4096, 1024)
+    assert not q_ops.kernel_push_available(500, 256)   # cap unaligned
+    # splice span (max_push + one straddle block) must not lap the ring
+    assert not q_ops.kernel_push_available(256, 256)
+    assert q_ops.kernel_pop_available(512, 512)
+    assert q_ops.kernel_pop_available(64, 32)
+    assert not q_ops.kernel_pop_available(512, 200)    # max_n unaligned
+
+
+# ------------------------------------------------------- fused supersteps
+
+
+@pytest.mark.parametrize("sizes,k", [
+    ([40, 0, 0, 0], 5),
+    ([0, 17, 3, 25, 0, 9], 4),
+])
+def test_run_fused_conserves_and_matches_sequential_rounds(sizes, k):
+    """ONE run_fused(k) dispatch conserves every task and follows the
+    exact trajectory of k sequential round() calls — the on-device
+    adaptive update is the same float32 computation the host controller
+    runs, so sizes, telemetry and proportion history all agree."""
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32)
+    rt_seq = StealRuntime(len(sizes), 128, SPEC, policy=pol, adaptive=True)
+    rt_fus = StealRuntime(len(sizes), 128, SPEC, policy=pol, adaptive=True)
+    ids = _seed(rt_seq, sizes)
+    _seed(rt_fus, sizes)
+    for _ in range(k):
+        rt_seq.round()
+    rt_fus.run_fused(k)
+    assert rt_fus.rounds_run == rt_seq.rounds_run == k
+    np.testing.assert_array_equal(rt_fus.sizes(), rt_seq.sizes())
+    assert rt_fus.controller.history == rt_seq.controller.history
+    assert rt_fus.telemetry.summary() == rt_seq.telemetry.summary()
+    assert _drained_ids(rt_fus) == sorted(ids)
+    assert _drained_ids(rt_seq) == sorted(ids)
+
+
+def test_run_fused_with_worker_body_conserves():
+    """Fused rounds interleaving a pop/consume body with kernel-backed
+    rebalancing consume every id exactly once."""
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=6,
+                      max_steal=16)
+    W = 4
+    rt = StealRuntime(W, 128, SPEC, policy=pol, use_kernel=True)
+    ids = _seed(rt, [30, 0, 0, 0])
+
+    def body(q, carry):
+        q, item, valid = q_ops.pop(q)
+        carry = carry + jnp.where(valid, item, 0)
+        return q, carry
+
+    carry = jnp.zeros((W,), jnp.int32)
+    for _ in range(15):
+        carry, _ = rt.run_fused(5, body, carry)
+        if rt.total_size() == 0:
+            break
+    assert rt.total_size() == 0
+    assert int(jnp.sum(carry)) == sum(ids)
+
+
+def test_hierarchical_accounting_is_exact_not_replicated():
+    """Per-level counters: seed so that NO intra-pod transfer is possible
+    (lanes within each pod are balanced) and exactly one cross-pod steal
+    happens.  Exact accounting reports that steal once; the former
+    upper-bound accounting replicated the cross-pod share per pod and
+    would have doubled it."""
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32)
+    rt = StealRuntime(8, 128, SPEC, policy=pol, pod_size=4, adaptive=False)
+    ids = _seed(rt, [20, 20, 20, 20, 0, 0, 0, 0])
+    rt.round()
+    # Cross-pod: rep sizes (20, 0) -> one steal of floor(20 * 0.5) = 10.
+    assert rt.telemetry.total_steals == 1
+    assert rt.telemetry.total_transferred == 10
+    # And the fused path reduces identically.
+    rt2 = StealRuntime(8, 128, SPEC, policy=pol, pod_size=4, adaptive=False)
+    _seed(rt2, [20, 20, 20, 20, 0, 0, 0, 0])
+    rt2.run_fused(1)
+    assert rt2.telemetry.summary() == rt.telemetry.summary()
+    np.testing.assert_array_equal(rt2.sizes(), rt.sizes())
+    for r in (rt, rt2):
+        for _ in range(4):
+            r.run_fused(2)
+    assert _drained_ids(rt) == sorted(ids)
+
+
+def test_run_fused_stacks_telemetry_rounds():
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32)
+    rt = StealRuntime(4, 128, SPEC, policy=pol)
+    _seed(rt, [40, 0, 0, 0])
+    _, stats = rt.run_fused(3)
+    # Stacked (k, ...) leaves, one telemetry record per fused round.
+    assert np.asarray(stats.n_transferred).shape[0] == 3
+    assert rt.telemetry.summary()["rounds"] == 3
+    assert len(rt.controller.history) == 4
 
 
 # ------------------------------------------- in-place vs functional parity
