@@ -1,22 +1,47 @@
-"""Shared benchmark utilities: ns-resolution latency measurement with the
-paper's methodology (queue state reset between iterations; mean over
-repeats after warmup)."""
+"""Shared benchmark harness.
+
+Latency methodology follows the paper (queue state reset between
+iterations; mean over repeats after warmup; for A/B comparisons on noisy
+shared machines use interleaved min-of-samples — see
+``fig8_optimized_steal._ab_min``).
+
+Since the BulkOps redesign the harness sweeps BOTH queue dialects
+through one surface:
+
+* **host implementations** behind the
+  :class:`repro.core.host_queue.HostQueue` protocol
+  (:func:`host_queue_impls` — the faithful paper port and the two
+  Taskflow-style baselines; :class:`repro.core.queue.PagedQueue`
+  satisfies the same protocol and can be added to any sweep);
+* **device backends** behind :class:`repro.core.ops.BulkOps`
+  (:func:`device_backends` — at least ``"reference"`` and ``"auto"``,
+  the paper's cross-implementation comparison for the ring queue).
+
+``bench_push`` / ``bench_pop`` / ``bench_steal`` time any HostQueue;
+the fig modules provide the matching BulkOps timers.
+"""
 
 from __future__ import annotations
 
 import statistics
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Tuple
 
-__all__ = ["time_ns", "Table"]
+__all__ = [
+    "time_ns",
+    "Table",
+    "host_queue_impls",
+    "device_backends",
+    "bench_push",
+    "bench_pop",
+    "bench_steal",
+]
 
 
 def time_ns(setup: Callable[[], object], op: Callable[[object], None],
             repeats: int = 200, warmup: int = 20) -> float:
     """Mean ns per op; ``setup`` builds fresh state per iteration
-    (the paper resets the queue every iteration).  For A/B comparisons on
-    noisy shared machines use interleaved min-of-samples instead (see
-    ``fig8_optimized_steal._ab_min``)."""
+    (the paper resets the queue every iteration)."""
     for _ in range(warmup):
         st = setup()
         op(st)
@@ -27,6 +52,88 @@ def time_ns(setup: Callable[[], object], op: Callable[[object], None],
         op(st)
         samples.append(time.perf_counter_ns() - t0)
     return statistics.mean(samples)
+
+
+# ---------------------------------------------------------------------------
+# The unified sweep surface
+# ---------------------------------------------------------------------------
+
+
+def host_queue_impls() -> Dict[str, Callable[[], object]]:
+    """Named HostQueue factories every host-level sweep iterates:
+    the paper's queue and the two Taskflow-style baselines."""
+    from repro.core.host_queue import (LinkedWSQueue, PerItemDequeQueue,
+                                       ResizingArrayQueue)
+
+    return {
+        "LF_Queue": LinkedWSQueue,
+        "TF_UB-style": PerItemDequeQueue,
+        "TF_BD-style": lambda: ResizingArrayQueue(capacity=64),
+    }
+
+
+def device_backends() -> Tuple[str, ...]:
+    """BulkOps backend names every device-level sweep iterates.  The
+    ``reference`` / ``auto`` pair is the paper's cross-implementation
+    comparison (oracle vs geometry-resolved kernels); on TPU the
+    explicit ``pallas`` routing is added as a third column."""
+    import jax
+
+    names: Tuple[str, ...] = ("reference", "auto")
+    if jax.default_backend() == "tpu":
+        names = names + ("pallas",)
+    return names
+
+
+def bench_push(factory: Callable[[], object], batch: int,
+               repeats: int = 200) -> float:
+    """ns per bulk push of ``batch`` items through the HostQueue
+    protocol.  Batch preparation (pre-linking / device transfer) happens
+    in ``setup`` via ``make_batch`` — only the splice is timed, which is
+    what the paper's Fig. 6 measures."""
+    payload = list(range(batch))
+
+    def setup():
+        q = factory()
+        return q, q.make_batch(payload)
+
+    def op(st):
+        q, prepared = st
+        q.push_batch(prepared)
+
+    return time_ns(setup, op, repeats=repeats)
+
+
+def bench_pop(factory: Callable[[], object], initial: int,
+              repeats: int = 300) -> float:
+    """ns per single pop from a queue seeded with ``initial`` items."""
+    items = list(range(initial))
+
+    def setup():
+        q = factory()
+        q.push_bulk(items)
+        return q
+
+    def op(q):
+        q.pop_item()
+
+    return time_ns(setup, op, repeats=repeats, warmup=30)
+
+
+def bench_steal(factory: Callable[[], object], proportion: float,
+                initial: int, repeats: int = 60) -> float:
+    """ns per proportional bulk steal from a queue of ``initial`` items."""
+    items = list(range(initial))
+
+    def setup():
+        q = factory()
+        q.push_bulk(items)
+        return q
+
+    def op(q):
+        q.steal_bulk(proportion)
+
+    return time_ns(setup, op, repeats=repeats, warmup=6)
 
 
 class Table:

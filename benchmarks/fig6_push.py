@@ -2,94 +2,75 @@
 
 Paper claim: LF_Queue's bulk push is a single splice, so latency is flat
 in batch size; the Taskflow-style baselines pay per-node costs that grow
-sharply.  Columns:
+sharply.  All columns come from the unified harness:
 
-  LF_Queue      — faithful host port (one splice of a pre-linked batch)
-  TF_UB-style   — per-item deque ops under a lock (unbounded baseline)
-  TF_BD-style   — resizing circular array (bounded baseline)
-  LFQ-JAX(dev)  — this framework's device ring queue (jitted masked
-                  scatter; one fused kernel regardless of batch size)
-  LFQ-JAX(kern) — the same push routed through the queue_push
-                  ring-scatter kernel path (Pallas on TPU — an in-place
-                  aliased splice — the jnp oracle elsewhere)
+* host implementations swept through the ``HostQueue`` protocol
+  (``benchmarks.common.host_queue_impls``): the faithful port and the
+  two Taskflow-style baselines;
+* device ring-queue backends swept through ``BulkOps``
+  (``benchmarks.common.device_backends``): at least
+  ``LFQ-JAX[reference]`` (jnp oracle) and ``LFQ-JAX[auto]``
+  (geometry-resolved kernel routing — the Pallas in-place aliased
+  splice on TPU, the kernel module's jnp oracle elsewhere) — the
+  paper's cross-implementation comparison for the same contract.
 
-The kernel column is the acceptance gate for the fused-superstep PR:
-its latency must stay flat (<= 1.5x from batch 1 to 1024); ``run()``
-returns the raw numbers so ``benchmarks/run.py --json`` can record the
-ratio in BENCH_PR2.json.
+The resolved-kernel column is the acceptance gate for the fused-superstep
+work: its latency must stay flat (<= 1.5x from batch 1 to 1024);
+``run()`` returns the raw numbers so ``benchmarks/run.py --json`` can
+record the ratio.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Table, time_ns
-from repro.core.host_queue import (LinkedWSQueue, PerItemDequeQueue,
-                                   ResizingArrayQueue, llist_from_iter)
-from repro.core import queue as q_ops
+from benchmarks.common import (Table, bench_push, device_backends,
+                               host_queue_impls, time_ns)
+from repro.core import ops as bulk_ops
 
 BATCHES = (1, 128, 512, 1024)
 CAPACITY = 4096
 
 
-def _bench_host(cls, batch: int, repeats: int = 200) -> float:
-    payload = list(range(batch))
-
-    if cls is LinkedWSQueue:
-        def setup():
-            return LinkedWSQueue(), llist_from_iter(payload)
-
-        def op(st):
-            q, ll = st
-            q.push(ll)
-    else:
-        def setup():
-            return cls() if cls is PerItemDequeQueue else cls(capacity=64)
-
-        def op(q):
-            q.push(payload)
-    return time_ns(setup, op, repeats=repeats)
-
-
-def _bench_jax(batch: int, use_kernel: bool = False,
-               repeats: int = 100) -> float:
+def _bench_device(backend: str, batch: int, repeats: int = 100) -> float:
+    """ns per device bulk push through a BulkOps backend.  The pure
+    (donate=False) path is timed — the same queue state is reused every
+    iteration, which donation would invalidate — matching the
+    methodology of the earlier BENCH numbers; on-TPU in-place behaviour
+    of the kernel is a separate open validation item (ROADMAP)."""
+    ops = bulk_ops.make_ops(backend, capacity=CAPACITY, max_push=batch)
     spec = jnp.zeros((), jnp.int32)
-    q0 = q_ops.make_queue(CAPACITY, spec)
+    q0 = bulk_ops.make_queue(CAPACITY, spec)
     items = jnp.arange(batch, dtype=jnp.int32)
-    fn = functools.partial(q_ops.push, use_kernel=use_kernel)
-    push = jax.jit(fn).lower(q0, items, jnp.int32(batch)).compile()
-
-    def setup():
-        return q0
+    n = jnp.int32(batch)
+    push = jax.jit(lambda q: ops.push(q, items, n)).lower(q0).compile()
 
     def op(q):
-        st, _ = push(q, items, jnp.int32(batch))
+        st, _ = push(q)
         jax.block_until_ready(st.size)
 
-    return time_ns(setup, op, repeats=repeats)
+    return time_ns(lambda: q0, op, repeats=repeats)
 
 
 def run(tiny: bool = False) -> Tuple[Table, Dict]:
-    t = Table("Fig. 6: push latency (ns) vs batch size",
-              "batch", ["LF_Queue", "TF_UB-style", "TF_BD-style",
-                        "LFQ-JAX(dev)", "LFQ-JAX(kern)"])
     repeats = 20 if tiny else 200
     jrepeats = 20 if tiny else 100
-    data: Dict = {"batches": list(BATCHES), "columns": {}}
-    cols = {
-        "LF_Queue": lambda b: _bench_host(LinkedWSQueue, b, repeats),
-        "TF_UB-style": lambda b: _bench_host(PerItemDequeQueue, b, repeats),
-        "TF_BD-style": lambda b: _bench_host(ResizingArrayQueue, b, repeats),
-        "LFQ-JAX(dev)": lambda b: _bench_jax(b, repeats=jrepeats),
-        "LFQ-JAX(kern)": lambda b: _bench_jax(b, use_kernel=True,
-                                              repeats=jrepeats),
-    }
-    for name in cols:
-        data["columns"][name] = []
+
+    cols: Dict[str, object] = {}
+    for name, factory in host_queue_impls().items():
+        cols[name] = (lambda b, f=factory: bench_push(f, b, repeats))
+    dev_names = device_backends()
+    for backend in dev_names:
+        cols[f"LFQ-JAX[{backend}]"] = (
+            lambda b, be=backend: _bench_device(be, b, jrepeats))
+
+    t = Table("Fig. 6: push latency (ns) vs batch size",
+              "batch", list(cols))
+    data: Dict = {"batches": list(BATCHES), "columns": {n: [] for n in cols},
+                  "device_backends": list(dev_names)}
     for b in BATCHES:
         row = []
         for name, bench in cols.items():
@@ -97,11 +78,12 @@ def run(tiny: bool = False) -> Tuple[Table, Dict]:
             data["columns"][name].append(ns)
             row.append(ns)
         t.add(b, row)
-    kern = data["columns"]["LFQ-JAX(kern)"]
+    kern = data["columns"]["LFQ-JAX[auto]"]
     data["kernel_flatness_1_to_1024"] = kern[-1] / max(kern[0], 1.0)
-    # Off-TPU the kernel column measures the dispatcher's oracle path
-    # (ring_scatter_ref — same structure, O(capacity) splice); record
-    # which path produced the numbers so BENCH_PR2.json is unambiguous.
+    # Off-TPU the auto column's kernel-routed ops measure the dispatcher's
+    # oracle path (ring_scatter_ref — same structure, O(capacity)
+    # splice); record which path produced the numbers so the JSON is
+    # unambiguous.
     data["kernel_column_path"] = ("pallas"
                                   if jax.default_backend() == "tpu"
                                   else "oracle")
@@ -111,5 +93,5 @@ def run(tiny: bool = False) -> Tuple[Table, Dict]:
 if __name__ == "__main__":
     table, data = run()
     table.show()
-    print(f"kernel flatness batch 1 -> {BATCHES[-1]}: "
+    print(f"resolved-backend flatness batch 1 -> {BATCHES[-1]}: "
           f"{data['kernel_flatness_1_to_1024']:.2f}x")

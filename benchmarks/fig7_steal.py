@@ -2,8 +2,13 @@
 of 10,000 nodes.
 
 Paper claim: LF_Queue's steal cost is dominated by the traversal to the
-cut point + suffix count and stays ~flat; per-item baselines grow
-linearly with the stolen count.  LFQ-JAX(dev) is the device ring gather.
+cut point and stays ~flat; per-item baselines grow linearly with the
+stolen count.  All columns come from the unified harness: host
+implementations through the ``HostQueue`` protocol (the LF_Queue column
+is the production ``steal_optimized`` variant; ``fig8`` measures
+counted-vs-optimized explicitly), device ring-queue backends through
+``BulkOps`` — at least ``LFQ-JAX[reference]`` and ``LFQ-JAX[auto]``
+(geometry-resolved ring-gather kernel routing).
 """
 
 from __future__ import annotations
@@ -13,73 +18,49 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Table, time_ns
-from repro.core.host_queue import (LinkedWSQueue, PerItemDequeQueue,
-                                   ResizingArrayQueue, llist_from_iter)
-from repro.core import queue as q_ops
+from benchmarks.common import (Table, bench_steal, device_backends,
+                               host_queue_impls, time_ns)
+from repro.core import ops as bulk_ops
 
 PROPORTIONS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6)
 INITIAL = 10_000
+CAPACITY = 16_384
+MAX_STEAL = 8192
 
 
-def _bench_host(cls, p: float, repeats: int = 60) -> float:
-    items = list(range(INITIAL))
-
-    if cls is LinkedWSQueue:
-        def setup():
-            q = LinkedWSQueue()
-            q.push(llist_from_iter(items))
-            return q
-
-        def op(q):
-            q.steal(p)
-    else:
-        def setup():
-            q = cls() if cls is PerItemDequeQueue else cls(capacity=64)
-            q.push(items)
-            return q
-
-        def op(q):
-            q.steal(p)
-    return time_ns(setup, op, repeats=repeats, warmup=6)
-
-
-def _bench_jax(p: float, use_kernel: bool = False,
-               repeats: int = 60) -> float:
+def _bench_device(backend: str, p: float, repeats: int = 60) -> float:
+    ops = bulk_ops.make_ops(backend, capacity=CAPACITY, max_steal=MAX_STEAL)
     spec = jnp.zeros((), jnp.int32)
-    q0 = q_ops.make_queue(16_384, spec)
+    q0 = bulk_ops.make_queue(CAPACITY, spec)
     items = jnp.arange(INITIAL, dtype=jnp.int32)
-    q0, _ = jax.jit(q_ops.push)(q0, items, jnp.int32(INITIAL))
+    q0, _ = ops.push(q0, items, jnp.int32(INITIAL), donate=False)
     jax.block_until_ready(q0.size)
-    steal = jax.jit(lambda q: q_ops.steal(q, p, max_steal=8192,
-                                          use_kernel=use_kernel))
-
-    def setup():
-        return q0
+    steal = jax.jit(lambda q: ops.steal(q, p, max_steal=MAX_STEAL))
 
     def op(q):
         st, batch, n = steal(q)
         jax.block_until_ready(n)
 
-    return time_ns(setup, op, repeats=repeats, warmup=6)
+    return time_ns(lambda: q0, op, repeats=repeats, warmup=6)
 
 
 def run(tiny: bool = False) -> Tuple[Table, Dict]:
-    t = Table(f"Fig. 7: steal latency (ns) vs proportion (initial {INITIAL})",
-              "steal %", ["LF_Queue", "TF_UB-style", "TF_BD-style",
-                          "LFQ-JAX(dev)", "LFQ-JAX(kernel)"])
     repeats = 10 if tiny else 60
-    data: Dict = {"proportions": list(PROPORTIONS), "columns": {}}
-    cols = {
-        "LF_Queue": lambda p: _bench_host(LinkedWSQueue, p, repeats),
-        "TF_UB-style": lambda p: _bench_host(PerItemDequeQueue, p, repeats),
-        "TF_BD-style": lambda p: _bench_host(ResizingArrayQueue, p, repeats),
-        "LFQ-JAX(dev)": lambda p: _bench_jax(p, repeats=repeats),
-        "LFQ-JAX(kernel)": lambda p: _bench_jax(p, use_kernel=True,
-                                                repeats=repeats),
-    }
-    for name in cols:
-        data["columns"][name] = []
+
+    cols: Dict[str, object] = {}
+    for name, factory in host_queue_impls().items():
+        cols[name] = (lambda p, f=factory:
+                      bench_steal(f, p, INITIAL, repeats))
+    dev_names = device_backends()
+    for backend in dev_names:
+        cols[f"LFQ-JAX[{backend}]"] = (
+            lambda p, be=backend: _bench_device(be, p, repeats))
+
+    t = Table(f"Fig. 7: steal latency (ns) vs proportion (initial {INITIAL})",
+              "steal %", list(cols))
+    data: Dict = {"proportions": list(PROPORTIONS),
+                  "columns": {n: [] for n in cols},
+                  "device_backends": list(dev_names)}
     for p in PROPORTIONS:
         row = []
         for name, bench in cols.items():

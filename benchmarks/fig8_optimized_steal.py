@@ -8,12 +8,12 @@ with an explicit sequential probe chain.
 
 This benchmark also exercises the production path end-to-end: the second
 table drives full :class:`repro.runtime.StealRuntime` rebalancing rounds
-(plan + kernel-backed block detach + all_to_all splice) and compares the
-kernel-backed steal (``use_kernel=True`` — Pallas ring-gather on TPU,
-the jnp oracle elsewhere) against the functional baseline at every
-measured proportion.  The flat-latency claim holds iff the kernel column
-is no slower than the functional one across the sweep (``--check``
-asserts it).
+(plan + backend-routed block detach + all_to_all splice) and compares
+the ``"pallas"`` BulkOps backend (Pallas ring-gather on TPU, the kernel
+module's jnp oracle elsewhere) against the ``"reference"`` backend at
+every measured proportion.  The flat-latency claim holds iff the kernel
+column is no slower than the reference one across the sweep
+(``--check`` asserts it).
 """
 
 from __future__ import annotations
@@ -25,9 +25,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import Table, time_ns
 from repro.core.host_queue import LinkedWSQueue, llist_from_iter
-from repro.core import queue as q_ops
+from repro.core import ops as bulk_ops
 from repro.core.policy import StealPolicy
 from repro.runtime import StealRuntime
+
+REFERENCE = bulk_ops.make_ops("reference")
+PALLAS = bulk_ops.make_ops("pallas")
 
 PROPORTIONS = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6)
 INITIAL = 10_000
@@ -52,16 +55,17 @@ def _host(optimized: bool, p: float) -> float:
 
 def _seeded_queue():
     spec = jnp.zeros((), jnp.int32)
-    q0 = q_ops.make_queue(CAPACITY, spec)
+    q0 = bulk_ops.make_queue(CAPACITY, spec)
     items = jnp.arange(INITIAL, dtype=jnp.int32)
-    q0, _ = jax.jit(q_ops.push)(q0, items, jnp.int32(INITIAL))
+    q0, _ = REFERENCE.push(q0, items, jnp.int32(INITIAL))
     jax.block_until_ready(q0.size)
     return q0
 
 
 def _jax_counted(p: float) -> float:
     q0 = _seeded_queue()
-    steal = jax.jit(lambda q: q_ops.steal_counted(q, p, max_steal=MAX_STEAL))
+    steal = jax.jit(lambda q: bulk_ops.steal_counted(q, p,
+                                                     max_steal=MAX_STEAL))
 
     def op(q):
         st, batch, n = steal(q)
@@ -93,11 +97,10 @@ def _ab_min(setup, op_a, op_b, repeats: int, warmup: int):
 
 
 def _jax_func_vs_kernel(p: float):
-    """(functional, kernel) steal latency, interleaved."""
+    """(reference, pallas) backend steal latency, interleaved."""
     q0 = _seeded_queue()
-    s_func = jax.jit(lambda q: q_ops.steal(q, p, max_steal=MAX_STEAL))
-    s_kern = jax.jit(lambda q: q_ops.steal(q, p, max_steal=MAX_STEAL,
-                                           use_kernel=True))
+    s_func = jax.jit(lambda q: REFERENCE.steal(q, p, max_steal=MAX_STEAL))
+    s_kern = jax.jit(lambda q: PALLAS.steal(q, p, max_steal=MAX_STEAL))
 
     def run_with(fn):
         def op(q):
@@ -110,24 +113,24 @@ def _jax_func_vs_kernel(p: float):
 
 
 def _executor_rounds(p: float):
-    """(functional, kernel) latency of one full rebalancing round through
+    """(reference, pallas) latency of one full rebalancing round through
     the unified executor — the replicated plan, the victim-side detach,
     the all_to_all block move and the thief splice — interleaved."""
     spec = jnp.zeros((), jnp.int32)
     policy = StealPolicy(proportion=p, low_watermark=1, high_watermark=8,
                          max_steal=MAX_STEAL)
     runtimes = {}
-    for use_kernel in (False, True):
+    for backend in ("reference", "pallas"):
         rt = StealRuntime(N_WORKERS, CAPACITY, spec, policy=policy,
-                          adaptive=False, use_kernel=use_kernel)
+                          adaptive=False, backend=backend)
         rt.push(0, jnp.arange(INITIAL, dtype=jnp.int32), INITIAL)
         seeded = jax.tree_util.tree_map(lambda x: x.copy(), rt.queues)
         rt.round()  # compile once outside the timed region
         jax.block_until_ready(rt.queues.size)
-        runtimes[use_kernel] = (rt, seeded)
+        runtimes[backend] = (rt, seeded)
 
-    def op_for(use_kernel):
-        rt, seeded = runtimes[use_kernel]
+    def op_for(backend):
+        rt, seeded = runtimes[backend]
 
         def op(_):
             # fresh copy per iteration (the round may donate its input)
@@ -136,15 +139,15 @@ def _executor_rounds(p: float):
             jax.block_until_ready(rt.queues.size)
         return op
 
-    return _ab_min(lambda: None, op_for(False), op_for(True),
+    return _ab_min(lambda: None, op_for("reference"), op_for("pallas"),
                    repeats=30, warmup=3)
 
 
 def run():
     t = Table("Fig. 8: steal latency (ns) — counted vs optimized vs kernel",
               "steal %", ["host counted", "host optimized", "JAX counted",
-                          "JAX functional", "JAX kernel", "host speedup",
-                          "kernel/func"])
+                          "JAX reference", "JAX pallas", "host speedup",
+                          "kernel/ref"])
     ratios = {}
     for p in PROPORTIONS:
         hc = _host(False, p)
@@ -156,9 +159,9 @@ def run():
                                  f"{hc / max(ho,1):.2f}x",
                                  f"{ratios[p]:.2f}x"])
 
-    t2 = Table("Fig. 8b: full executor round (ns) — kernel vs functional "
-               f"steal path ({N_WORKERS} lanes, {INITIAL} tasks on lane 0)",
-               "steal %", ["functional", "kernel-backed", "kernel/func"])
+    t2 = Table("Fig. 8b: full executor round (ns) — pallas vs reference "
+               f"backend ({N_WORKERS} lanes, {INITIAL} tasks on lane 0)",
+               "steal %", ["reference", "pallas", "kernel/ref"])
     round_ratios = {}
     for p in PROPORTIONS:
         rf, rk = _executor_rounds(p)
@@ -170,8 +173,8 @@ def run():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
-                    help="assert the kernel-backed path is no slower than "
-                         "the functional baseline at every proportion")
+                    help="assert the pallas backend is no slower than the "
+                         "reference backend at every proportion")
     args = ap.parse_args()
     t, t2, ratios, round_ratios = run()
     t.show()
@@ -185,9 +188,9 @@ def main():
         bad = {f"{kind}@{int(p*100)}%": f"{r:.2f}x"
                for kind, d in (("op", ratios), ("round", round_ratios))
                for p, r in d.items() if r > slack[kind]}
-        assert not bad, f"kernel path slower than functional baseline: {bad}"
-        print("CHECK OK: kernel-backed executor round within "
-              f"{slack['round']}x of the functional baseline at every "
+        assert not bad, f"pallas backend slower than reference: {bad}"
+        print("CHECK OK: pallas-backend executor round within "
+              f"{slack['round']}x of the reference backend at every "
               "proportion")
 
 

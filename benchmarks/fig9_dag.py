@@ -25,11 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Table
-from repro.core import queue as q_ops
 from repro.core.host_queue import (LinkedWSQueue, PerItemDequeQueue,
                                    llist_from_iter)
+from repro.core.ops import BulkOps
 from repro.core.policy import StealPolicy
-from repro.runtime import StealRuntime
+from repro.runtime import AdaptiveConfig, StealRuntime
 
 SIZES = (100_000, 1_000_000)
 WORKERS = (1, 2, 4, 8)
@@ -159,12 +159,11 @@ FUSED_K = 8
 SPEC = jax.ShapeDtypeStruct((), jnp.int32)
 
 
-def _device_body(n_nodes: int, batch: int, use_kernel: bool):
+def _device_body(n_nodes: int, batch: int, ops: BulkOps):
     fanout = jnp.int32(FANOUT)
 
     def body(q, carry):
-        q, nodes, n_popped = q_ops.pop_bulk(q, batch, jnp.int32(batch),
-                                            use_kernel=use_kernel)
+        q, nodes, n_popped = ops.pop_bulk(q, batch, jnp.int32(batch))
         valid = jnp.arange(batch, dtype=jnp.int32) < n_popped
         kids = (nodes[:, None] * fanout + 1
                 + jnp.arange(FANOUT, dtype=jnp.int32)[None, :])
@@ -172,18 +171,24 @@ def _device_body(n_nodes: int, batch: int, use_kernel: bool):
         flat, flive = kids.reshape(-1), live.reshape(-1)
         order = jnp.argsort(~flive, stable=True)  # compact live to front
         flat = jnp.where(flive[order], flat[order], 0)
-        q, _ = q_ops.push(q, flat, jnp.sum(flive.astype(jnp.int32)),
-                          use_kernel=use_kernel)
+        q, _ = ops.push(q, flat, jnp.sum(flive.astype(jnp.int32)))
         return q, carry + jnp.sum(valid.astype(jnp.int32))
 
     return body
 
 
-def _make_runtime(use_kernel: bool = True) -> StealRuntime:
-    policy = StealPolicy(proportion=0.5, low_watermark=DEVICE_BATCH // 2,
+def _make_runtime(backend: str = "auto", *,
+                  proportion: float = 0.5,
+                  adaptive: bool = True,
+                  adaptive_config: AdaptiveConfig | None = None
+                  ) -> StealRuntime:
+    policy = StealPolicy(proportion=proportion,
+                         low_watermark=DEVICE_BATCH // 2,
                          high_watermark=4 * DEVICE_BATCH, max_steal=1024)
     return StealRuntime(DEVICE_WORKERS, DEVICE_CAPACITY, SPEC,
-                        policy=policy, use_kernel=use_kernel)
+                        policy=policy, backend=backend,
+                        max_pop=DEVICE_BATCH, adaptive=adaptive,
+                        adaptive_config=adaptive_config)
 
 
 def device_run(k: int = FUSED_K, tiny: bool = False) -> Tuple[Table, Dict]:
@@ -191,7 +196,7 @@ def device_run(k: int = FUSED_K, tiny: bool = False) -> Tuple[Table, Dict]:
     n_nodes = 20_000 if tiny else 200_000
     repeats = 3 if tiny else 10
     rt = _make_runtime()
-    body = _device_body(n_nodes, DEVICE_BATCH, use_kernel=True)
+    body = _device_body(n_nodes, DEVICE_BATCH, rt.ops)
     rt.push(0, jnp.zeros((1,), jnp.int32), 1)
     carry0 = jnp.zeros((DEVICE_WORKERS,), jnp.int32)
     # Grow the frontier so the timed region rebalances real work, then
@@ -245,6 +250,88 @@ def device_run(k: int = FUSED_K, tiny: bool = False) -> Tuple[Table, Dict]:
     return t, data
 
 
+# ---------------------------------------------------------------------------
+# Steal-proportion autotuning sweep: AdaptiveConfig vs static proportions
+# ---------------------------------------------------------------------------
+#
+# The ROADMAP follow-on: does the adaptive controller actually beat a
+# well-chosen static proportion on the DAG workload?  Each config drains
+# the same DAG through the executor's fused early-exit path; the
+# machine-independent figure of merit is the superstep count to drain
+# (wall time tie-breaks).  The per-config trajectory is deterministic,
+# so a warm (compiling) pass establishes the counters and a second pass
+# from the identical seeded state is timed.
+
+STATIC_PROPORTIONS = (0.25, 0.5, 0.75)
+ADAPTIVE_GAINS = (0.25, 0.5, 1.0)
+ADAPTIVE_CLAMPS = ((0.125, 0.75), (0.25, 0.6))
+
+
+def _drain_config(label: str, n_nodes: int, max_rounds: int, **rt_kw):
+    rt = _make_runtime(**rt_kw)
+    body = _device_body(n_nodes, DEVICE_BATCH, rt.ops)
+    rt.push(0, jnp.zeros((1,), jnp.int32), 1)
+    seeded = jax.tree_util.tree_map(lambda x: x.copy(), rt.queues)
+    p0 = rt.proportion
+    carry0 = jnp.zeros((DEVICE_WORKERS,), jnp.int32)
+
+    # warm pass: compiles, and fixes the (deterministic) round count
+    carry = rt.run(body, carry0, max_rounds=max_rounds, fused=FUSED_K)
+    rounds = rt.rounds_run
+    explored = int(jnp.sum(carry))
+
+    # timed pass from the identical seeded state
+    rt.queues = jax.tree_util.tree_map(lambda x: x.copy(), seeded)
+    if rt.controller is not None:
+        rt.controller.proportion = p0
+    t0 = time.perf_counter()
+    rt.run(body, carry0, max_rounds=max_rounds, fused=FUSED_K)
+    jax.block_until_ready(rt.queues.size)
+    wall = time.perf_counter() - t0
+    return {"label": label, "rounds": rounds, "explored": explored,
+            "wall_s": wall, "drained": explored >= n_nodes,
+            "backend": rt.ops.resolved}
+
+
+def adaptive_sweep(tiny: bool = False) -> Tuple[Table, Dict]:
+    """Sweep AdaptiveConfig (gain x clamp range) against static
+    proportions on the DAG workload; the winner (fewest supersteps to
+    drain, wall-clock tie-break) is recorded for promotion to the
+    defaults."""
+    n_nodes = 20_000 if tiny else 200_000
+    max_rounds = 4000
+    results = []
+    for p in STATIC_PROPORTIONS:
+        results.append(_drain_config(f"static p={p}", n_nodes, max_rounds,
+                                     proportion=p, adaptive=False))
+    for gain in ADAPTIVE_GAINS:
+        for lo, hi in ADAPTIVE_CLAMPS:
+            cfg = AdaptiveConfig(gain=gain, min_proportion=lo,
+                                 max_proportion=hi)
+            results.append(_drain_config(
+                f"adaptive gain={gain} clamp=[{lo},{hi}]", n_nodes,
+                max_rounds, adaptive=True, adaptive_config=cfg))
+
+    complete = [r for r in results if r["drained"]] or results
+    winner = min(complete, key=lambda r: (r["rounds"], r["wall_s"]))
+    t = Table(f"Fig. 9 adaptive sweep: supersteps to drain a "
+              f"{n_nodes:,}-node DAG ({DEVICE_WORKERS} lanes)",
+              "config", ["supersteps", "explored", "wall ms", "winner"])
+    for r in results:
+        t.add(r["label"], [r["rounds"], r["explored"], r["wall_s"] * 1e3,
+                           "<--" if r is winner else ""])
+    data = {"n_nodes": n_nodes, "workers": DEVICE_WORKERS,
+            "fused_k": FUSED_K, "configs": results,
+            "winner": winner["label"],
+            # Off-TPU a kernel-routed backend executes the kernel
+            # module's jnp oracle, not Pallas — disambiguate what the
+            # per-config "backend" routing actually ran (as fig6 does).
+            "backend_path": ("pallas" if jax.default_backend() == "tpu"
+                             else "oracle")}
+    return t, data
+
+
 if __name__ == "__main__":
     run().show()
     device_run()[0].show()
+    adaptive_sweep()[0].show()

@@ -1,38 +1,18 @@
 """Pop-latency parity (paper §IV: ~213-216 ns across implementations,
-figure omitted in the paper; reproduced as a table)."""
+figure omitted in the paper; reproduced as a table).  Host
+implementations are swept through the unified ``HostQueue`` harness."""
 
 from __future__ import annotations
 
-from benchmarks.common import Table, time_ns
-from repro.core.host_queue import (LinkedWSQueue, PerItemDequeQueue,
-                                   ResizingArrayQueue, llist_from_iter)
+from benchmarks.common import Table, bench_pop, host_queue_impls
 
 N = 1024
 
 
-def _bench(cls) -> float:
-    items = list(range(N))
-
-    def setup():
-        if cls is LinkedWSQueue:
-            q = LinkedWSQueue()
-            q.push(llist_from_iter(items))
-        else:
-            q = cls() if cls is PerItemDequeQueue else cls(capacity=64)
-            q.push(items)
-        return q
-
-    def op(q):
-        q.pop()
-
-    return time_ns(setup, op, repeats=300, warmup=30)
-
-
 def run() -> Table:
     t = Table("Pop parity (ns/op)", "impl", ["latency"])
-    t.add("LF_Queue", [_bench(LinkedWSQueue)])
-    t.add("TF_UB-style", [_bench(PerItemDequeQueue)])
-    t.add("TF_BD-style", [_bench(ResizingArrayQueue)])
+    for name, factory in host_queue_impls().items():
+        t.add(name, [bench_pop(factory, N)])
     return t
 
 

@@ -2,12 +2,17 @@
 
   PYTHONPATH=src python -m benchmarks.run [--quick]
   PYTHONPATH=src python -m benchmarks.run --json [--tiny] [--out BENCH_PR2.json]
+  PYTHONPATH=src python -m benchmarks.run --sweep-adaptive [--tiny] \
+      [--out BENCH_PR3.json]
 
 ``--json`` runs the figures that seed the repo's perf trajectory (Fig. 6
-push latency incl. the kernel column, Fig. 7 steal latency, the Fig. 9
+push latency incl. the backend sweep, Fig. 7 steal latency, the Fig. 9
 device workload's fused-vs-per-round supersteps) and writes the raw
 numbers to a JSON file; ``--tiny`` shrinks repeats/sizes so the whole
-sweep fits a CPU CI smoke job.
+sweep fits a CPU CI smoke job.  ``--sweep-adaptive`` runs the
+steal-proportion autotuning sweep (AdaptiveConfig gain/clamp vs static
+proportions on the Fig. 9 DAG workload) and records the winner in
+BENCH_PR3.json.
 """
 
 from __future__ import annotations
@@ -53,6 +58,32 @@ def run_json(out: str, tiny: bool) -> int:
     return 0
 
 
+def run_adaptive_sweep(out: str, tiny: bool) -> int:
+    import jax
+
+    from benchmarks import fig9_dag
+
+    t0 = time.time()
+    table, data = fig9_dag.adaptive_sweep(tiny=tiny)
+    table.show()
+    results = {
+        "meta": {
+            "bench": "BENCH_PR3",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "tiny": tiny,
+            "wall_s": time.time() - t0,
+        },
+        "adaptive_sweep": data,
+    }
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[benchmarks] wrote {out} (winner: {data['winner']}, "
+          f"{results['meta']['wall_s']:.1f}s)")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -61,12 +92,17 @@ def main():
                     help="write machine-readable results to --out")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke sizes (implies --json)")
-    ap.add_argument("--out", default="BENCH_PR2.json",
-                    help="output path for --json mode")
+    ap.add_argument("--sweep-adaptive", action="store_true",
+                    help="AdaptiveConfig gain/clamp vs static proportions "
+                         "on the Fig. 9 DAG workload -> BENCH_PR3.json")
+    ap.add_argument("--out", default=None,
+                    help="output path for --json / --sweep-adaptive")
     args = ap.parse_args()
 
+    if args.sweep_adaptive:
+        return run_adaptive_sweep(args.out or "BENCH_PR3.json", args.tiny)
     if args.json or args.tiny:
-        return run_json(args.out, args.tiny)
+        return run_json(args.out or "BENCH_PR2.json", args.tiny)
 
     from benchmarks import (fig6_push, fig7_steal, fig8_optimized_steal,
                             pop_parity, fig9_dag, roofline_report,

@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--fused", type=int, default=8,
                     help="supersteps per device dispatch "
                          "(StealRuntime.run_fused; 1 = per-round)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "reference", "pallas"],
+                    help="BulkOps queue backend for every op (master "
+                         "steal/splice and worker bulk pop/push)")
     args = ap.parse_args()
 
     # 1. the paper's running example (Eq. 1 / Figs. 2-4)
@@ -45,14 +49,16 @@ def main():
     t0 = time.time()
     par_opt, par_stats = parallel_solve(inst, n_workers=args.workers,
                                         explore_width=args.width, batch=4,
-                                        fused_rounds=args.fused)
+                                        fused_rounds=args.fused,
+                                        backend=args.backend)
     t_par = time.time() - t0
     print(f"[n={args.n}] DP oracle={expect}  sequential={seq_opt} "
           f"({seq_stats['explored']} explored, {t_seq:.1f}s)  "
           f"parallel={par_opt} ({par_stats['explored']} explored over "
           f"{args.workers} workers, {par_stats['supersteps']} supersteps "
           f"fused {args.fused}/dispatch, "
-          f"{par_stats['transferred']} nodes bulk-stolen, {t_par:.1f}s)")
+          f"{par_stats['transferred']} nodes bulk-stolen, "
+          f"backend={par_stats['backend']}, {t_par:.1f}s)")
     print(f"per-worker explored: {par_stats['per_worker_explored']}")
     tele = par_stats["telemetry"]
     print(f"runtime telemetry: {tele['steals']} steals moved "

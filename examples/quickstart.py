@@ -6,8 +6,8 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import queue as q_ops
 from repro.core.host_queue import LinkedWSQueue, llist_from_iter
+from repro.core.ops import make_ops, make_queue
 from repro.core.policy import StealPolicy
 from repro.core.sharded_queue import make_sharded_queues, vmapped_superstep
 
@@ -18,23 +18,30 @@ print("owner pops newest:", q.pop())       # LIFO owner side
 begin, end, count = q.steal(0.5)           # master steals the tail suffix
 print(f"stealer got {count} oldest nodes; {len(q)} remain")
 
-# -- 2. the TPU-native ring queue: pure state transitions --------------------
-state = q_ops.make_queue(capacity=64, item_spec=jnp.zeros((), jnp.int32))
-state, _ = jax.jit(q_ops.push)(state, jnp.arange(16), jnp.int32(16))
-state, item, ok = jax.jit(q_ops.pop)(state)
+# -- 2. the TPU-native ring queue behind a BulkOps backend --------------------
+# "auto" resolves the kernel routing ONCE here, from the geometry
+# predicates (Pallas ring kernels where supported, the jnp reference
+# oracle elsewhere); swap "auto" for "reference" or "pallas" to pin it.
+ops = make_ops("auto", capacity=64, max_push=16, max_steal=32)
+print("backend:", ops, "->", ops.resolved)
+state = make_queue(capacity=64, item_spec=jnp.zeros((), jnp.int32))
+state, _ = ops.push(state, jnp.arange(16), jnp.int32(16), donate=True)
+state, item, ok = ops.pop(state)
 print("device pop:", int(item), "valid:", bool(ok))
 state, batch, n = jax.jit(
-    lambda s: q_ops.steal(s, 0.5, max_steal=32))(state)
+    lambda s: ops.steal(s, 0.5, max_steal=32))(state)
 print("device bulk steal:", int(n), "items; size now", int(state.size))
 
 # -- 3. the virtual master: SPMD rebalancing superstep ------------------------
+# The superstep resolves its own BulkOps from policy.backend at trace
+# time — every consumer shares the one operation contract.
 policy = StealPolicy(proportion=0.5, high_watermark=4, low_watermark=1,
-                     max_steal=16)
+                     max_steal=16, backend="auto")
 qs = make_sharded_queues(4, 64, jnp.zeros((), jnp.int32))
 # worker 0 overloaded, others empty
 seed = jnp.arange(16, dtype=jnp.int32)[None].repeat(4, 0)
 ns = jnp.asarray([16, 0, 0, 0], jnp.int32)
-qs, _ = jax.vmap(q_ops.push)(qs, seed, ns)
+qs, _ = jax.vmap(lambda q, b, n: ops.push(q, b, n))(qs, seed, ns)
 step = vmapped_superstep(policy)
 qs2, stats = step(qs)
 print("sizes before:", [int(x) for x in qs.size],

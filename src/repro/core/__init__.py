@@ -1,25 +1,38 @@
 """repro.core — the paper's contribution: lock-free bulk work-stealing.
 
 Layers:
-  queue         functional ring-deque with bulk push / proportional bulk steal
+  ops           the BulkOps backend contract (reference / pallas / auto)
+                over the functional ring-deque: bulk push / pop /
+                proportional bulk steal, one operation surface
+  queue         QueueState + host paging; deprecated use_kernel shims
   policy        steal policies + the virtual master's transfer planner
   master        SPMD rebalancing supersteps (all_gather + all_to_all)
   sharded_queue stacked per-worker queues, vmap/shard_map drivers
-  host_queue    faithful host-threaded port of the paper's Listings 1-4
+  host_queue    faithful host-threaded port of the paper's Listings 1-4,
+                behind the HostQueue protocol
   dd            decision-diagram branch-and-bound solver (paper's application)
 """
 
-from repro.core.queue import (  # noqa: F401
+from repro.core.ops import (  # noqa: F401
+    BulkOps,
     QueueState,
+    available_backends,
+    make_ops,
     make_queue,
     queue_size,
-    push,
+    register_backend,
+    steal_counted,
+)
+from repro.core.queue import (  # noqa: F401
+    PagedQueue,
     pop,
+    # Deprecated use_kernel-dialect shims, re-exported so pre-BulkOps
+    # package-level imports keep working for one release (each call
+    # emits DeprecationWarning).
     pop_bulk,
+    push,
     steal,
     steal_exact,
-    steal_counted,
-    PagedQueue,
 )
 from repro.core.policy import (  # noqa: F401
     StealPolicy,

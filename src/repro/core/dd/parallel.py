@@ -7,23 +7,24 @@ observes queue sizes and bulk-steals proportionally from busy workers to
 feed drained ones — the single-stealer, watermark-gated policy of §II.B.
 
 The solver runs on :class:`repro.runtime.StealRuntime` — the unified
-executor — so its steal hot path is the same kernel-backed, adaptively
+executor — so its steal hot path is the same backend-routed, adaptively
 tuned path the benchmarks and the serving scheduler exercise.  The
 per-worker body (vmapped over the worker axis; the same code shard_maps
-onto a mesh axis) is:
+onto a mesh axis) drives the runtime's resolved
+:class:`~repro.core.ops.BulkOps` backend for its owner-side ops:
 
-  1. pop_bulk(E)           — owner-side bulk pop
+  1. ops.pop_bulk(E)       — owner-side bulk pop
   2. explore_batch         — restricted/relaxed DD bounds + exact frontier
   3. pmax incumbent        — global bound (the master's bookkeeping)
   4. prune + compact       — children of dominated nodes are dropped
-  5. push(children)        — owner-side bulk push
+  5. ops.push(children)    — owner-side bulk push
 
 and the runtime appends 6. master.superstep (proportional bulk-steal
 rebalancing with the adaptive proportion) and records telemetry.  By
 default the solver advances ``fused_rounds`` supersteps per device
 dispatch (``StealRuntime.run_fused``): explore, rebalance and the
-adaptive update are one ``lax.scan`` so the hot loop never leaves the
-device between supersteps.
+adaptive update are one on-device loop that early-exits at drain, so the
+hot loop never leaves the device between supersteps.
 
 The incumbent is monotone and every subproblem is either solved exactly,
 pruned, or partitioned by its children, so the parallel solver returns
@@ -32,16 +33,17 @@ the same optimum as the sequential oracle (tests assert this).
 
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import queue as q_ops
 from repro.core.dd.bnb import Subproblem, explore_batch
 from repro.core.dd.diagram import NEG
 from repro.core.dd.knapsack import Knapsack
+from repro.core.ops import BulkOps, QueueState
 from repro.core.policy import StealPolicy
 from repro.runtime import StealRuntime
 
@@ -55,17 +57,17 @@ def _item_spec():
     return {"layer": z, "state": z, "value": z}
 
 
-def _make_worker_body(weights, profits, *, explore_width: int, batch: int,
-                      n_vars: int, use_kernel: bool = False):
+def _make_worker_body(weights, profits, ops: BulkOps, *, explore_width: int,
+                      batch: int, n_vars: int):
     """One worker's slice of the solver superstep (runs under vmap with
-    the runtime's axis name in scope).  With ``use_kernel`` the owner-side
-    bulk pop and push run the Pallas ring-slice / ring-scatter kernels —
-    the same hot path the master's steal already uses."""
+    the runtime's axis name in scope).  ``ops`` is the runtime's resolved
+    BulkOps backend, so the owner-side bulk pop and push run the same
+    routing (Pallas ring-slice / ring-scatter when resolved) as the
+    master's steal."""
 
-    def body(q: q_ops.QueueState, carry):
+    def body(q: QueueState, carry):
         # 1. bulk pop up to `batch` subproblems
-        q, items, n_popped = q_ops.pop_bulk(q, batch, jnp.int32(batch),
-                                            use_kernel=use_kernel)
+        q, items, n_popped = ops.pop_bulk(q, batch, jnp.int32(batch))
         valid = jnp.arange(batch, dtype=jnp.int32) < n_popped
         subs = Subproblem(layer=items["layer"], state=items["state"],
                           value=items["value"])
@@ -96,7 +98,7 @@ def _make_worker_body(weights, profits, *, explore_width: int, batch: int,
 
         # 5. bulk push (step 6, the rebalancing superstep, is appended by
         # the runtime)
-        q, _ = q_ops.push(q, flat, n_children, use_kernel=use_kernel)
+        q, _ = ops.push(q, flat, n_children)
         return q, {"incumbent": incumbent,
                    "explored": carry["explored"] + n_popped}
 
@@ -107,19 +109,29 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
                    explore_width: int = 16, batch: int = 8,
                    capacity: int = 4096, policy: StealPolicy | None = None,
                    max_supersteps: int = 10_000, adaptive: bool = True,
-                   use_kernel: bool = True,
-                   fused_rounds: int = 8) -> Tuple[int, dict]:
+                   backend: str | BulkOps | None = None,
+                   fused_rounds: int = 8,
+                   use_kernel: bool | None = None) -> Tuple[int, dict]:
     """Solve on W executor lanes (the same round shard_maps onto a mesh).
 
-    ``fused_rounds > 1`` advances that many supersteps per device
-    dispatch (``StealRuntime.run_fused`` — worker explore, rebalance and
-    the adaptive proportion update all inside one ``lax.scan``); the
-    drain check runs between fused blocks, so the trailing block may run
-    a few empty no-op rounds past the drain — supersteps counts them.
+    ``backend`` optionally overrides the :class:`~repro.core.ops.BulkOps`
+    routing for every queue op (master steal/splice AND the worker
+    body's bulk pop/push); when omitted, ``policy.backend`` (default
+    ``"auto"``) decides, resolved from the geometry at runtime
+    construction.  ``fused_rounds > 1`` advances up to that many
+    supersteps per device dispatch (``StealRuntime.run_fused`` — worker
+    explore, rebalance and the adaptive proportion update all in one
+    on-device loop, early-exiting at drain).
 
     Returns (optimum, stats); ``stats["telemetry"]`` carries the
     runtime's per-round rebalancing summary.
     """
+    if use_kernel is not None:  # deprecation shim (pre-BulkOps dialect)
+        warnings.warn(
+            "parallel_solve(use_kernel=...) is deprecated; pass "
+            "backend='pallas'/'reference'/'auto' instead",
+            DeprecationWarning, stacklevel=2)
+        backend = "pallas" if use_kernel else "reference"
     policy = policy or StealPolicy(proportion=0.5, high_watermark=4,
                                    low_watermark=0,
                                    max_steal=min(capacity, 1024))
@@ -128,14 +140,14 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
 
     runtime = StealRuntime(n_workers, capacity, _item_spec(),
                            policy=policy, adaptive=adaptive,
-                           use_kernel=use_kernel, axis_name=AXIS)
+                           backend=backend, max_pop=batch, axis_name=AXIS)
     # seed: root subproblem on worker 0
     runtime.push(0, {"layer": jnp.zeros((1,), jnp.int32),
                      "state": jnp.full((1,), inst.capacity, jnp.int32),
                      "value": jnp.zeros((1,), jnp.int32)}, 1)
 
-    body = _make_worker_body(w, p, explore_width=explore_width, batch=batch,
-                             n_vars=inst.n, use_kernel=use_kernel)
+    body = _make_worker_body(w, p, runtime.ops, explore_width=explore_width,
+                             batch=batch, n_vars=inst.n)
     carry = {"incumbent": jnp.full((n_workers,), NEG, jnp.int32),
              "explored": jnp.zeros((n_workers,), jnp.int32)}
 
@@ -148,5 +160,6 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
         "transferred": runtime.telemetry.total_transferred,
         "per_worker_explored": [int(x) for x in carry["explored"]],
         "telemetry": runtime.telemetry.summary(),
+        "backend": runtime.ops.resolved,
     }
     return int(carry["incumbent"][0]), stats

@@ -29,17 +29,70 @@ Fidelity notes (recorded per DESIGN.md §2):
 from __future__ import annotations
 
 import threading
-from typing import Any, List, Optional, Tuple
+from typing import Any, Iterable, List, Optional, Protocol, Tuple, runtime_checkable
 
 __all__ = [
     "LFNode",
     "llist_from_iter",
+    "HostQueue",
     "LinkedWSQueue",
     "PerItemDequeQueue",
     "ResizingArrayQueue",
 ]
 
 QUEUE_LIMIT = 2  # the paper's ``_queue_limit_``
+
+
+@runtime_checkable
+class HostQueue(Protocol):
+    """The uniform host-level queue contract — the host analogue of
+    :class:`repro.core.ops.BulkOps`.
+
+    Every host implementation (the faithful :class:`LinkedWSQueue` port,
+    the Taskflow-style :class:`PerItemDequeQueue` /
+    :class:`ResizingArrayQueue` baselines, and the device-backed
+    :class:`repro.core.queue.PagedQueue`) satisfies it, so the
+    benchmark harness (``benchmarks/common.py``) and the serving /
+    pipeline masters sweep or swap implementations through ONE surface.
+
+    The protocol deliberately uses plain-python payload lists — the
+    native representations (pre-linked ``llist`` batches, device rings)
+    stay available on each class for the faithful benchmarks.
+    """
+
+    def push_bulk(self, items: Iterable[Any]) -> None:
+        """Owner side: enqueue a batch of items (one bulk operation).
+        Deque convention across ALL implementations: later items are
+        newer — ``pop_item`` returns the batch's last item first, the
+        stealer reaches its first items last-retained."""
+        ...
+
+    def pop_item(self) -> Optional[Any]:
+        """Owner side: pop the newest item, or None when empty."""
+        ...
+
+    def steal_bulk(self, proportion: float) -> List[Any]:
+        """Stealer side: detach ~``proportion`` of the queue from the
+        steal side; returns the stolen payloads.  Intra-block order is
+        implementation-defined.  The pure host implementations take
+        exactly the oldest items; block/page-granular implementations
+        (``PagedQueue``) approximate the oldest-side discipline at their
+        transfer granularity — overflow pages move whole, whichever
+        items they hold."""
+        ...
+
+    def make_batch(self, items: Iterable[Any]) -> Any:
+        """Producer-side batch preparation (pre-linking, device transfer).
+        Separated from :meth:`push_batch` so the benchmark harness times
+        only the splice — the paper's Fig. 6 measures exactly that."""
+        ...
+
+    def push_batch(self, prepared: Any) -> None:
+        """Owner side: splice a batch prepared by :meth:`make_batch`."""
+        ...
+
+    def __len__(self) -> int:
+        ...
 
 
 class LFNode:
@@ -201,6 +254,35 @@ class LinkedWSQueue:
     def __len__(self) -> int:
         return self.size
 
+    # -- HostQueue protocol adapters -------------------------------------------
+
+    def push_bulk(self, items: Iterable[Any]) -> None:
+        # The native splice consumes head-first (the batch's FIRST item
+        # pops first); the protocol's deque convention is last-is-newest,
+        # so pre-link in reverse.
+        self.push(llist_from_iter(reversed(list(items))))
+
+    def make_batch(self, items: Iterable[Any]):
+        """Native pre-linked batch (head-first order, as in the paper's
+        Listing 2 — ordering is implementation-defined here, unlike
+        :meth:`push_bulk`)."""
+        return llist_from_iter(items)
+
+    def push_batch(self, prepared) -> None:
+        self.push(prepared)
+
+    def pop_item(self) -> Optional[Any]:
+        return self.pop()
+
+    def steal_bulk(self, proportion: float) -> List[Any]:
+        begin, _, _count = self.steal_optimized(proportion)
+        out: List[Any] = []
+        node = begin
+        while node is not None:
+            out.append(node.payload)
+            node = node.next
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Baselines (the paper compares against Taskflow's bounded/unbounded deques;
@@ -242,6 +324,17 @@ class PerItemDequeQueue:
 
     def __len__(self):
         return len(self._dq)
+
+    # -- HostQueue protocol adapters (push/steal are already list-shaped) ----
+
+    push_bulk = push
+    pop_item = pop
+    steal_bulk = steal
+
+    def make_batch(self, items):
+        return list(items)
+
+    push_batch = push
 
 
 class ResizingArrayQueue:
@@ -289,3 +382,14 @@ class ResizingArrayQueue:
 
     def __len__(self):
         return self._n
+
+    # -- HostQueue protocol adapters (push/steal are already list-shaped) ----
+
+    push_bulk = push
+    pop_item = pop
+    steal_bulk = steal
+
+    def make_batch(self, items):
+        return list(items)
+
+    push_batch = push

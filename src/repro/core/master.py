@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import queue as q_ops
+from repro.core import ops as bulk_ops
+from repro.core.ops import QueueState
 from repro.core.policy import StealPolicy, plan_transfers
 
 __all__ = ["RebalanceStats", "superstep", "hierarchical_superstep"]
@@ -68,6 +69,17 @@ class RebalanceStats(NamedTuple):
     n_steals_xpod: jnp.ndarray
 
 
+def _resolve_ops(policy: StealPolicy, q: QueueState) -> bulk_ops.BulkOps:
+    """Resolve the BulkOps backend from ``policy.backend`` and the queue
+    geometry — at trace time, once per compilation (this is where
+    ``"auto"`` consults the kernel geometry predicates; the master's
+    push is the thief splice, bounded by ``max_steal``)."""
+    cap = jax.tree_util.tree_leaves(q.buf)[0].shape[0]
+    return bulk_ops.make_ops(policy.backend, capacity=cap,
+                             max_push=policy.max_steal,
+                             max_steal=policy.max_steal)
+
+
 def _mask_rows(batch: Pytree, live: jnp.ndarray) -> Pytree:
     def _m(x):
         shape = (live.shape[0],) + (1,) * (x.ndim - 1)
@@ -77,14 +89,24 @@ def _mask_rows(batch: Pytree, live: jnp.ndarray) -> Pytree:
 
 
 def superstep(
-    q: q_ops.QueueState,
+    q: QueueState,
     policy: StealPolicy,
     *,
     axis_name: str,
-) -> Tuple[q_ops.QueueState, RebalanceStats]:
+    ops: bulk_ops.BulkOps | None = None,
+) -> Tuple[QueueState, RebalanceStats]:
     """One rebalancing round.  Must run inside ``shard_map`` (or
     ``vmap(axis_name=...)`` for host-side testing) over ``axis_name`` where
-    each lane owns one :class:`QueueState`."""
+    each lane owns one :class:`QueueState`.
+
+    ``ops`` is the :class:`~repro.core.ops.BulkOps` backend serving the
+    victim-side detach and the thief-side splice; when omitted it is
+    resolved from ``policy.backend`` and the queue geometry ONCE at trace
+    time (``"auto"`` consults the kernel geometry predicates here, never
+    per call).
+    """
+    if ops is None:
+        ops = _resolve_ops(policy, q)
     # psum of a literal folds to the static axis size (jax<0.5 has no
     # lax.axis_size).
     n_workers = lax.psum(1, axis_name)
@@ -104,11 +126,9 @@ def superstep(
     thief_id = jnp.argmax(steals_me).astype(jnp.int32)  # 0 when none (amt==0)
 
     # (3) victim severs its tail block — single cursor bump linearizes.
-    # With policy.use_kernel the detach is the Pallas ring-gather kernel.
-    q, block, n_out = q_ops.steal_exact(
-        q, stolen_amt, max_steal=policy.max_steal,
-        use_kernel=policy.use_kernel,
-    )
+    # With a kernel-routed backend the detach is the Pallas ring-gather.
+    q, block, n_out = ops.steal_exact(q, stolen_amt,
+                                      max_steal=policy.max_steal)
 
     # Outbox: one row per peer, only the thief's row is populated.
     def _outbox(x):
@@ -126,11 +146,11 @@ def superstep(
     counts_in = lax.all_to_all(counts, axis_name, split_axis=0, concat_axis=0)
 
     # (4) thief splices: at most one row is non-empty, blocks are pre-masked
-    # so a sum collapses the inbox without a gather.  With
-    # policy.use_kernel the splice is the Pallas ring-scatter kernel.
+    # so a sum collapses the inbox without a gather.  With a kernel-routed
+    # backend the splice is the Pallas ring-scatter kernel.
     recv_n = jnp.sum(counts_in)
     recv = jax.tree_util.tree_map(lambda x: jnp.sum(x, axis=0), inbox)
-    q, _ = q_ops.push(q, recv, recv_n, use_kernel=policy.use_kernel)
+    q, _ = ops.push(q, recv, recv_n)
 
     sizes_after = lax.all_gather(q.size, axis_name)
     stats = RebalanceStats(
@@ -145,17 +165,21 @@ def superstep(
 
 
 def hierarchical_superstep(
-    q: q_ops.QueueState,
+    q: QueueState,
     policy: StealPolicy,
     *,
     worker_axis: str,
     pod_axis: str,
-) -> Tuple[q_ops.QueueState, RebalanceStats]:
+    ops: bulk_ops.BulkOps | None = None,
+) -> Tuple[QueueState, RebalanceStats]:
     """Two-level rebalancing for multi-pod meshes: first the flat superstep
     within each pod (cheap ICI), then one superstep across pods where each
     pod's lane-0 worker acts as the pod representative (DCN-scale traffic is
-    one block per pod, not per worker)."""
-    q, stats = superstep(q, policy, axis_name=worker_axis)
+    one block per pod, not per worker).  ``ops`` as in :func:`superstep`
+    (resolved once, shared by both levels)."""
+    if ops is None:
+        ops = _resolve_ops(policy, q)
+    q, stats = superstep(q, policy, axis_name=worker_axis, ops=ops)
 
     # Cross-pod: only lane 0 of each pod participates with its real size;
     # other lanes advertise "full enough not to be idle, small enough not
@@ -163,11 +187,11 @@ def hierarchical_superstep(
     me = lax.axis_index(worker_axis)
     sentinel = jnp.int32(policy.low_watermark + 1)
     eff_size = jnp.where(me == 0, q.size, sentinel)
-    q_eff = q_ops.QueueState(buf=q.buf, lo=q.lo, size=eff_size)
-    q_eff, pod_stats = superstep(q_eff, policy, axis_name=pod_axis)
+    q_eff = QueueState(buf=q.buf, lo=q.lo, size=eff_size)
+    q_eff, pod_stats = superstep(q_eff, policy, axis_name=pod_axis, ops=ops)
     # Restore true size accounting for what moved at pod level.
     delta = q_eff.size - eff_size
-    q = q_ops.QueueState(buf=q_eff.buf, lo=q_eff.lo, size=q.size + delta)
+    q = QueueState(buf=q_eff.buf, lo=q_eff.lo, size=q.size + delta)
 
     # Exact per-level accounting: the intra-pod share stays in
     # n_transferred/n_steals; the pod-level plan's counts go in the xpod

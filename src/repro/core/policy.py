@@ -10,6 +10,7 @@ size vector (see ``core.master``).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax.numpy as jnp
 
@@ -30,9 +31,15 @@ class StealPolicy:
       high_watermark: a worker is a steal *victim* only above this.
       max_steal: static upper bound on a single bulk transfer (ring/buffer
         size on device).
-      use_kernel: route the victim-side block detach through the Pallas
-        ring-gather kernel (``repro.kernels.queue_steal``); falls back to
-        the jnp oracle on non-TPU backends or incompatible geometries.
+      backend: name of the :class:`repro.core.ops.BulkOps` backend serving
+        the master's queue ops (``"reference"`` / ``"pallas"`` /
+        ``"auto"``) — consumers resolve it via ``make_ops`` with their
+        geometry; the default ``"auto"`` resolves to the kernel routing
+        exactly where the geometry predicates admit it (and honours the
+        ``REPRO_QUEUE_BACKEND`` override).  The deprecated
+        ``use_kernel=`` boolean still maps onto it (True ->
+        ``"pallas"``, False -> ``"reference"``) with a
+        :class:`DeprecationWarning`, for one release.
     """
 
     proportion: float = 0.5
@@ -40,7 +47,21 @@ class StealPolicy:
     low_watermark: int = 1
     high_watermark: int = 8
     max_steal: int = 256
-    use_kernel: bool = False
+    backend: str = "auto"
+    # Deprecation shim: the pre-BulkOps use_kernel dialect.
+    use_kernel: dataclasses.InitVar[bool | None] = None
+
+    def __post_init__(self, use_kernel: bool | None):
+        if use_kernel is not None:
+            warnings.warn(
+                "StealPolicy(use_kernel=...) is deprecated; pass "
+                "backend='pallas' (use_kernel=True) or "
+                "backend='reference' (use_kernel=False) instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            object.__setattr__(self, "backend",
+                               "pallas" if use_kernel else "reference")
 
 
 def proportional(p: float, **kw) -> StealPolicy:

@@ -13,16 +13,13 @@ re-thought for a functional, static-shape SPMD runtime:
   ``start->next = null`` write) is the single returned-cursor update: a
   ``steal`` is linearized at the ``lo += n`` bump, a ``push`` at the
   ``size += n`` bump.  Because states are immutable there are no data races
-  by construction; the paper's acquire/release reasoning does not transfer
-  and is not needed (see DESIGN.md §2).
-* Bulk operations are O(batch) *vectorized* copies that fuse into a single
-  XLA kernel — per-item cost is constant and latency is flat in the batch
-  size, reproducing the paper's Fig. 6 claim natively.  With
-  ``use_kernel=True`` every hot-path op is a hand-written Pallas kernel:
-  the steal-side detach (``kernels.queue_steal.ring_gather``), the push
-  splice (``kernels.queue_push.ring_scatter`` — in-place aliased, never an
-  O(capacity) copy) and the owner-side bulk pop
-  (``kernels.queue_push.ring_slice``).
+  by construction (see DESIGN.md §2).
+* The operations live behind the :class:`repro.core.ops.BulkOps` backend
+  contract — ``"reference"`` (jnp oracle), ``"pallas"`` (hand-written
+  Pallas ring kernels) or ``"auto"`` (geometry-resolved at construction).
+  Bulk operations are O(batch) vectorized copies whose per-item cost is
+  constant and whose latency is flat in the batch size, reproducing the
+  paper's Fig. 6 claim natively.
 * The paper's **optimized steal** (skip the tail re-traversal when the owner
   is idle) is the TPU-native default: the stolen count is always known from
   cursors.  ``steal_counted`` additionally performs the sequential traversal
@@ -34,16 +31,41 @@ re-thought for a functional, static-shape SPMD runtime:
 
 Payloads are arbitrary pytrees whose leaves share a leading ``capacity``
 (in the queue) / ``batch`` (in flight) dimension.
+
+DEPRECATION SHIM LAYER
+----------------------
+The module-level op functions (``push`` / ``pop_bulk`` / ``steal`` /
+``steal_exact`` and their ``*_inplace`` variants) with their
+``use_kernel=`` booleans are the PRE-BulkOps dialect.  They keep working
+for one release, emit :class:`DeprecationWarning`, and forward to the
+equivalent backend call (``use_kernel=True`` -> the ``"pallas"``
+backend, ``False`` -> ``"reference"``; ``*_inplace`` -> ``donate=True``).
+New code constructs a backend with :func:`repro.core.ops.make_ops`.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+import numpy as np
+
+from repro.core.ops import (  # noqa: F401  (re-exported, non-deprecated)
+    DEFAULT_QUEUE_LIMIT,
+    BulkOps,
+    QueueState,
+    kernel_pop_available,
+    kernel_push_available,
+    kernel_steal_available,
+    make_ops,
+    make_queue,
+    queue_size,
+    steal_counted,
+)
+from repro.core.ops import _pop  # single-item pop has no kernel dialect
 
 __all__ = [
     "QueueState",
@@ -58,6 +80,7 @@ __all__ = [
     "kernel_steal_available",
     "kernel_push_available",
     "kernel_pop_available",
+    "InPlaceOps",
     "inplace_ops",
     "push_inplace",
     "pop_bulk_inplace",
@@ -67,321 +90,117 @@ __all__ = [
 
 Pytree = Any
 
-# Default abort threshold, mirroring the paper's ``_queue_limit_``.
-DEFAULT_QUEUE_LIMIT = 2
-
-
-class QueueState(NamedTuple):
-    """Immutable queue state.
-
-    Attributes:
-      buf:  pytree of ``(capacity, ...)`` arrays holding payloads.
-      lo:   int32 physical index of the oldest element (steal side).
-      size: int32 number of live elements; owner side is ``(lo+size) % cap``.
-    """
-
-    buf: Pytree
-    lo: jnp.ndarray
-    size: jnp.ndarray
-
-
-def _capacity(q: QueueState) -> int:
-    return jax.tree_util.tree_leaves(q.buf)[0].shape[0]
-
-
-def _batch_size(batch: Pytree) -> int:
-    return jax.tree_util.tree_leaves(batch)[0].shape[0]
-
-
-def make_queue(capacity: int, item_spec: Pytree) -> QueueState:
-    """Create an empty queue.
-
-    Args:
-      capacity: static ring capacity.
-      item_spec: pytree of ``jax.ShapeDtypeStruct`` (or arrays) describing a
-        single item — leaves get a leading ``capacity`` dimension.
-    """
-    buf = jax.tree_util.tree_map(
-        lambda s: jnp.zeros((capacity,) + tuple(s.shape), dtype=s.dtype),
-        item_spec,
-    )
-    return QueueState(buf=buf, lo=jnp.int32(0), size=jnp.int32(0))
-
-
-def queue_size(q: QueueState) -> jnp.ndarray:
-    return q.size
-
-
-# ---------------------------------------------------------------------------
-# Owner operations
-# ---------------------------------------------------------------------------
-
-
-def kernel_push_available(capacity: int, max_push: int) -> bool:
-    """Whether the Pallas ring-scatter kernel can serve a push of this
-    geometry (the kernel module owns the block-tiling rule)."""
-    from repro.kernels.queue_push.kernel import ring_scatter_supported
-
-    return ring_scatter_supported(capacity, max_push)
-
-
-def kernel_pop_available(capacity: int, max_n: int) -> bool:
-    """Whether the Pallas ring-slice kernel can serve a bulk pop of this
-    geometry."""
-    from repro.kernels.queue_push.kernel import ring_slice_supported
-
-    return ring_slice_supported(capacity, max_n)
-
-
-def push(q: QueueState, batch: Pytree, n: jnp.ndarray, *,
-         use_kernel: bool = False) -> Tuple[QueueState, jnp.ndarray]:
-    """Bulk push ``n`` items (owner side).
-
-    ``batch`` leaves have static leading dim ``B >= n``; only the first ``n``
-    rows are enqueued.  Returns ``(new_state, n_pushed)`` where ``n_pushed``
-    is clamped to the available space (callers wanting unbounded semantics
-    wrap the queue in :class:`PagedQueue`).
-
-    Cost: one masked ring-scatter — O(B) vectorized, constant per item.
-    The ``size + n`` update is the linearization point.  ``use_kernel=True``
-    routes the splice through
-    :func:`repro.kernels.queue_push.ops.push_scatter` (the Pallas
-    ring-scatter on TPU — an in-place aliased splice that never copies the
-    full ring — and the jnp oracle elsewhere); the generic XLA scatter
-    below remains the fallback for unsupported geometries.
-    """
-    cap = _capacity(q)
-    bsz = _batch_size(batch)
-    n = jnp.minimum(jnp.asarray(n, jnp.int32), jnp.int32(cap) - q.size)
-    n = jnp.maximum(n, 0)
-    if use_kernel and kernel_push_available(cap, bsz):
-        from repro.kernels.queue_push.ops import push_scatter
-
-        buf = push_scatter(
-            q.buf, batch, (q.lo + q.size) % cap, n,
-            use_pallas=jax.default_backend() == "tpu",
-        )
-        return QueueState(buf=buf, lo=q.lo, size=q.size + n), n
-    offs = jnp.arange(bsz, dtype=jnp.int32)
-    phys = (q.lo + q.size + offs) % cap
-    # Rows beyond ``n`` are routed out of bounds and dropped.
-    phys = jnp.where(offs < n, phys, cap)
-    buf = jax.tree_util.tree_map(
-        lambda b, x: b.at[phys].set(x, mode="drop"), q.buf, batch
-    )
-    return QueueState(buf=buf, lo=q.lo, size=q.size + n), n
-
 
 def pop(q: QueueState) -> Tuple[QueueState, Pytree, jnp.ndarray]:
     """Pop the newest item (owner side, LIFO).
 
     Returns ``(new_state, item, valid)``; ``item`` is arbitrary when
     ``valid`` is False (queue empty) — the null-pointer analogue.
+    (Not deprecated: ``pop`` is backend-independent — there is no kernel
+    dialect to choose.)
     """
-    cap = _capacity(q)
-    valid = q.size > 0
-    idx = (q.lo + jnp.maximum(q.size - 1, 0)) % cap
-    item = jax.tree_util.tree_map(lambda b: b[idx], q.buf)
-    new_size = jnp.where(valid, q.size - 1, q.size)
-    return QueueState(buf=q.buf, lo=q.lo, size=new_size), item, valid
-
-
-def pop_bulk(
-    q: QueueState, max_n: int, n: jnp.ndarray, *, use_kernel: bool = False
-) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    """Bulk pop up to ``n`` newest items (owner side).
-
-    Returns ``(new_state, batch, n_popped)``; ``batch`` leaves have static
-    leading dim ``max_n`` with valid rows ``[0, n_popped)`` in queue order
-    (oldest of the popped block first) and rows ``>= n_popped`` zeroed
-    (safe for summing collectives, and identical across the kernel and
-    fallback paths).  Used by vectorized explorers that consume several
-    tasks per superstep.  ``use_kernel=True`` routes the detach through
-    :func:`repro.kernels.queue_push.ops.pop_slice` (Pallas ring-slice on
-    TPU, the jnp oracle elsewhere).
-    """
-    cap = _capacity(q)
-    n = jnp.minimum(jnp.minimum(jnp.asarray(n, jnp.int32), q.size), max_n)
-    n = jnp.maximum(n, 0)
-    if use_kernel and kernel_pop_available(cap, max_n):
-        from repro.kernels.queue_push.ops import pop_slice
-
-        batch = pop_slice(
-            q.buf, q.lo, q.size, n, max_n=max_n,
-            use_pallas=jax.default_backend() == "tpu",
-        )
-        return QueueState(buf=q.buf, lo=q.lo, size=q.size - n), batch, n
-    offs = jnp.arange(max_n, dtype=jnp.int32)
-    start = q.size - n  # logical offset of the popped block
-    phys = (q.lo + start + offs) % cap
-    batch = jax.tree_util.tree_map(lambda b: b[phys], q.buf)
-    live = offs < n
-
-    def _mask(x):
-        shape = (max_n,) + (1,) * (x.ndim - 1)
-        return jnp.where(live.reshape(shape), x, jnp.zeros_like(x))
-
-    batch = jax.tree_util.tree_map(_mask, batch)
-    return QueueState(buf=q.buf, lo=q.lo, size=q.size - n), batch, n
+    return _pop(q)
 
 
 # ---------------------------------------------------------------------------
-# Stealer operations
+# Deprecated use_kernel dialect -> BulkOps backends
 # ---------------------------------------------------------------------------
 
 
-def kernel_steal_available(capacity: int, max_steal: int) -> bool:
-    """Whether the Pallas ring-gather kernel can serve a steal of this
-    geometry (the kernel module owns the block-tiling rule)."""
-    from repro.kernels.queue_steal.kernel import ring_gather_supported
-
-    return ring_gather_supported(capacity, max_steal)
+@functools.lru_cache(maxsize=None)
+def _shim_backend(use_kernel: bool) -> BulkOps:
+    return make_ops("pallas" if use_kernel else "reference")
 
 
-def _gather_block(q: QueueState, n: jnp.ndarray, max_steal: int,
-                  use_kernel: bool) -> Pytree:
-    """Detach ``max_steal`` rows starting at ``lo`` (rows >= ``n`` zeroed).
-
-    ``use_kernel=True`` routes the copy through
-    :func:`repro.kernels.queue_steal.ops.steal_gather`: the Pallas TPU
-    kernel on TPU backends, the jnp oracle (``ref.py``) everywhere else —
-    the production steal hot path.  ``use_kernel=False`` keeps the
-    original inline gather (still used by the counted baseline so Fig. 8
-    measures what it claims to).
-    """
-    cap = _capacity(q)
-    if use_kernel and kernel_steal_available(cap, max_steal):
-        from repro.kernels.queue_steal.ops import steal_gather
-
-        return steal_gather(
-            q.buf, q.lo, n, max_steal=max_steal,
-            use_pallas=jax.default_backend() == "tpu",
-        )
-    offs = jnp.arange(max_steal, dtype=jnp.int32)
-    phys = (q.lo + offs) % cap
-    batch = jax.tree_util.tree_map(lambda b: b[phys], q.buf)
-    live = offs < n
-
-    def _mask(x):
-        shape = (max_steal,) + (1,) * (x.ndim - 1)
-        return jnp.where(live.reshape(shape), x, jnp.zeros_like(x))
-
-    return jax.tree_util.tree_map(_mask, batch)
-
-
-def _steal_plan(
-    size: jnp.ndarray, proportion, queue_limit: int, max_steal: int
-) -> jnp.ndarray:
-    """Number of items to steal, following the paper's Listing 4 arithmetic.
-
-    ``n_skip = floor(size * (1 - proportion))`` items remain with the owner;
-    ``size - n_skip`` are stolen, clamped to the static transfer buffer.
-    Aborts (returns 0) when ``size < queue_limit``.
-    """
-    size = jnp.asarray(size, jnp.int32)
-    keep = jnp.asarray(
-        jnp.floor(size.astype(jnp.float32) * (1.0 - proportion)), jnp.int32
+def _warn_shim(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.queue.{old} (the use_kernel dialect) is deprecated; "
+        f"construct a backend with repro.core.ops.make_ops(...) and call "
+        f"{new}",
+        DeprecationWarning,
+        stacklevel=3,
     )
-    n = size - keep
-    n = jnp.minimum(n, jnp.int32(max_steal))
-    return jnp.where(size < queue_limit, jnp.int32(0), n)
 
 
-def steal(
-    q: QueueState,
-    proportion,
-    *,
-    max_steal: int,
-    queue_limit: int = DEFAULT_QUEUE_LIMIT,
-    use_kernel: bool = False,
-) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    """Bulk steal of ``~proportion`` of the queue from the tail (oldest side).
-
-    This is the paper's *optimized* variant, which on TPU is the natural
-    one: the stolen count is fully determined by the size snapshot and the
-    cut arithmetic, so no tail traversal is ever needed.  The single
-    ``lo += n`` cursor bump is the linearization point (the analogue of the
-    ``start->next = null`` severing write).
-
-    Returns ``(new_state, stolen_batch, n_stolen)``; leaves of
-    ``stolen_batch`` have static leading dim ``max_steal`` with valid rows
-    ``[0, n_stolen)`` in queue order (oldest first); rows ``>= n_stolen``
-    are zeroed.  ``use_kernel=True`` moves the block through the Pallas
-    ring-gather kernel (see :func:`_gather_block`).
-    """
-    cap = _capacity(q)
-    n = _steal_plan(q.size, proportion, queue_limit, max_steal)
-    batch = _gather_block(q, n, max_steal, use_kernel)
-    new_lo = (q.lo + n) % cap
-    return QueueState(buf=q.buf, lo=new_lo, size=q.size - n), batch, n
+def push(q: QueueState, batch: Pytree, n, *,
+         use_kernel: bool = False) -> Tuple[QueueState, jnp.ndarray]:
+    """Deprecated shim for ``BulkOps.push`` (see module docstring)."""
+    _warn_shim("push", "BulkOps.push")
+    return _shim_backend(use_kernel).push(q, batch, n)
 
 
-def steal_exact(
-    q: QueueState,
-    n: jnp.ndarray,
-    *,
-    max_steal: int,
-    use_kernel: bool = False,
-) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    """Steal exactly ``n`` items (clamped to size / ``max_steal``) from the
-    tail.  Used by the virtual master once the plan has fixed per-victim
-    amounts; rows ``>= n`` of the returned batch are zeroed so the batch can
-    be moved through summing collectives safely.  ``use_kernel=True``
-    routes the block detach through the Pallas ring-gather kernel."""
-    n = jnp.clip(jnp.asarray(n, jnp.int32), 0, jnp.minimum(q.size, max_steal))
-    cap = _capacity(q)
-    batch = _gather_block(q, n, max_steal, use_kernel)
-    new_lo = (q.lo + n) % cap
-    return QueueState(buf=q.buf, lo=new_lo, size=q.size - n), batch, n
+def pop_bulk(q: QueueState, max_n: int, n, *, use_kernel: bool = False
+             ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    """Deprecated shim for ``BulkOps.pop_bulk`` (see module docstring)."""
+    _warn_shim("pop_bulk", "BulkOps.pop_bulk")
+    return _shim_backend(use_kernel).pop_bulk(q, max_n, n)
 
 
-def steal_counted(
-    q: QueueState,
-    proportion,
-    *,
-    max_steal: int,
-    queue_limit: int = DEFAULT_QUEUE_LIMIT,
-) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    """Paper-faithful *non-optimized* steal: pays an explicit sequential
-    traversal over the stolen segment to (re)count it, mirroring the second
-    list walk in Listing 4 lines 30-37.  Semantically identical to
-    :func:`steal`; exists so benchmarks can reproduce Fig. 8's gap.
-    """
-    new_q, batch, n = steal(
-        q, proportion, max_steal=max_steal, queue_limit=queue_limit
-    )
-    # Sequential dependent chain emulating pointer-chasing: each step reads
-    # a payload element gated by the previous counter value, so XLA cannot
-    # vectorize or elide it.
-    lead = jax.tree_util.tree_leaves(batch)[0]
-    flat = lead.reshape(lead.shape[0], -1)
-
-    def body(i, carry):
-        count, acc = carry
-        live = i < n
-        probe = flat[i, 0].astype(jnp.float32)
-        acc = acc + jnp.where(live, probe * 0.0 + 1.0, 0.0) * (count + 1.0) * 0.0
-        count = count + jnp.where(live, 1, 0)
-        return count, acc
-
-    count, acc = lax.fori_loop(0, max_steal, body, (jnp.int32(0), jnp.float32(0.0)))
-    # ``count == n`` always; fold the dead value in so the loop is not DCE'd.
-    n = count + jnp.asarray(acc, jnp.int32) * 0
-    return new_q, batch, n
+def steal(q: QueueState, proportion, *, max_steal: int,
+          queue_limit: int = DEFAULT_QUEUE_LIMIT, use_kernel: bool = False
+          ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    """Deprecated shim for ``BulkOps.steal`` (see module docstring)."""
+    _warn_shim("steal", "BulkOps.steal")
+    return _shim_backend(use_kernel).steal(
+        q, proportion, max_steal=max_steal, queue_limit=queue_limit)
 
 
-# ---------------------------------------------------------------------------
-# In-place (donating) entry points
-# ---------------------------------------------------------------------------
-#
-# The functional ops above copy-on-write the full-capacity ring every call
-# when used as plain host-called jits.  These wrappers jit them with the
-# queue state DONATED, so XLA aliases the input ring buffer to the output
-# ring buffer and the update lowers to an in-place scatter/cursor bump —
-# no full-capacity copy per superstep.  Semantics are identical (tests
-# assert equivalence); the only behavioural difference is that the caller
-# must not reuse the donated input state afterwards.  Donation is a no-op
-# (with identical results) on backends that don't implement it (CPU).
+def steal_exact(q: QueueState, n, *, max_steal: int, use_kernel: bool = False
+                ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    """Deprecated shim for ``BulkOps.steal_exact`` (see module docstring)."""
+    _warn_shim("steal_exact", "BulkOps.steal_exact")
+    return _shim_backend(use_kernel).steal_exact(q, n, max_steal=max_steal)
+
+
+# Warning-free donating forwarders, shared by the per-function shims and
+# the inplace_ops() bundle so the two deprecated surfaces cannot diverge.
+
+
+def _donate_push(q, batch, n, *, use_kernel: bool = False):
+    return _shim_backend(use_kernel).push(q, batch, n, donate=True)
+
+
+def _donate_pop(q):
+    return _shim_backend(False).pop(q, donate=True)
+
+
+def _donate_pop_bulk(q, max_n, n, *, use_kernel: bool = False):
+    return _shim_backend(use_kernel).pop_bulk(q, max_n, n, donate=True)
+
+
+def _donate_steal(q, proportion, *, max_steal,
+                  queue_limit=DEFAULT_QUEUE_LIMIT, use_kernel: bool = False):
+    return _shim_backend(use_kernel).steal(
+        q, proportion, max_steal=max_steal, queue_limit=queue_limit,
+        donate=True)
+
+
+def _donate_steal_exact(q, n, *, max_steal, use_kernel: bool = False):
+    return _shim_backend(use_kernel).steal_exact(q, n, max_steal=max_steal,
+                                                 donate=True)
+
+
+def push_inplace(q: QueueState, batch: Pytree, n, *,
+                 use_kernel: bool = False) -> Tuple[QueueState, jnp.ndarray]:
+    """Deprecated shim for ``BulkOps.push(..., donate=True)``."""
+    _warn_shim("push_inplace", "BulkOps.push(..., donate=True)")
+    return _donate_push(q, batch, n, use_kernel=use_kernel)
+
+
+def pop_bulk_inplace(q: QueueState, max_n: int, n, *,
+                     use_kernel: bool = False
+                     ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    """Deprecated shim for ``BulkOps.pop_bulk(..., donate=True)``."""
+    _warn_shim("pop_bulk_inplace", "BulkOps.pop_bulk(..., donate=True)")
+    return _donate_pop_bulk(q, max_n, n, use_kernel=use_kernel)
+
+
+def steal_exact_inplace(q: QueueState, n, *, max_steal: int,
+                        use_kernel: bool = False):
+    """Deprecated shim for ``BulkOps.steal_exact(..., donate=True)``."""
+    _warn_shim("steal_exact_inplace", "BulkOps.steal_exact(..., donate=True)")
+    return _donate_steal_exact(q, n, max_steal=max_steal,
+                               use_kernel=use_kernel)
 
 
 class InPlaceOps(NamedTuple):
@@ -392,42 +211,14 @@ class InPlaceOps(NamedTuple):
     steal_exact: Any
 
 
-@functools.lru_cache(maxsize=None)
 def inplace_ops() -> InPlaceOps:
-    """Jitted, donation-enabled variants of the queue ops (cached)."""
-    donate = () if jax.default_backend() == "cpu" else (0,)
-    return InPlaceOps(
-        push=jax.jit(push, static_argnames=("use_kernel",),
-                     donate_argnums=donate),
-        pop=jax.jit(pop, donate_argnums=donate),
-        pop_bulk=jax.jit(pop_bulk, static_argnums=(1,),
-                         static_argnames=("use_kernel",),
-                         donate_argnums=donate),
-        steal=jax.jit(steal,
-                      static_argnames=("max_steal", "queue_limit",
-                                       "use_kernel"),
-                      donate_argnums=donate),
-        steal_exact=jax.jit(steal_exact,
-                            static_argnames=("max_steal", "use_kernel"),
-                            donate_argnums=donate),
-    )
-
-
-def push_inplace(q: QueueState, batch: Pytree, n, *,
-                 use_kernel: bool = False) -> Tuple[QueueState, jnp.ndarray]:
-    return inplace_ops().push(q, batch, n, use_kernel=use_kernel)
-
-
-def pop_bulk_inplace(q: QueueState, max_n: int, n, *,
-                     use_kernel: bool = False
-                     ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    return inplace_ops().pop_bulk(q, max_n, n, use_kernel=use_kernel)
-
-
-def steal_exact_inplace(q: QueueState, n, *, max_steal: int,
-                        use_kernel: bool = False):
-    return inplace_ops().steal_exact(q, n, max_steal=max_steal,
-                                     use_kernel=use_kernel)
+    """Deprecated shim for the pre-BulkOps donating-op bundle: returns a
+    namespace of ``donate=True`` backend calls with the old signatures
+    (each accepting the old ``use_kernel=`` keyword)."""
+    _warn_shim("inplace_ops", "BulkOps methods with donate=True")
+    return InPlaceOps(push=_donate_push, pop=_donate_pop,
+                      pop_bulk=_donate_pop_bulk, steal=_donate_steal,
+                      steal_exact=_donate_steal_exact)
 
 
 # ---------------------------------------------------------------------------
@@ -445,23 +236,27 @@ class PagedQueue:
     watermark, pages are refilled in bulk.  The master may also steal whole
     host pages directly, which is the cheapest possible bulk steal.
 
-    This class is host-level orchestration (not jittable); the device ops it
-    calls are the jitted pure functions above.
+    This class is host-level orchestration (not jittable); the device ops
+    run through a :class:`~repro.core.ops.BulkOps` backend (``donate=True``
+    — jitted, ring donated where the platform supports it).  ``backend``
+    accepts a registry name or an existing ``BulkOps``; ``"auto"``
+    resolves from the ring geometry once, here.
     """
 
-    def __init__(self, capacity: int, item_spec: Pytree, *, low_watermark: int | None = None):
+    def __init__(self, capacity: int, item_spec: Pytree, *,
+                 low_watermark: int | None = None,
+                 backend: str | BulkOps = "auto"):
         self.capacity = int(capacity)
         self.low_watermark = int(low_watermark if low_watermark is not None else capacity // 4)
         self.state = make_queue(capacity, item_spec)
         self.pages: list[Tuple[Pytree, int]] = []  # host-side (batch, n) blocks
         self._spill_n = self.capacity // 2
-
-        self._jit_push = jax.jit(push)
-        self._jit_pop = jax.jit(pop)
-        self._jit_pop_bulk = jax.jit(pop_bulk, static_argnums=1)
-        self._jit_steal = jax.jit(
-            functools.partial(steal, max_steal=self._spill_n, queue_limit=0)
-        )
+        # "auto" resolves from the ring geometry here: spill/refill moves
+        # are bounded by _spill_n on both the steal and the push side
+        # (larger caller batches fall back per-call via the op's guard).
+        self.ops = make_ops(backend, capacity=self.capacity,
+                            max_push=self._spill_n,
+                            max_steal=self._spill_n)
 
     # -- owner side ---------------------------------------------------------
 
@@ -469,27 +264,31 @@ class PagedQueue:
         size = int(self.state.size)
         if size + n > self.capacity:
             # Spill the oldest block to a host page (bulk, one transfer).
-            self.state, spilled, n_sp = self._jit_steal(
-                self.state, self._spill_n / max(size, 1)
-            )
+            # Proportion capped at 1.0: a nearly-empty ring spills
+            # everything it has, never more (_steal_plan also clamps).
+            self.state, spilled, n_sp = self.ops.steal(
+                self.state, min(1.0, self._spill_n / max(size, 1)),
+                max_steal=self._spill_n, queue_limit=0, donate=True)
             n_sp = int(n_sp)
             if n_sp:
                 self.pages.append((jax.device_get(spilled), n_sp))
-        self.state, pushed = self._jit_push(self.state, batch, n)
+        self.state, pushed = self.ops.push(self.state, batch, jnp.int32(n),
+                                           donate=True)
         if int(pushed) < n:  # ring still too small for this batch: page the rest
             rest = jax.tree_util.tree_map(lambda x: x[int(pushed):], batch)
             self.pages.append((jax.device_get(rest), n - int(pushed)))
 
     def pop(self):
         self._maybe_refill()
-        self.state, item, valid = self._jit_pop(self.state)
+        self.state, item, valid = self.ops.pop(self.state, donate=True)
         return (item, bool(valid))
 
     def _maybe_refill(self) -> None:
         if int(self.state.size) <= self.low_watermark and self.pages:
             batch, n = self.pages.pop()
             dev = jax.device_put(batch)
-            self.state, pushed = push(self.state, dev, n)
+            self.state, pushed = self.ops.push(self.state, dev, jnp.int32(n),
+                                               donate=True)
             pushed = int(pushed)
             if pushed < n:
                 # Page larger than the ring's free space: keep the
@@ -513,9 +312,46 @@ class PagedQueue:
             got.append((batch, n))
             want -= n
         if want > 0 and int(self.state.size) >= DEFAULT_QUEUE_LIMIT:
-            self.state, batch, n = self._jit_steal(
-                self.state, want / max(int(self.state.size), 1)
-            )
+            self.state, batch, n = self.ops.steal(
+                self.state, want / max(int(self.state.size), 1),
+                max_steal=self._spill_n, queue_limit=0, donate=True)
             if int(n):
                 got.append((jax.device_get(batch), int(n)))
         return got
+
+    # -- HostQueue protocol adapters (int payload convenience) --------------
+
+    def push_bulk(self, items) -> None:
+        """Protocol adapter: push a python list of int items (single-int32
+        item_spec rings only — what the benchmark harness sweeps)."""
+        self.push_batch(self.make_batch(items))
+
+    def make_batch(self, items):
+        """Producer-side prep: host list -> device array (untimed in the
+        benchmark harness, like the paper's pre-linked llist)."""
+        items = list(items)
+        return jnp.asarray(items, jnp.int32), len(items)
+
+    def push_batch(self, prepared) -> None:
+        batch, n = prepared
+        if n:
+            self.push(batch, n)
+
+    def pop_item(self):
+        item, valid = self.pop()
+        return int(item) if valid else None
+
+    def steal_bulk(self, proportion: float) -> list:
+        """Protocol adapter over :meth:`steal`.  Page-granular: whole
+        host pages move first (the documented cheapest bulk steal), so
+        the stolen amount rounds up to page boundaries and the stolen
+        set approximates — rather than guarantees — the oldest-side
+        discipline (overflow pages hold NEWEST items; see the
+        :class:`~repro.core.host_queue.HostQueue` docstring)."""
+        out: list = []
+        for batch, n in self.steal(proportion):
+            out.extend(int(x) for x in np.asarray(batch).reshape(-1)[:n])
+        return out
+
+    def __len__(self) -> int:
+        return self.total_size()

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import queue as q_ops
+from repro.core import ops as q_ops
 from repro.core.policy import StealPolicy
 from repro.core import master as master_ops
 

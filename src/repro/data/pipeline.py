@@ -3,9 +3,10 @@ with bulk refill and straggler bulk-steal.
 
 Concurrency model is EXACTLY the paper's: each host queue has one owner
 (the host's feeder) and at most one stealer (the pipeline master).  The
-queue is the faithful host port (core.host_queue.LinkedWSQueue): bulk
-push of prefetched batches, single pop by the training step, and the
-master's proportional steal(p) when a host falls behind.
+queue is any ``core.host_queue.HostQueue`` implementation (default: the
+faithful paper port, LinkedWSQueue): bulk push of prefetched batches,
+single pop by the training step, and the master's proportional steal(p)
+when a host falls behind.
 
 A "task" here is a (shard, step) descriptor — regenerating any batch is
 deterministic (data.synthetic), so stolen descriptors are recomputed by
@@ -18,7 +19,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.host_queue import LinkedWSQueue, llist_from_iter
+from repro.core.host_queue import HostQueue, LinkedWSQueue
 from repro.core.policy import StealPolicy, adaptive_chunk
 from repro.train.fault import StragglerMonitor
 
@@ -30,9 +31,10 @@ Task = Tuple[int, int]  # (shard, step)
 class HostShardQueue:
     """Owner side: prefetch task descriptors in bulk; pop per train step."""
 
-    def __init__(self, shard: int, prefetch: int = 64):
+    def __init__(self, shard: int, prefetch: int = 64,
+                 queue_factory: Callable[[], HostQueue] = LinkedWSQueue):
         self.shard = shard
-        self.q = LinkedWSQueue()
+        self.q: HostQueue = queue_factory()
         self.prefetch = prefetch
         self._next_step = 0
         self.monitor = StragglerMonitor()
@@ -42,15 +44,16 @@ class HostShardQueue:
         tasks = [(self.shard, self._next_step + i)
                  for i in range(self.prefetch)]
         self._next_step += self.prefetch
-        # push expects head-first consumption order = LIFO; reverse so the
-        # OLDEST step pops first (FIFO data order for training).
-        self.q.push(llist_from_iter(reversed(tasks)))
+        # push_bulk's deque convention (later = newer): the owner pops
+        # the newest step first while the oldest steps sit at the steal
+        # side for the master.
+        self.q.push_bulk(tasks)
         return len(tasks)
 
     def pop(self) -> Optional[Task]:
         if len(self.q) == 0:
             self.refill()
-        return self.q.pop()
+        return self.q.pop_item()
 
 
 class PipelineMaster:
@@ -74,15 +77,12 @@ class PipelineMaster:
         p = adaptive_chunk(len(fast), len(slow), self.policy.proportion)
         grabbed: List[Task] = []
         for s in slow:
-            begin, _, count = self.queues[s].q.steal_optimized(p)
-            node = begin
-            while node is not None:
-                grabbed.append(node.payload)
-                node = node.next
-            moved += count
+            stolen = self.queues[s].q.steal_bulk(p)
+            grabbed.extend(stolen)
+            moved += len(stolen)
         for i, task in enumerate(grabbed):
             tq = self.queues[fast[i % len(fast)]]
-            tq.q.push(llist_from_iter([task]))
+            tq.q.push_bulk([task])
         self.stolen_total += moved
         return moved
 

@@ -2,8 +2,8 @@
 
 Leaves are flattened to ``(cap, -1)`` / ``(batch, -1)``, moved with the
 Pallas kernels (TPU) or the jnp oracles (elsewhere), and reshaped back.
-Used by ``core.queue.push`` / ``core.queue.pop_bulk`` when
-``use_kernel`` is enabled.
+Used by kernel-routed ``repro.core.ops.BulkOps`` backends for ``push``
+and ``pop_bulk``.
 """
 
 from __future__ import annotations

@@ -1,8 +1,8 @@
 """Jitted wrapper: ring-segment gather for arbitrary payload pytrees.
 
 Leaves are flattened to (cap, -1), moved with the Pallas kernel (TPU) or
-the jnp oracle (CPU), and reshaped back.  Used by ``core.queue.steal``
-when ``use_pallas`` is enabled.
+the jnp oracle (CPU), and reshaped back.  Used by kernel-routed
+``repro.core.ops.BulkOps`` backends for ``steal`` / ``steal_exact``.
 """
 
 from __future__ import annotations

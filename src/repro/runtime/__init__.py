@@ -2,14 +2,32 @@
 
 This package is the production layer over the paper's data structure and
 virtual master.  It exists so that the DAG solver, the serving scheduler
-and the benchmarks all drive the *same* steal hot path — the Pallas
-ring-gather kernel — instead of each consumer re-wiring
-``core.queue``/``core.master`` by hand:
+and the benchmarks all drive the *same* queue-operation contract —
+:class:`repro.core.ops.BulkOps` — instead of each consumer re-wiring
+``core.queue``/``core.master`` by hand.
+
+The BulkOps contract
+--------------------
+Every queue operation (``push / pop / pop_bulk / steal / steal_exact``)
+lives on a backend object with a uniform ``(state, ...) -> (state,
+batch, n)`` signature and a ``donate=`` option (jitted, ring donated —
+the in-place production call shape).  Backends are registry-named:
+``"reference"`` (jnp oracle), ``"pallas"`` (hand-written ring kernels),
+``"auto"`` (kernel routing resolved ONCE at construction from the
+geometry predicates, honouring the ``REPRO_QUEUE_BACKEND`` environment
+override).  :class:`~repro.runtime.executor.StealRuntime` resolves its
+backend at construction (``backend="auto"`` default) and exposes it as
+``runtime.ops`` so worker bodies pop/push through the identical routing
+the master's steal uses; swapping backends never touches consumer code
+— which is how the paper benchmarks implementations against each other.
 
 * :class:`~repro.runtime.executor.StealRuntime` owns a stack of
   per-worker queues (``core.sharded_queue``) and runs
   ``master.superstep`` / ``hierarchical_superstep`` rounds over them,
   optionally interleaved with a user worker body (pop → compute → push).
+  ``run_fused(k)`` advances k rounds in one dispatch;
+  ``run_fused(k, until_drained=True)`` early-exits on device at drain
+  and reports the rounds actually executed.
 * :class:`~repro.runtime.adaptive.AdaptiveController` replaces the
   static ``StealPolicy.proportion`` with a feedback loop on the observed
   queue-size imbalance (``RebalanceStats``), fed back as a *traced*
@@ -29,7 +47,13 @@ whole round is a single deterministic collective schedule, owner and
 stealer can never interleave *within* a round, so the paper's
 acquire/release and drain re-check machinery is unnecessary — the
 conservation property (no task lost or duplicated) is asserted by
-``tests/test_runtime.py`` across arbitrary adaptive rounds.
+``tests/test_runtime.py`` across arbitrary adaptive rounds and every
+backend.
+
+Open validation item: the Pallas ring kernels' in-place behaviour
+(``input_output_aliases`` + dynamic index_map) is parity-tested in
+interpret mode only; confirmation on real TPU hardware remains open
+before claiming the in-place splice numbers (see ROADMAP).
 """
 
 from repro.runtime.adaptive import AdaptiveConfig, AdaptiveController

@@ -10,11 +10,13 @@ branch-and-bound, serving admission replay, the Fig. 7/8 benchmarks).  A
 compiled ONCE as a single jitted function.  Four properties make it the
 production hot path:
 
-* **Kernel-backed queue ops** — the policy is pinned with
-  ``use_kernel=True`` (default), so every victim-side block detach goes
-  through ``repro.kernels.queue_steal.ring_gather`` and every thief-side
-  splice through ``repro.kernels.queue_push.ring_scatter`` (Pallas on
-  TPU, the jnp oracles elsewhere).
+* **One queue contract, pluggable backends** — the runtime resolves a
+  :class:`repro.core.ops.BulkOps` backend ONCE at construction
+  (``backend="auto"`` consults the kernel geometry predicates; the
+  resolved object is exposed as :attr:`StealRuntime.ops`).  Every
+  victim-side block detach, thief-side splice and worker-body queue op
+  goes through that backend — the Pallas ring kernels when the routing
+  resolves to them, the jnp reference oracle otherwise.
 * **Donated queue state** — the round function donates the stacked
   ``QueueState``, so XLA aliases the ring buffers input->output and the
   rebalance updates in place instead of copying the full-capacity rings
@@ -26,7 +28,10 @@ production hot path:
   rounds in ONE dispatch: the adaptive update runs on device inside the
   scan carry and per-round telemetry is stacked ``(k, ...)`` and read
   back once, so autotuning never leaves the device and k rounds cost one
-  dispatch + one host sync instead of k of each.
+  dispatch + one host sync instead of k of each.  With
+  ``until_drained=True`` the scan becomes a ``lax.while_loop`` that
+  stops on device the moment every lane is empty and reports the rounds
+  actually executed.
 
 Worker bodies run *under vmap/shard_map* with the runtime's axis name in
 scope, so they may use collectives (e.g. ``lax.pmax`` for a global
@@ -36,6 +41,7 @@ incumbent) exactly like ``core.dd.parallel`` does.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -45,7 +51,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import master as master_ops
-from repro.core import queue as q_ops
+from repro.core import ops as bulk_ops
 from repro.core.policy import StealPolicy
 from repro.core.sharded_queue import make_sharded_queues
 from repro.runtime.adaptive import (AdaptiveConfig, AdaptiveController,
@@ -53,7 +59,8 @@ from repro.runtime.adaptive import (AdaptiveConfig, AdaptiveController,
 from repro.runtime.telemetry import Telemetry, item_nbytes
 
 Pytree = Any
-WorkerFn = Callable[[q_ops.QueueState, Pytree], Tuple[q_ops.QueueState, Pytree]]
+WorkerFn = Callable[[bulk_ops.QueueState, Pytree],
+                    Tuple[bulk_ops.QueueState, Pytree]]
 
 __all__ = ["StealRuntime"]
 
@@ -70,9 +77,20 @@ class StealRuntime:
         adaptive controller, the rest (watermarks, ``max_steal``) is
         static.
       adaptive: enable the steal-proportion feedback loop (default on).
-      use_kernel: route steals through the Pallas ring-gather kernel
-        (default on — the production path; non-TPU backends fall back to
-        the jnp oracle inside the dispatcher).
+      backend: optional override for the :class:`~repro.core.ops.BulkOps`
+        backend (a registry name or an existing instance).  When omitted
+        the runtime honours ``policy.backend`` (default ``"auto"``), so
+        a pinned ``StealPolicy(backend="reference")`` selects the same
+        implementation here as it does in a standalone
+        ``master.superstep``.  ``"auto"`` resolves the kernel routing
+        here, once, from the queue geometry (capacity,
+        ``policy.max_steal``, and ``max_pop`` for worker-body bulk pops)
+        and honours the ``REPRO_QUEUE_BACKEND`` environment override.
+        The resolved backend is exposed as :attr:`ops` so worker bodies
+        drive the exact same routing.
+      max_pop: geometry hint for ``"auto"``: the largest ``max_n`` worker
+        bodies will pass to ``ops.pop_bulk`` (None leaves the bulk-pop on
+        the reference path).
       pod_size: if set, lanes are grouped into pods of this size and each
         round runs :func:`master.hierarchical_superstep` (intra-pod, then
         cross-pod via lane-0 representatives).
@@ -82,13 +100,21 @@ class StealRuntime:
                  policy: Optional[StealPolicy] = None,
                  adaptive: bool = True,
                  adaptive_config: Optional[AdaptiveConfig] = None,
-                 use_kernel: bool = True,
+                 backend: str | bulk_ops.BulkOps | None = None,
+                 max_pop: Optional[int] = None,
                  axis_name: str = "workers",
                  pod_size: Optional[int] = None,
-                 pod_axis: str = "pods"):
+                 pod_axis: str = "pods",
+                 use_kernel: Optional[bool] = None):
         if pod_size is not None and n_workers % pod_size != 0:
             raise ValueError(
                 f"n_workers={n_workers} not divisible by pod_size={pod_size}")
+        if use_kernel is not None:  # deprecation shim (pre-BulkOps dialect)
+            warnings.warn(
+                "StealRuntime(use_kernel=...) is deprecated; pass "
+                "backend='pallas'/'reference'/'auto' instead",
+                DeprecationWarning, stacklevel=2)
+            backend = "pallas" if use_kernel else "reference"
         self.n_workers = int(n_workers)
         self.capacity = int(capacity)
         self.item_spec = item_spec
@@ -96,7 +122,12 @@ class StealRuntime:
         self.pod_size = pod_size
         self.pod_axis = pod_axis
         base = policy or StealPolicy()
-        self.policy = dataclasses.replace(base, use_kernel=use_kernel)
+        if backend is None:
+            backend = base.backend  # honour a pinned policy.backend
+        self.ops = bulk_ops.make_ops(
+            backend, capacity=self.capacity, max_push=base.max_steal,
+            max_pop=max_pop, max_steal=base.max_steal)
+        self.policy = dataclasses.replace(base, backend=self.ops.name)
         self.queues = make_sharded_queues(n_workers, capacity, item_spec)
         self.controller = (AdaptiveController(self.policy, adaptive_config)
                            if adaptive else None)
@@ -124,7 +155,7 @@ class StealRuntime:
     def push(self, worker: int, batch: Pytree, n: int) -> int:
         """Owner-side bulk push into one lane (host-level seeding)."""
         qi = jax.tree_util.tree_map(lambda x: x[worker], self.queues)
-        qi, pushed = q_ops.push(qi, batch, jnp.int32(n))
+        qi, pushed = self.ops.push(qi, batch, jnp.int32(n))
         self.queues = jax.tree_util.tree_map(
             lambda full, one: full.at[worker].set(one), self.queues, qi)
         return int(pushed)
@@ -137,7 +168,7 @@ class StealRuntime:
             qi = jax.tree_util.tree_map(lambda x: x[i], self.queues)
             lane = []
             while int(qi.size) > 0:
-                qi, item, valid = q_ops.pop(qi)
+                qi, item, valid = self.ops.pop(qi)
                 assert bool(valid)
                 lane.append(jax.tree_util.tree_map(np.asarray, item))
             out.append(lane)
@@ -149,7 +180,7 @@ class StealRuntime:
 
     def _make_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
         """Un-jitted ``(qs, carry, proportion) -> (qs, carry, stats)``."""
-        policy = self.policy
+        policy, ops = self.policy, self.ops
         axis_name, pod_axis = self.axis_name, self.pod_axis
         pod_size = self.pod_size
 
@@ -159,9 +190,11 @@ class StealRuntime:
             pol = dataclasses.replace(policy, proportion=proportion)
             if pod_size is not None:
                 q, stats = master_ops.hierarchical_superstep(
-                    q, pol, worker_axis=axis_name, pod_axis=pod_axis)
+                    q, pol, worker_axis=axis_name, pod_axis=pod_axis,
+                    ops=ops)
             else:
-                q, stats = master_ops.superstep(q, pol, axis_name=axis_name)
+                q, stats = master_ops.superstep(q, pol, axis_name=axis_name,
+                                                ops=ops)
             return q, carry, stats
 
         if pod_size is None:
@@ -195,28 +228,61 @@ class StealRuntime:
         return jax.jit(self._make_step(worker_fn),
                        donate_argnums=self._donate_argnums())
 
-    def _compile_fused(self, worker_fn: Optional[WorkerFn],
-                       k: int) -> Callable:
+    def _compile_fused(self, worker_fn: Optional[WorkerFn], k: int,
+                       until_drained: bool = False) -> Callable:
         """One dispatch for k rounds: the superstep scanned on device with
         the adaptive proportion updated as a traced scalar inside the
-        carry, telemetry stacked ``(k, ...)`` along the scan axis."""
+        carry, telemetry stacked ``(k, ...)`` along the scan axis.  With
+        ``until_drained`` the scan becomes a ``lax.while_loop`` over the
+        same round body that exits as soon as every lane is empty (checked
+        on device, before each round), writing telemetry into
+        preallocated ``(k, ...)`` slots and returning the executed round
+        count."""
         step = self._make_step(worker_fn)
         policy, controller = self.policy, self.controller
         config = controller.config if controller else None
 
-        def fused(qs, carry, p0):
-            def body(state, _):
-                qs, carry, p = state
-                qs, carry, stats = step(qs, carry, p)
-                tele = {"stats": stats, "sizes": qs.size, "proportion": p}
-                if controller is not None:
-                    p = adaptive_update(p, qs.size, policy=policy,
-                                        config=config)
-                return (qs, carry, p), tele
-
-            (qs, carry, p), tele = lax.scan(body, (qs, carry, p0), None,
-                                            length=k)
+        def one_round(qs, carry, p):
+            qs, carry, stats = step(qs, carry, p)
+            tele = {"stats": stats, "sizes": qs.size, "proportion": p}
+            if controller is not None:
+                p = adaptive_update(p, qs.size, policy=policy, config=config)
             return qs, carry, p, tele
+
+        if not until_drained:
+            def fused(qs, carry, p0):
+                def body(state, _):
+                    qs, carry, p = state
+                    qs, carry, p, tele = one_round(qs, carry, p)
+                    return (qs, carry, p), tele
+
+                (qs, carry, p), tele = lax.scan(body, (qs, carry, p0), None,
+                                                length=k)
+                return qs, carry, p, tele, jnp.int32(k)
+
+            return jax.jit(fused, donate_argnums=self._donate_argnums())
+
+        def fused(qs, carry, p0):
+            tele_sds = jax.eval_shape(
+                lambda a, b, c: one_round(a, b, c)[3], qs, carry, p0)
+            tele0 = jax.tree_util.tree_map(
+                lambda s: jnp.zeros((k,) + tuple(s.shape), s.dtype), tele_sds)
+
+            def cond(state):
+                qs, _carry, _p, r, _tele = state
+                return (r < k) & (jnp.sum(qs.size) > 0)
+
+            def body(state):
+                qs, carry, p, r, tele = state
+                qs, carry, p, t = one_round(qs, carry, p)
+                tele = jax.tree_util.tree_map(
+                    lambda buf, v: lax.dynamic_update_index_in_dim(
+                        buf, v, r, 0), tele, t)
+                return (qs, carry, p, r + 1, tele)
+
+            qs, carry, p, r, tele = lax.while_loop(
+                cond, body, (qs, carry, p0, jnp.int32(0), tele0))
+            return qs, carry, p, tele, r
 
         return jax.jit(fused, donate_argnums=self._donate_argnums())
 
@@ -273,48 +339,62 @@ class StealRuntime:
         return carry, stats
 
     def run_fused(self, k: int, worker_fn: Optional[WorkerFn] = None,
-                  carry: Optional[Pytree] = None
-                  ) -> Tuple[Pytree, master_ops.RebalanceStats]:
-        """Run ``k`` rounds in ONE device dispatch (a ``lax.scan`` over the
-        compiled superstep).
+                  carry: Optional[Pytree] = None, *,
+                  until_drained: bool = False):
+        """Run up to ``k`` rounds in ONE device dispatch.
 
         Versus ``k`` calls to :meth:`round`, this removes ``k - 1``
         dispatch + host-sync round trips: the queue state is donated and
-        threaded through the scan carry, the adaptive proportion is
+        threaded through the on-device loop, the adaptive proportion is
         updated on device as a traced scalar
         (:func:`repro.runtime.adaptive.adaptive_update` — the same
         float32 computation the host controller runs, so the trajectory
         is identical), and per-round telemetry is stacked ``(k, ...)``
-        along the scan axis and read back once at the end.
+        and read back once at the end.
 
-        Returns ``(carry_out, stats)`` where ``stats`` leaves carry a
-        leading ``(k,)`` round axis.  The same caching rule as
-        :meth:`round` applies: pass the same ``worker_fn`` object every
-        call — the compiled scan is cached by ``(worker_fn, k)``.
+        With ``until_drained=False`` (default) the block is a
+        ``lax.scan`` of exactly ``k`` rounds, returning
+        ``(carry_out, stats)`` where ``stats`` leaves carry a leading
+        ``(k,)`` round axis.  With ``until_drained=True`` the block is a
+        ``lax.while_loop`` that exits early once every lane is empty
+        (checked on device before each round — a drained workload costs
+        zero no-op rounds) and returns ``(carry_out, stats, rounds)``
+        where ``rounds <= k`` is the number actually executed and
+        ``stats`` leaves carry a leading ``(rounds,)`` axis.
+
+        The same caching rule as :meth:`round` applies: pass the same
+        ``worker_fn`` object every call — the compiled block is cached
+        by ``(worker_fn, k, until_drained)``.
         """
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
-        key = ("fused", worker_fn, k)
+        key = ("fused", worker_fn, k, until_drained)
         fn = self._compiled.get(key)
         if fn is None:
-            fn = self._compiled[key] = self._compile_fused(worker_fn, k)
+            fn = self._compiled[key] = self._compile_fused(
+                worker_fn, k, until_drained)
         if carry is None:
             carry = jnp.zeros((self.n_workers,), jnp.int32)
         p0 = jnp.float32(self.proportion)
-        self.queues, carry, p_final, tele = fn(self.queues, carry, p0)
+        self.queues, carry, p_final, tele, rounds = fn(self.queues, carry, p0)
+        rounds = int(rounds)
         # ONE host read-back for the whole fused run.
         tele = jax.tree_util.tree_map(np.asarray, tele)
         stats = tele["stats"]
-        for r in range(k):
+        for r in range(rounds):
             stats_r = jax.tree_util.tree_map(lambda x: x[r], stats)
             n_steals, n_transferred = self._round_counts(stats_r)
             self.telemetry.record(sizes=tele["sizes"][r],
                                   n_steals=n_steals,
                                   n_transferred=n_transferred,
                                   proportion=float(tele["proportion"][r]))
-        if self.controller is not None:
-            self.controller.absorb(tele["proportion"], float(p_final))
-        self.rounds_run += k
+        if self.controller is not None and rounds > 0:
+            self.controller.absorb(tele["proportion"][:rounds],
+                                   float(p_final))
+        self.rounds_run += rounds
+        if until_drained:
+            stats = jax.tree_util.tree_map(lambda x: x[:rounds], stats)
+            return carry, stats, rounds
         return carry, stats
 
     def run(self, worker_fn: Optional[WorkerFn] = None,
@@ -324,19 +404,27 @@ class StealRuntime:
             fused: int = 1) -> Pytree:
         """Drive rounds until the queues drain (or ``max_rounds``).
 
-        With ``fused > 1`` the loop advances ``fused`` rounds per device
-        dispatch (:meth:`run_fused`) and only checks the drain condition
-        between fused blocks — the single-dispatch superstep pipeline.
+        With ``fused > 1`` the loop advances up to ``fused`` rounds per
+        device dispatch (:meth:`run_fused`); when ``stop_when_empty`` the
+        fused block early-exits on device the moment every lane drains,
+        so the trailing block never runs no-op rounds.
         """
         rounds = 0
         while rounds < max_rounds:
             if fused > 1:
                 k = min(fused, max_rounds - rounds)
-                carry, _ = self.run_fused(k, worker_fn, carry)
-                rounds += k
+                if stop_when_empty:
+                    carry, _, executed = self.run_fused(
+                        k, worker_fn, carry, until_drained=True)
+                    rounds += max(executed, 1)
+                    if executed < k:
+                        break
+                else:
+                    carry, _ = self.run_fused(k, worker_fn, carry)
+                    rounds += k
             else:
                 carry, _ = self.round(worker_fn, carry)
                 rounds += 1
-            if stop_when_empty and self.total_size() == 0:
-                break
+                if stop_when_empty and self.total_size() == 0:
+                    break
         return carry

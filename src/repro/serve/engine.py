@@ -9,7 +9,8 @@ round (serve/scheduler.py).
 This is deliberately wave-synchronous (vLLM-style per-token continuous
 batching with paged KV is out of scope — see DESIGN.md); the paper's
 contribution lives in the QUEUE + MASTER layer, which is identical
-either way.
+either way.  The queues behind the master are pluggable
+``HostQueue`` implementations (``AdmissionMaster(queue_factory=...)``).
 """
 
 from __future__ import annotations

@@ -12,8 +12,12 @@ The paper's master-worker discipline applied to inference admission:
   replica's locality with its in-flight wave (the paper's
   locality-aware redistribution argument, §II.B).
 
-Queues are the faithful host port (LinkedWSQueue) — this scheduler runs
-on the serving controller host, not on the accelerator.  The steal
+Queues are host-level and pluggable behind the
+:class:`repro.core.host_queue.HostQueue` protocol — the host analogue of
+the device layer's ``BulkOps`` backends; the default is the faithful
+paper port (``LinkedWSQueue``), and ``AdmissionMaster(queue_factory=...)``
+swaps in any other implementation (the Taskflow-style baselines, a
+device-backed ``PagedQueue``) without touching the master.  The steal
 proportion and observability come from the same runtime layer the
 device executor uses (``repro.runtime.adaptive`` / ``.telemetry``): the
 master servos its proportion with the SAME float32 feedback step
@@ -28,9 +32,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.host_queue import LinkedWSQueue, llist_from_iter
+from repro.core.host_queue import HostQueue, LinkedWSQueue
 from repro.core.policy import StealPolicy
 from repro.runtime.adaptive import AdaptiveConfig, AdaptiveController
 from repro.runtime.telemetry import Telemetry
@@ -49,9 +53,10 @@ class Request:
 
 
 class ReplicaQueue:
-    def __init__(self, replica_id: int):
+    def __init__(self, replica_id: int,
+                 queue_factory: Callable[[], HostQueue] = LinkedWSQueue):
         self.replica_id = replica_id
-        self.q = LinkedWSQueue()
+        self.q: HostQueue = queue_factory()
         self.in_flight = 0
         self.completed = 0
 
@@ -61,7 +66,7 @@ class ReplicaQueue:
     def pop_wave(self, max_wave: int) -> List[Request]:
         wave = []
         while len(wave) < max_wave:
-            r = self.q.pop()
+            r = self.q.pop_item()
             if r is None:
                 break
             wave.append(r)
@@ -78,8 +83,10 @@ class AdmissionMaster:
 
     def __init__(self, n_replicas: int, policy: Optional[StealPolicy] = None,
                  adaptive: bool = True,
-                 adaptive_config: Optional[AdaptiveConfig] = None):
-        self.replicas = [ReplicaQueue(i) for i in range(n_replicas)]
+                 adaptive_config: Optional[AdaptiveConfig] = None,
+                 queue_factory: Callable[[], HostQueue] = LinkedWSQueue):
+        self.replicas = [ReplicaQueue(i, queue_factory)
+                         for i in range(n_replicas)]
         self.policy = policy or StealPolicy(proportion=0.5,
                                             low_watermark=1,
                                             high_watermark=8)
@@ -99,9 +106,10 @@ class AdmissionMaster:
     def submit(self, requests: Sequence[Request]) -> int:
         """Bulk-admit to the least-loaded replica (ONE splice)."""
         target = min(self.replicas, key=lambda r: r.load())
-        # reversed: oldest request at the queue tail => popped last... the
-        # engine pops newest-first (LIFO); for FIFO serving we push reversed.
-        target.q.push(llist_from_iter(reversed(list(requests))))
+        # push_bulk's deque convention (later = newer): the engine pops
+        # the newest request first while the oldest sit at the tail —
+        # exactly what the master's locality-preserving tail steal wants.
+        target.q.push_bulk(list(requests))
         return target.replica_id
 
     # -- rebalancing ---------------------------------------------------------
@@ -122,16 +130,11 @@ class AdmissionMaster:
         moved = 0
         n_steals = 0
         for thief, victim in zip(idle, busy):
-            begin, _, count = victim.q.steal_optimized(proportion)
-            if not count:
+            stolen = victim.q.steal_bulk(proportion)
+            if not stolen:
                 continue
-            stolen = []
-            node = begin
-            while node is not None:
-                stolen.append(node.payload)
-                node = node.next
-            thief.q.push(llist_from_iter(reversed(stolen)))
-            moved += count
+            thief.q.push_bulk(stolen)
+            moved += len(stolen)
             n_steals += 1
         self.stolen += moved
         sizes = [len(r.q) for r in self.replicas]

@@ -16,12 +16,13 @@ import pytest
 pytest.importorskip("hypothesis")  # real install or conftest's mini-shim
 from hypothesis import given, settings, strategies as st
 
-from repro.core import queue as q_ops
+from repro.core import ops as bulk_ops
 from repro.core.master import superstep
 from repro.core.policy import StealPolicy
 from repro.core.sharded_queue import make_sharded_queues, vmapped_superstep
 
 SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+OPS = bulk_ops.make_ops("reference")
 
 
 def fill(qs, sizes):
@@ -33,7 +34,7 @@ def fill(qs, sizes):
         vals[:n] = range(nxt, nxt + n)
         nxt += n
         qi = jax.tree_util.tree_map(lambda x: x[i], qs)
-        qi, _ = q_ops.push(qi, jnp.asarray(vals), n)
+        qi, _ = OPS.push(qi, jnp.asarray(vals), n)
         qs = jax.tree_util.tree_map(
             lambda full, one: full.at[i].set(one), qs, qi
         )
@@ -47,7 +48,7 @@ def totals(qs):
     for i in range(W):
         qi = jax.tree_util.tree_map(lambda x: x[i], qs)
         while int(qi.size) > 0:
-            qi, item, valid = q_ops.pop(qi)
+            qi, item, valid = OPS.pop(qi)
             assert bool(valid)
             out.append(int(item))
     return out

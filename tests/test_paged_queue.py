@@ -39,6 +39,29 @@ def test_spill_then_drain_preserves_all_items():
     assert pq.total_size() == 0
 
 
+def test_spill_on_nearly_empty_ring_never_oversteals():
+    """Regression: overflowing a ring holding fewer than spill_n items
+    used to run the spill steal with proportion > 1, driving the queue
+    size negative and losing/duplicating tasks (the _steal_plan clamp
+    and the capped spill proportion both guard this now)."""
+    pq = PagedQueue(16, SPEC)  # _spill_n = 8
+    pq.push(_batch(range(4)), 4)           # ring holds 4 < spill_n
+    pq.push(_batch(range(100, 113)), 13)   # overflow: spill p would be 8/4
+    assert int(pq.state.size) >= 0
+    assert pq.total_size() == 17
+    got = _pop_all(pq)
+    assert sorted(got) == sorted(list(range(4)) + list(range(100, 113)))
+
+
+def test_steal_plan_clamps_out_of_range_proportions():
+    from repro.core.ops import _steal_plan
+
+    for p, size, expect in [(2.0, 4, 4), (1.0, 4, 4), (-1.0, 4, 0),
+                            (0.5, 10, 5), (3.0, 100, 32)]:
+        n = int(_steal_plan(jnp.int32(size), p, queue_limit=0, max_steal=32))
+        assert n == expect, (p, size, n)
+
+
 def test_low_watermark_boundary_triggers_refill_exactly():
     pq = PagedQueue(8, SPEC, low_watermark=2)
     # One host page of 3, ring holding 4.

@@ -1,10 +1,13 @@
 """Unit + property tests for the JAX bulk work-stealing queue.
 
-The linearizability property tests mirror the paper's §III-B argument: for
-any sequence of owner bulk-pushes / pops and stealer bulk-steals, the queue
-behaves exactly like a sequential deque where the owner operates at the head
-and the stealer detaches suffixes at the tail — no task is lost, duplicated,
-or reordered.
+Every test drives the queue through a :class:`repro.core.ops.BulkOps`
+backend and is parametrized over ``backend in ("reference", "auto")`` —
+the paper's single-contract / many-implementations discipline.  The
+linearizability property tests mirror the paper's §III-B argument: for
+any sequence of owner bulk-pushes / pops and stealer bulk-steals, the
+queue behaves exactly like a sequential deque where the owner operates
+at the head and the stealer detaches suffixes at the tail — no task is
+lost, duplicated, or reordered.
 """
 
 import jax
@@ -15,10 +18,18 @@ import pytest
 pytest.importorskip("hypothesis")  # real install or conftest's mini-shim
 from hypothesis import given, settings, strategies as st
 
-from repro.core import queue as q_ops
+from repro.core import ops as bulk_ops
 
 CAP = 64
 SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+BACKENDS = ("reference", "auto")
+
+
+@pytest.fixture(params=BACKENDS)
+def ops(request):
+    """A BulkOps backend for the standard CAP=64 test geometry."""
+    return bulk_ops.make_ops(request.param, capacity=CAP, max_push=16,
+                             max_pop=8, max_steal=64)
 
 
 def batch_of(values):
@@ -28,82 +39,143 @@ def batch_of(values):
     return jnp.asarray(buf), len(values)
 
 
-def test_push_pop_lifo():
-    q = q_ops.make_queue(CAP, SPEC)
+def test_make_ops_registry():
+    assert set(BACKENDS) <= set(bulk_ops.available_backends())
+    assert bulk_ops.make_ops("reference").resolved == "reference"
+    assert bulk_ops.make_ops("pallas").resolved == "pallas"
+    with pytest.raises(ValueError):
+        bulk_ops.make_ops("no-such-backend")
+    # an existing instance passes through unchanged
+    o = bulk_ops.make_ops("reference")
+    assert bulk_ops.make_ops(o) is o
+
+
+def test_auto_resolves_once_from_geometry(monkeypatch):
+    monkeypatch.delenv(bulk_ops.BACKEND_ENV_VAR, raising=False)
+    # compatible geometry: kernel routing on
+    o = bulk_ops.make_ops("auto", capacity=512, max_push=256, max_pop=256,
+                          max_steal=256)
+    assert (o.kernel_push, o.kernel_pop, o.kernel_steal) == (True,) * 3
+    assert o.resolved == "pallas"
+    # kernel-incompatible geometry: falls back to the reference routing
+    o = bulk_ops.make_ops("auto", capacity=500, max_push=200, max_pop=200,
+                          max_steal=200)
+    assert o.resolved == "reference"
+    # unknown geometry: conservative reference
+    assert bulk_ops.make_ops("auto").resolved == "reference"
+
+
+def test_auto_env_override(monkeypatch):
+    monkeypatch.setenv(bulk_ops.BACKEND_ENV_VAR, "reference")
+    o = bulk_ops.make_ops("auto", capacity=512, max_push=256, max_pop=256,
+                          max_steal=256)
+    assert o.resolved == "reference"
+    # explicit names are never overridden
+    assert bulk_ops.make_ops("pallas").resolved == "pallas"
+
+
+def test_auto_incompatible_geometry_matches_reference():
+    """'auto' on a kernel-incompatible geometry must produce results
+    identical to the reference backend (it IS the reference routing)."""
+    cap, max_steal = 100, 48  # not block-alignable
+    auto = bulk_ops.make_ops("auto", capacity=cap, max_push=16,
+                             max_pop=8, max_steal=max_steal)
+    ref = bulk_ops.make_ops("reference")
+    assert auto.resolved == "reference"
+    qa = bulk_ops.make_queue(cap, SPEC)
+    qr = bulk_ops.make_queue(cap, SPEC)
+    b, n = batch_of(list(range(1, 13)))
+    qa, na = auto.push(qa, b, n)
+    qr, nr = ref.push(qr, b, n)
+    assert int(na) == int(nr)
+    qa, ba, nsa = auto.steal(qa, 0.4, max_steal=max_steal)
+    qr, br, nsr = ref.steal(qr, 0.4, max_steal=max_steal)
+    assert int(nsa) == int(nsr)
+    np.testing.assert_array_equal(np.asarray(ba), np.asarray(br))
+    qa, ba, npa = auto.pop_bulk(qa, 8, 5)
+    qr, br, npr = ref.pop_bulk(qr, 8, 5)
+    assert int(npa) == int(npr)
+    np.testing.assert_array_equal(np.asarray(ba), np.asarray(br))
+    np.testing.assert_array_equal(np.asarray(qa.buf), np.asarray(qr.buf))
+    assert int(qa.lo) == int(qr.lo) and int(qa.size) == int(qr.size)
+
+
+def test_push_pop_lifo(ops):
+    q = bulk_ops.make_queue(CAP, SPEC)
     b, n = batch_of([1, 2, 3])
-    q, pushed = q_ops.push(q, b, n)
+    q, pushed = ops.push(q, b, n)
     assert int(pushed) == 3 and int(q.size) == 3
-    q, item, valid = q_ops.pop(q)
+    q, item, valid = ops.pop(q)
     assert bool(valid) and int(item) == 3  # owner pops newest (LIFO)
-    q, item, valid = q_ops.pop(q)
+    q, item, valid = ops.pop(q)
     assert int(item) == 2
-    q, item, valid = q_ops.pop(q)
+    q, item, valid = ops.pop(q)
     assert int(item) == 1
-    q, _, valid = q_ops.pop(q)
+    q, _, valid = ops.pop(q)
     assert not bool(valid) and int(q.size) == 0
 
 
-def test_pop_empty_is_null():
-    q = q_ops.make_queue(CAP, SPEC)
-    q, _, valid = q_ops.pop(q)
+def test_pop_empty_is_null(ops):
+    q = bulk_ops.make_queue(CAP, SPEC)
+    q, _, valid = ops.pop(q)
     assert not bool(valid)
     assert int(q.size) == 0
 
 
-def test_push_clamps_to_capacity():
-    q = q_ops.make_queue(4, SPEC)
+def test_push_clamps_to_capacity(ops):
+    q = bulk_ops.make_queue(4, SPEC)
     b, n = batch_of([1, 2, 3, 4, 5, 6])
-    q, pushed = q_ops.push(q, b, n)
+    q, pushed = ops.push(q, b, n)
     assert int(pushed) == 4 and int(q.size) == 4
 
 
-def test_steal_proportion_matches_paper_arithmetic():
+def test_steal_proportion_matches_paper_arithmetic(ops):
     # Listing 4: keep floor(sz * (1-p)); steal the rest.
-    q = q_ops.make_queue(CAP, SPEC)
+    q = bulk_ops.make_queue(CAP, SPEC)
     b, n = batch_of(list(range(1, 11)))  # 10 items, oldest=1
-    q, _ = q_ops.push(q, b, n)
-    q, stolen, ns = q_ops.steal(q, 0.3, max_steal=16)
+    q, _ = ops.push(q, b, n)
+    q, stolen, ns = ops.steal(q, 0.3, max_steal=16)
     assert int(ns) == 10 - int(10 * 0.7)  # = 3
     np.testing.assert_array_equal(np.asarray(stolen)[: int(ns)], [1, 2, 3])
     assert int(q.size) == 7
 
 
-def test_steal_aborts_below_queue_limit():
-    q = q_ops.make_queue(CAP, SPEC)
+def test_steal_aborts_below_queue_limit(ops):
+    q = bulk_ops.make_queue(CAP, SPEC)
     b, n = batch_of([7])
-    q, _ = q_ops.push(q, b, n)
-    q, _, ns = q_ops.steal(q, 0.9, max_steal=16, queue_limit=2)
+    q, _ = ops.push(q, b, n)
+    q, _, ns = ops.steal(q, 0.9, max_steal=16, queue_limit=2)
     assert int(ns) == 0 and int(q.size) == 1
 
 
-def test_steal_takes_oldest_side():
-    q = q_ops.make_queue(CAP, SPEC)
+def test_steal_takes_oldest_side(ops):
+    q = bulk_ops.make_queue(CAP, SPEC)
     b, n = batch_of([10, 11, 12, 13])
-    q, _ = q_ops.push(q, b, n)
-    q, stolen, ns = q_ops.steal(q, 0.5, max_steal=16)
+    q, _ = ops.push(q, b, n)
+    q, stolen, ns = ops.steal(q, 0.5, max_steal=16)
     np.testing.assert_array_equal(np.asarray(stolen)[: int(ns)], [10, 11])
     # Owner still pops newest first.
-    q, item, _ = q_ops.pop(q)
+    q, item, _ = ops.pop(q)
     assert int(item) == 13
 
 
-def test_steal_exact_masks_dead_rows():
-    q = q_ops.make_queue(CAP, SPEC)
+def test_steal_exact_masks_dead_rows(ops):
+    q = bulk_ops.make_queue(CAP, SPEC)
     b, n = batch_of([5, 6, 7, 8])
-    q, _ = q_ops.push(q, b, n)
-    q, blk, ns = q_ops.steal_exact(q, 2, max_steal=8)
+    q, _ = ops.push(q, b, n)
+    q, blk, ns = ops.steal_exact(q, 2, max_steal=8)
     arr = np.asarray(blk)
     np.testing.assert_array_equal(arr[:2], [5, 6])
     assert (arr[2:] == 0).all()  # masked — safe for summing collectives
 
 
-def test_steal_counted_equals_steal():
-    q1 = q_ops.make_queue(CAP, SPEC)
+def test_steal_counted_equals_steal(ops):
+    q1 = bulk_ops.make_queue(CAP, SPEC)
     b, n = batch_of(list(range(1, 13)))
-    q1, _ = q_ops.push(q1, b, n)
-    q2 = q_ops.QueueState(*q1)
-    a1, s1, n1 = q_ops.steal(q1, 0.4, max_steal=16)
-    a2, s2, n2 = q_ops.steal_counted(q2, 0.4, max_steal=16)
+    q1, _ = ops.push(q1, b, n)
+    q2 = bulk_ops.QueueState(*q1)
+    a1, s1, n1 = ops.steal(q1, 0.4, max_steal=16)
+    a2, s2, n2 = bulk_ops.steal_counted(q2, 0.4, max_steal=16)
     assert int(n1) == int(n2)
     np.testing.assert_array_equal(
         np.asarray(s1)[: int(n1)], np.asarray(s2)[: int(n2)]
@@ -111,30 +183,59 @@ def test_steal_counted_equals_steal():
     assert int(a1.size) == int(a2.size)
 
 
-def test_ring_wraparound():
-    q = q_ops.make_queue(8, SPEC)
+def test_ring_wraparound(ops):
+    q = bulk_ops.make_queue(8, SPEC)
     seq = 0
     for _ in range(10):  # cycle the ring several times
         b, n = batch_of([seq, seq + 1, seq + 2])
-        q, pushed = q_ops.push(q, b, n)
+        q, pushed = ops.push(q, b, n)
         assert int(pushed) == 3
         got = []
         for _ in range(3):
-            q, item, valid = q_ops.pop(q)
+            q, item, valid = ops.pop(q)
             assert bool(valid)
             got.append(int(item))
         assert got == [seq + 2, seq + 1, seq]
         seq += 3
 
 
-def test_pop_bulk_order():
-    q = q_ops.make_queue(CAP, SPEC)
+def test_pop_bulk_order(ops):
+    q = bulk_ops.make_queue(CAP, SPEC)
     b, n = batch_of([1, 2, 3, 4, 5])
-    q, _ = q_ops.push(q, b, n)
-    q, blk, ns = q_ops.pop_bulk(q, 4, 3)
+    q, _ = ops.push(q, b, n)
+    q, blk, ns = ops.pop_bulk(q, 4, 3)
     assert int(ns) == 3
     np.testing.assert_array_equal(np.asarray(blk)[:3], [3, 4, 5])
     assert int(q.size) == 2
+
+
+def test_donate_matches_pure(ops):
+    """donate=True (jitted, state donated where supported) is bit-identical
+    to the pure path — the old *_inplace triplets collapsed to a flag."""
+    b = jnp.arange(1, 17, dtype=jnp.int32)
+    q_f = bulk_ops.make_queue(CAP, SPEC)
+    q_i = bulk_ops.make_queue(CAP, SPEC)
+
+    q_f, n_f = ops.push(q_f, b, jnp.int32(10))
+    q_i, n_i = ops.push(q_i, b, jnp.int32(10), donate=True)
+    assert int(n_f) == int(n_i) == 10
+
+    q_f, blk_f, p_f = ops.pop_bulk(q_f, 8, jnp.int32(3))
+    q_i, blk_i, p_i = ops.pop_bulk(q_i, 8, jnp.int32(3), donate=True)
+    assert int(p_f) == int(p_i)
+    np.testing.assert_array_equal(np.asarray(blk_f), np.asarray(blk_i))
+
+    q_f, s_f, ns_f = ops.steal_exact(q_f, jnp.int32(4), max_steal=8)
+    q_i, s_i, ns_i = ops.steal_exact(q_i, jnp.int32(4), max_steal=8,
+                                     donate=True)
+    assert int(ns_f) == int(ns_i)
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_i))
+
+    q_f, it_f, v_f = ops.pop(q_f)
+    q_i, it_i, v_i = ops.pop(q_i, donate=True)
+    assert bool(v_f) == bool(v_i) and int(it_f) == int(it_i)
+    assert int(q_f.lo) == int(q_i.lo) and int(q_f.size) == int(q_i.size)
+    np.testing.assert_array_equal(np.asarray(q_f.buf), np.asarray(q_i.buf))
 
 
 # ---------------------------------------------------------------------------
@@ -153,41 +254,45 @@ ops_strategy = st.lists(
 )
 
 
-@settings(max_examples=60, deadline=None)
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(max_examples=30, deadline=None)
 @given(ops_strategy)
-def test_linearizable_against_model(ops):
+def test_linearizable_against_model(backend, program):
     """Every interleaving of bulk ops at superstep granularity matches the
-    sequential deque: owner at head, stealer at tail, nothing lost/dup'd."""
-    q = q_ops.make_queue(128, SPEC)
+    sequential deque: owner at head, stealer at tail, nothing lost/dup'd —
+    for every backend."""
+    ops = bulk_ops.make_ops(backend, capacity=128, max_push=16, max_pop=8,
+                            max_steal=64)
+    q = bulk_ops.make_queue(128, SPEC)
     model = []  # index 0 = oldest (tail), -1 = newest (head)
     next_val = 1
     produced, consumed = set(), []
 
-    for op, arg in ops:
+    for op, arg in program:
         if op == "push":
             vals = list(range(next_val, next_val + arg))
             next_val += arg
             b, n = batch_of(vals)
-            q, pushed = q_ops.push(q, b, n)
+            q, pushed = ops.push(q, b, n)
             pushed = int(pushed)
             model.extend(vals[:pushed])
             produced.update(vals[:pushed])
         elif op == "pop":
-            q, item, valid = q_ops.pop(q)
+            q, item, valid = ops.pop(q)
             if model:
                 assert bool(valid) and int(item) == model.pop()
                 consumed.append(int(item))
             else:
                 assert not bool(valid)
         elif op == "pop_bulk":
-            q, blk, ns = q_ops.pop_bulk(q, 8, arg)
+            q, blk, ns = ops.pop_bulk(q, 8, arg)
             ns = int(ns)
             expect = model[len(model) - ns :]
             del model[len(model) - ns :]
             np.testing.assert_array_equal(np.asarray(blk)[:ns], expect)
             consumed.extend(expect)
         elif op == "steal":
-            q, blk, ns = q_ops.steal(q, arg, max_steal=64)
+            q, blk, ns = ops.steal(q, arg, max_steal=64)
             ns = int(ns)
             # Paper arithmetic on the model:
             sz = len(model)

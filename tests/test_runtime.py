@@ -1,14 +1,17 @@
 """The unified runtime: executor conservation across adaptive rounds
-(per-round and fused), kernel-path parity for the steal gather, the push
-ring-scatter and the pop ring-slice (dynamic cursors straddling block
-boundaries), and in-place vs. functional queue-op equivalence."""
+(per-round, fused, and early-exit fused), backend-dispatch parity
+(pallas-routed vs reference BulkOps for steal/push/pop on dynamic
+cursors straddling block boundaries), and donate= vs pure equivalence.
+Executor tests are parametrized over ``backend in ("reference", "auto")``
+— the oracle and the geometry-resolved routing must be observationally
+identical."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import queue as q_ops
+from repro.core import ops as bulk_ops
 from repro.core.policy import StealPolicy
 from repro.kernels.queue_push.kernel import ring_scatter, ring_slice
 from repro.kernels.queue_push.ref import ring_scatter_ref, ring_slice_ref
@@ -18,6 +21,9 @@ from repro.kernels.queue_steal.ref import ring_gather_ref
 from repro.runtime import AdaptiveConfig, StealRuntime
 
 SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+BACKENDS = ("reference", "auto")
+REF = bulk_ops.make_ops("reference")
+PALLAS = bulk_ops.make_ops("pallas")
 
 
 def _seed(rt, sizes):
@@ -37,17 +43,21 @@ def _drained_ids(rt):
 # ------------------------------------------------------------- conservation
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("sizes,rounds", [
     ([40, 0, 0, 0], 5),
     ([0, 17, 3, 25, 0, 9], 4),
     ([100, 0, 0, 0, 0, 0, 0, 0], 8),
 ])
-def test_executor_conserves_tasks_across_adaptive_rounds(sizes, rounds):
+def test_executor_conserves_tasks_across_adaptive_rounds(sizes, rounds,
+                                                         backend):
     """No task lost or duplicated while the controller re-tunes the
-    proportion every round (traced scalar => same compiled round)."""
+    proportion every round (traced scalar => same compiled round) — for
+    every backend."""
     pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
                       max_steal=32)
-    rt = StealRuntime(len(sizes), 128, SPEC, policy=pol, adaptive=True)
+    rt = StealRuntime(len(sizes), 128, SPEC, policy=pol, adaptive=True,
+                      backend=backend)
     ids = _seed(rt, sizes)
     props = set()
     for _ in range(rounds):
@@ -59,6 +69,24 @@ def test_executor_conserves_tasks_across_adaptive_rounds(sizes, rounds):
     assert rt.telemetry.summary()["rounds"] == rounds
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_executor_backends_agree(backend):
+    """The full executor trajectory (sizes, telemetry, drained ids) is
+    identical across backends — the cross-implementation contract."""
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32)
+    rt_ref = StealRuntime(4, 128, SPEC, policy=pol, backend="reference")
+    rt_b = StealRuntime(4, 128, SPEC, policy=pol, backend=backend)
+    ids = _seed(rt_ref, [40, 0, 3, 0])
+    _seed(rt_b, [40, 0, 3, 0])
+    for _ in range(5):
+        rt_ref.round()
+        rt_b.round()
+    np.testing.assert_array_equal(rt_ref.sizes(), rt_b.sizes())
+    assert rt_ref.telemetry.summary() == rt_b.telemetry.summary()
+    assert _drained_ids(rt_ref) == _drained_ids(rt_b) == sorted(ids)
+
+
 def test_executor_conserves_with_worker_body():
     """Conservation holds when a worker body pops/pushes between steals
     (ids are consumed exactly once across lanes)."""
@@ -67,9 +95,10 @@ def test_executor_conserves_with_worker_body():
     W = 4
     rt = StealRuntime(W, 128, SPEC, policy=pol)
     ids = _seed(rt, [30, 0, 0, 0])
+    ops = rt.ops
 
     def body(q, carry):
-        q, item, valid = q_ops.pop(q)
+        q, item, valid = ops.pop(q)
         carry = carry + jnp.where(valid, item, 0)
         return q, carry
 
@@ -133,17 +162,16 @@ def test_ring_gather_interpret_parity_straddling_blocks(case):
 
 
 @pytest.mark.parametrize("lo,n", [(120, 60), (250, 200), (0, 0)])
-def test_steal_exact_kernel_route_matches_plain(lo, n):
-    """core.queue.steal_exact(use_kernel=True) == the plain gather for
-    dynamic lo (the dispatcher picks ref on CPU, Pallas on TPU)."""
+def test_steal_exact_pallas_backend_matches_reference(lo, n):
+    """The pallas-routed backend == the reference backend for dynamic lo
+    (the dispatcher picks the kernel oracle on CPU, Pallas on TPU)."""
     cap, max_steal = 256, 128
-    q = q_ops.QueueState(
+    q = bulk_ops.QueueState(
         buf={"a": jnp.arange(cap, dtype=jnp.int32),
              "b": jnp.arange(cap * 2, dtype=jnp.float32).reshape(cap, 2)},
         lo=jnp.int32(lo), size=jnp.int32(min(cap, 220)))
-    q1, b1, n1 = q_ops.steal_exact(q, jnp.int32(n), max_steal=max_steal)
-    q2, b2, n2 = q_ops.steal_exact(q, jnp.int32(n), max_steal=max_steal,
-                                   use_kernel=True)
+    q1, b1, n1 = REF.steal_exact(q, jnp.int32(n), max_steal=max_steal)
+    q2, b2, n2 = PALLAS.steal_exact(q, jnp.int32(n), max_steal=max_steal)
     assert int(n1) == int(n2)
     assert int(q1.lo) == int(q2.lo) and int(q1.size) == int(q2.size)
     for k in ("a", "b"):
@@ -151,11 +179,11 @@ def test_steal_exact_kernel_route_matches_plain(lo, n):
 
 
 def test_kernel_steal_available_geometry():
-    assert q_ops.kernel_steal_available(512, 256)
-    assert q_ops.kernel_steal_available(256, 128)
-    assert q_ops.kernel_steal_available(64, 32)       # block shrinks to 32
-    assert not q_ops.kernel_steal_available(500, 256)  # cap not block-aligned
-    assert not q_ops.kernel_steal_available(512, 200)  # max_steal unaligned
+    assert bulk_ops.kernel_steal_available(512, 256)
+    assert bulk_ops.kernel_steal_available(256, 128)
+    assert bulk_ops.kernel_steal_available(64, 32)       # block shrinks to 32
+    assert not bulk_ops.kernel_steal_available(500, 256)  # cap not aligned
+    assert not bulk_ops.kernel_steal_available(512, 200)  # max_steal unaligned
 
 
 # ------------------------------------- push/pop kernels: wraparound parity
@@ -216,26 +244,25 @@ def test_ring_slice_interpret_parity_straddling_blocks(case):
 @pytest.mark.parametrize("lo,size,n_push,n_pop", [
     (0, 0, 10, 4), (120, 60, 16, 16), (250, 4, 8, 12), (100, 200, 0, 0),
 ])
-def test_push_pop_kernel_route_matches_plain(lo, size, n_push, n_pop):
-    """core.queue.push/pop_bulk(use_kernel=True) == the plain path for
-    dynamic cursors (the dispatcher picks the oracle on CPU, Pallas on
-    TPU)."""
+def test_push_pop_pallas_backend_matches_reference(lo, size, n_push, n_pop):
+    """The pallas-routed backend == the reference backend for push and
+    bulk pop on dynamic cursors (the dispatcher picks the kernel oracle
+    on CPU, Pallas on TPU)."""
     cap, max_n = 256, 16
-    q = q_ops.QueueState(
+    q = bulk_ops.QueueState(
         buf={"a": jnp.arange(cap, dtype=jnp.int32),
              "b": jnp.arange(cap * 2, dtype=jnp.float32).reshape(cap, 2)},
         lo=jnp.int32(lo), size=jnp.int32(size))
     batch = {"a": jnp.arange(1, max_n + 1, dtype=jnp.int32),
              "b": jnp.ones((max_n, 2), jnp.float32)}
-    q1, p1 = q_ops.push(q, batch, jnp.int32(n_push))
-    q2, p2 = q_ops.push(q, batch, jnp.int32(n_push), use_kernel=True)
+    q1, p1 = REF.push(q, batch, jnp.int32(n_push))
+    q2, p2 = PALLAS.push(q, batch, jnp.int32(n_push))
     assert int(p1) == int(p2)
     for k in ("a", "b"):
         np.testing.assert_array_equal(np.asarray(q1.buf[k]),
                                       np.asarray(q2.buf[k]))
-    q1, b1, n1 = q_ops.pop_bulk(q1, max_n, jnp.int32(n_pop))
-    q2, b2, n2 = q_ops.pop_bulk(q2, max_n, jnp.int32(n_pop),
-                                use_kernel=True)
+    q1, b1, n1 = REF.pop_bulk(q1, max_n, jnp.int32(n_pop))
+    q2, b2, n2 = PALLAS.pop_bulk(q2, max_n, jnp.int32(n_pop))
     assert int(n1) == int(n2)
     assert int(q1.size) == int(q2.size)
     for k in ("a", "b"):
@@ -243,14 +270,14 @@ def test_push_pop_kernel_route_matches_plain(lo, size, n_push, n_pop):
 
 
 def test_kernel_push_pop_available_geometry():
-    assert q_ops.kernel_push_available(512, 256)
-    assert q_ops.kernel_push_available(4096, 1024)
-    assert not q_ops.kernel_push_available(500, 256)   # cap unaligned
+    assert bulk_ops.kernel_push_available(512, 256)
+    assert bulk_ops.kernel_push_available(4096, 1024)
+    assert not bulk_ops.kernel_push_available(500, 256)   # cap unaligned
     # splice span (max_push + one straddle block) must not lap the ring
-    assert not q_ops.kernel_push_available(256, 256)
-    assert q_ops.kernel_pop_available(512, 512)
-    assert q_ops.kernel_pop_available(64, 32)
-    assert not q_ops.kernel_pop_available(512, 200)    # max_n unaligned
+    assert not bulk_ops.kernel_push_available(256, 256)
+    assert bulk_ops.kernel_pop_available(512, 512)
+    assert bulk_ops.kernel_pop_available(64, 32)
+    assert not bulk_ops.kernel_pop_available(512, 200)    # max_n unaligned
 
 
 # ------------------------------------------------------- fused supersteps
@@ -283,16 +310,17 @@ def test_run_fused_conserves_and_matches_sequential_rounds(sizes, k):
 
 
 def test_run_fused_with_worker_body_conserves():
-    """Fused rounds interleaving a pop/consume body with kernel-backed
+    """Fused rounds interleaving a pop/consume body with backend-routed
     rebalancing consume every id exactly once."""
     pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=6,
                       max_steal=16)
     W = 4
-    rt = StealRuntime(W, 128, SPEC, policy=pol, use_kernel=True)
+    rt = StealRuntime(W, 128, SPEC, policy=pol, backend="pallas")
     ids = _seed(rt, [30, 0, 0, 0])
+    ops = rt.ops
 
     def body(q, carry):
-        q, item, valid = q_ops.pop(q)
+        q, item, valid = ops.pop(q)
         carry = carry + jnp.where(valid, item, 0)
         return q, carry
 
@@ -303,6 +331,69 @@ def test_run_fused_with_worker_body_conserves():
             break
     assert rt.total_size() == 0
     assert int(jnp.sum(carry)) == sum(ids)
+
+
+# ------------------------------------------- early-exit fused (while_loop)
+
+
+@pytest.mark.parametrize("sizes,k", [
+    ([40, 0, 0, 0], 5),
+    ([0, 17, 3, 25, 0, 9], 4),
+])
+def test_until_drained_matches_scan_when_not_draining(sizes, k):
+    """With work left after k rounds, until_drained executes exactly k
+    rounds with the identical trajectory as the scan path."""
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32)
+    rt_scan = StealRuntime(len(sizes), 128, SPEC, policy=pol)
+    rt_wl = StealRuntime(len(sizes), 128, SPEC, policy=pol)
+    ids = _seed(rt_scan, sizes)
+    _seed(rt_wl, sizes)
+    _, stats_scan = rt_scan.run_fused(k)
+    _, stats_wl, rounds = rt_wl.run_fused(k, until_drained=True)
+    assert rounds == k  # nothing drained: full block
+    assert rt_wl.rounds_run == rt_scan.rounds_run == k
+    np.testing.assert_array_equal(rt_wl.sizes(), rt_scan.sizes())
+    assert rt_wl.controller.history == rt_scan.controller.history
+    assert rt_wl.telemetry.summary() == rt_scan.telemetry.summary()
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        stats_wl, stats_scan)
+    assert _drained_ids(rt_wl) == sorted(ids)
+
+
+def test_until_drained_early_exits_and_reports_rounds():
+    """A consuming worker body drains the queues mid-block: the
+    while_loop stops early, reports the executed count, and telemetry /
+    rounds_run see only executed rounds."""
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=6,
+                      max_steal=16)
+    W = 4
+    rt = StealRuntime(W, 128, SPEC, policy=pol)
+    ids = _seed(rt, [6, 0, 0, 0])
+    ops = rt.ops
+
+    def body(q, carry):
+        q, item, valid = ops.pop(q)
+        carry = carry + jnp.where(valid, item, 0)
+        return q, carry
+
+    carry = jnp.zeros((W,), jnp.int32)
+    carry, stats, rounds = rt.run_fused(50, body, carry,
+                                        until_drained=True)
+    assert rounds < 50
+    assert rt.total_size() == 0
+    assert rt.rounds_run == rounds
+    assert rt.telemetry.summary()["rounds"] == rounds
+    assert np.asarray(stats.n_transferred).shape[0] == rounds
+    assert int(jnp.sum(carry)) == sum(ids)
+    # already drained: zero rounds execute, state untouched
+    carry2, stats2, rounds2 = rt.run_fused(5, body, jnp.zeros((W,), jnp.int32),
+                                           until_drained=True)
+    assert rounds2 == 0
+    assert rt.rounds_run == rounds
+    assert int(jnp.sum(carry2)) == 0
 
 
 def test_hierarchical_accounting_is_exact_not_replicated():
@@ -341,32 +432,6 @@ def test_run_fused_stacks_telemetry_rounds():
     assert np.asarray(stats.n_transferred).shape[0] == 3
     assert rt.telemetry.summary()["rounds"] == 3
     assert len(rt.controller.history) == 4
-
-
-# ------------------------------------------- in-place vs functional parity
-
-
-def test_inplace_ops_match_functional():
-    b = jnp.arange(1, 17, dtype=jnp.int32)
-    q_f = q_ops.make_queue(64, SPEC)
-    q_i = q_ops.make_queue(64, SPEC)
-
-    q_f, n_f = q_ops.push(q_f, b, jnp.int32(10))
-    q_i, n_i = q_ops.push_inplace(q_i, b, jnp.int32(10))
-    assert int(n_f) == int(n_i) == 10
-
-    q_f, blk_f, p_f = q_ops.pop_bulk(q_f, 8, jnp.int32(3))
-    q_i, blk_i, p_i = q_ops.pop_bulk_inplace(q_i, 8, jnp.int32(3))
-    assert int(p_f) == int(p_i)
-    np.testing.assert_array_equal(np.asarray(blk_f), np.asarray(blk_i))
-
-    q_f, s_f, ns_f = q_ops.steal_exact(q_f, jnp.int32(4), max_steal=8)
-    q_i, s_i, ns_i = q_ops.steal_exact_inplace(q_i, jnp.int32(4),
-                                               max_steal=8)
-    assert int(ns_f) == int(ns_i)
-    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_i))
-    assert int(q_f.lo) == int(q_i.lo) and int(q_f.size) == int(q_i.size)
-    np.testing.assert_array_equal(np.asarray(q_f.buf), np.asarray(q_i.buf))
 
 
 # ----------------------------------------------------------- adaptive servo
