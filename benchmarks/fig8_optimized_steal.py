@@ -8,7 +8,8 @@ with an explicit sequential probe chain.
 
 This benchmark also exercises the production path end-to-end: the second
 table drives full :class:`repro.runtime.StealRuntime` rebalancing rounds
-(plan + backend-routed block detach + all_to_all splice) and compares
+(plan + backend-routed block detach + collective exchange + splice) and
+compares
 the ``"pallas"`` BulkOps backend (Pallas ring-gather on TPU, the kernel
 module's jnp oracle elsewhere) against the ``"reference"`` backend at
 every measured proportion.  The flat-latency claim holds iff the kernel
@@ -115,7 +116,7 @@ def _jax_func_vs_kernel(p: float):
 def _executor_rounds(p: float):
     """(reference, pallas) latency of one full rebalancing round through
     the unified executor — the replicated plan, the victim-side detach,
-    the all_to_all block move and the thief splice — interleaved."""
+    the collective block exchange and the thief splice — interleaved."""
     spec = jnp.zeros((), jnp.int32)
     policy = StealPolicy(proportion=p, low_watermark=1, high_watermark=8,
                          max_steal=MAX_STEAL)

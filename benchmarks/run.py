@@ -4,15 +4,20 @@
   PYTHONPATH=src python -m benchmarks.run --json [--tiny] [--out BENCH_PR2.json]
   PYTHONPATH=src python -m benchmarks.run --sweep-adaptive [--tiny] \
       [--out BENCH_PR3.json]
+  PYTHONPATH=src python -m benchmarks.run --scaling [--tiny] \
+      [--out BENCH_PR4.json]
 
 ``--json`` runs the figures that seed the repo's perf trajectory (Fig. 6
 push latency incl. the backend sweep, Fig. 7 steal latency, the Fig. 9
-device workload's fused-vs-per-round supersteps) and writes the raw
-numbers to a JSON file; ``--tiny`` shrinks repeats/sizes so the whole
-sweep fits a CPU CI smoke job.  ``--sweep-adaptive`` runs the
-steal-proportion autotuning sweep (AdaptiveConfig gain/clamp vs static
-proportions on the Fig. 9 DAG workload) and records the winner in
-BENCH_PR3.json.
+device workload's fused-vs-per-round supersteps, and the Fig. 10
+dense-vs-compact exchange columns) and writes the raw numbers to a JSON
+file; ``--tiny`` shrinks repeats/sizes so the whole sweep fits a CPU CI
+smoke job.  ``--sweep-adaptive`` runs the steal-proportion autotuning
+sweep (AdaptiveConfig gain/clamp vs static proportions on the Fig. 9
+DAG workload) and records the winner in BENCH_PR3.json.  ``--scaling``
+runs the full Fig. 10 worker-count scaling sweep (W x max_steal x
+{dense, compact}: wall per round + exchange payload) into
+BENCH_PR4.json.
 """
 
 from __future__ import annotations
@@ -27,7 +32,7 @@ import time
 def run_json(out: str, tiny: bool) -> int:
     import jax
 
-    from benchmarks import fig6_push, fig7_steal, fig9_dag
+    from benchmarks import fig6_push, fig7_steal, fig9_dag, fig10_scaling
 
     t0 = time.time()
     results = {
@@ -48,12 +53,43 @@ def run_json(out: str, tiny: bool) -> int:
     t9, d9 = fig9_dag.device_run(tiny=tiny)
     t9.show()
     results["fig9_device_fused"] = d9
+    t10, d10 = fig10_scaling.run(tiny=tiny)
+    t10.show()
+    results["fig10_scaling"] = d10
     results["meta"]["wall_s"] = time.time() - t0
     with open(out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"[benchmarks] wrote {out} "
           f"(kernel push flatness {d6['kernel_flatness_1_to_1024']:.2f}x, "
           f"fused speedup {d9['fused_speedup']:.2f}x, "
+          f"fig10 payload ratio==W {d10['payload_ratio_equals_w']}, "
+          f"{results['meta']['wall_s']:.1f}s)")
+    return 0
+
+
+def run_scaling(out: str, tiny: bool) -> int:
+    import jax
+
+    from benchmarks import fig10_scaling
+
+    t0 = time.time()
+    table, data = fig10_scaling.run(tiny=tiny)
+    table.show()
+    results = {
+        "meta": {
+            "bench": "BENCH_PR4",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "tiny": tiny,
+            "wall_s": time.time() - t0,
+        },
+        "fig10_scaling": data,
+    }
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[benchmarks] wrote {out} "
+          f"(payload ratio==W {data['payload_ratio_equals_w']}, "
           f"{results['meta']['wall_s']:.1f}s)")
     return 0
 
@@ -95,18 +131,24 @@ def main():
     ap.add_argument("--sweep-adaptive", action="store_true",
                     help="AdaptiveConfig gain/clamp vs static proportions "
                          "on the Fig. 9 DAG workload -> BENCH_PR3.json")
+    ap.add_argument("--scaling", action="store_true",
+                    help="Fig. 10 worker-count scaling sweep (dense vs "
+                         "compact exchange) -> BENCH_PR4.json")
     ap.add_argument("--out", default=None,
-                    help="output path for --json / --sweep-adaptive")
+                    help="output path for --json / --sweep-adaptive / "
+                         "--scaling")
     args = ap.parse_args()
 
+    if args.scaling:
+        return run_scaling(args.out or "BENCH_PR4.json", args.tiny)
     if args.sweep_adaptive:
         return run_adaptive_sweep(args.out or "BENCH_PR3.json", args.tiny)
     if args.json or args.tiny:
         return run_json(args.out or "BENCH_PR2.json", args.tiny)
 
     from benchmarks import (fig6_push, fig7_steal, fig8_optimized_steal,
-                            pop_parity, fig9_dag, roofline_report,
-                            moe_steal, solver_scale)
+                            pop_parity, fig9_dag, fig10_scaling,
+                            roofline_report, moe_steal, solver_scale)
 
     t0 = time.time()
     fig6_push.run()[0].show()
@@ -118,6 +160,7 @@ def main():
     moe_steal.run().show()
     solver_scale.run().show()
     fig9_dag.device_run()[0].show()
+    fig10_scaling.run()[0].show()
     if not args.quick:
         fig9_dag.run().show()
     tb = roofline_report.run()

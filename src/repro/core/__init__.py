@@ -6,7 +6,8 @@ Layers:
                 proportional bulk steal, one operation surface
   queue         QueueState + host paging; deprecated use_kernel shims
   policy        steal policies + the virtual master's transfer planner
-  master        SPMD rebalancing supersteps (all_gather + all_to_all)
+  master        SPMD rebalancing supersteps (compact one-window
+                all_gather exchange by default; dense all_to_all oracle)
   sharded_queue stacked per-worker queues, vmap/shard_map drivers
   host_queue    faithful host-threaded port of the paper's Listings 1-4,
                 behind the HostQueue protocol

@@ -36,7 +36,10 @@ Every operation takes the :class:`QueueState` first and returns the new
 state first — ``(state, ...) -> (state, batch, n)`` — with the detached
 batch (static leading dim, dead rows zeroed) and the dynamic count
 following where the op produces them (``push`` returns ``(state,
-n_pushed)``: there is no detached batch).  Each op accepts
+n_pushed)``: there is no detached batch).  Two exchange-side ops serve
+the compact superstep: ``window`` (the victim's raw tail window for the
+all_gather — a pure read) and ``transfer`` (the thief's fused
+cut-and-splice out of the gathered window stack).  Each op accepts
 ``donate=True``, which routes through a cached jitted variant whose
 input state is donated (XLA aliases the ring buffer input -> output, so
 the update is an in-place scatter/cursor bump instead of a full-capacity
@@ -65,6 +68,7 @@ __all__ = [
     "QueueState",
     "make_queue",
     "queue_size",
+    "item_nbytes",
     "BulkOps",
     "make_ops",
     "register_backend",
@@ -73,6 +77,7 @@ __all__ = [
     "kernel_steal_available",
     "kernel_push_available",
     "kernel_pop_available",
+    "kernel_transfer_available",
     "DEFAULT_QUEUE_LIMIT",
     "BACKEND_ENV_VAR",
 ]
@@ -127,6 +132,21 @@ def queue_size(q: QueueState) -> jnp.ndarray:
     return q.size
 
 
+def item_nbytes(item_spec: Pytree) -> int:
+    """Bytes per queue item: sum over payload-pytree leaves (arrays or
+    ``ShapeDtypeStruct``s describing ONE item, no capacity dimension).
+    The single source of truth for item payload accounting — the
+    master's ``bytes_moved`` and the runtime telemetry both derive from
+    it."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(item_spec):
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
 # ---------------------------------------------------------------------------
 # Geometry predicates (the kernel modules own the block-tiling rules)
 # ---------------------------------------------------------------------------
@@ -154,6 +174,14 @@ def kernel_steal_available(capacity: int, max_steal: int) -> bool:
     from repro.kernels.queue_steal.kernel import ring_gather_supported
 
     return ring_gather_supported(capacity, max_steal)
+
+
+def kernel_transfer_available(capacity: int, max_steal: int) -> bool:
+    """Whether the Pallas fused ring-transfer kernel can serve the
+    compact superstep's thief-side cut-and-splice of this geometry."""
+    from repro.kernels.queue_transfer.kernel import ring_transfer_supported
+
+    return ring_transfer_supported(capacity, max_steal)
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +346,52 @@ def _steal_exact(q: QueueState, n: jnp.ndarray, *, max_steal: int,
     return QueueState(buf=q.buf, lo=new_lo, size=q.size - n), batch, n
 
 
+def _window(q: QueueState, *, max_steal: int, kernel: bool) -> Pytree:
+    """Raw tail window: rows ``(lo + i) % cap`` for ``i < max_steal``,
+    UNMASKED (rows past ``size`` carry whatever the ring holds — they
+    are dead weight the compact superstep's all_gather carries and the
+    thief never reads).  This is the victim-side contribution to the
+    compact exchange: the detach itself is a pure cursor bump, so no
+    masked intermediate is ever materialized."""
+    return _gather_block(q, jnp.int32(max_steal), max_steal, kernel)
+
+
+def _transfer(q: QueueState, gathered: Pytree, src_row, n, *,
+              max_steal: int, kernel: bool
+              ) -> Tuple[QueueState, jnp.ndarray]:
+    """Thief-side fused cut-and-splice for the compact superstep: splice
+    rows ``gathered[src_row, :n]`` (each ``gathered`` leaf is a
+    ``(W, max_steal, ...)`` stack of per-lane windows) at the owner end
+    of ``q``.  Semantically ``push(q, gathered[src_row], n)``; the
+    kernel path (``kernels.queue_transfer.ring_transfer``) reads the
+    gathered buffer directly through a dynamic source offset so the
+    selected ``(max_steal, ...)`` block never materializes.  Returns
+    ``(new_state, n_spliced)`` with ``n`` clamped to the available
+    space, exactly like ``push``."""
+    cap = _capacity(q)
+    src_row = jnp.asarray(src_row, jnp.int32)
+    n = jnp.minimum(jnp.asarray(n, jnp.int32),
+                    jnp.minimum(jnp.int32(cap) - q.size,
+                                jnp.int32(max_steal)))
+    n = jnp.maximum(n, 0)
+    if kernel and kernel_transfer_available(cap, max_steal):
+        from repro.kernels.queue_transfer.ops import transfer_splice
+
+        buf = transfer_splice(
+            q.buf, gathered, (q.lo + q.size) % cap, src_row, n,
+            max_steal=max_steal,
+            use_pallas=jax.default_backend() == "tpu",
+        )
+        return QueueState(buf=buf, lo=q.lo, size=q.size + n), n
+    # Reference path IS "select the victim's row, then push" — delegate
+    # so the ring-splice write has one source of truth (_push).
+    batch = jax.tree_util.tree_map(
+        lambda g: lax.dynamic_index_in_dim(g, src_row, 0, keepdims=False),
+        gathered,
+    )
+    return _push(q, batch, n, kernel=False)
+
+
 def steal_counted(
     q: QueueState,
     proportion,
@@ -369,8 +443,8 @@ def steal_counted(
 
 
 @functools.lru_cache(maxsize=None)
-def _donating(kernel_push: bool, kernel_pop: bool,
-              kernel_steal: bool) -> types.SimpleNamespace:
+def _donating(kernel_push: bool, kernel_pop: bool, kernel_steal: bool,
+              kernel_transfer: bool) -> types.SimpleNamespace:
     donate = () if jax.default_backend() == "cpu" else (0,)
     return types.SimpleNamespace(
         push=jax.jit(functools.partial(_push, kernel=kernel_push),
@@ -384,6 +458,11 @@ def _donating(kernel_push: bool, kernel_pop: bool,
         steal_exact=jax.jit(
             functools.partial(_steal_exact, kernel=kernel_steal),
             static_argnames=("max_steal",), donate_argnums=donate),
+        window=jax.jit(functools.partial(_window, kernel=kernel_steal),
+                       static_argnames=("max_steal",)),
+        transfer=jax.jit(
+            functools.partial(_transfer, kernel=kernel_transfer),
+            static_argnames=("max_steal",), donate_argnums=donate),
     )
 
 
@@ -396,7 +475,7 @@ class BulkOps:
     """One queue-operation backend: the paper's bulk push/pop/steal
     contract with a fixed kernel routing.
 
-    Instances are cheap, stateless value objects — the three ``kernel_*``
+    Instances are cheap, stateless value objects — the four ``kernel_*``
     booleans are the entire configuration, fixed at construction (this is
     where ``"auto"``'s geometry resolution happens, never per call).
     Obtain instances via :func:`make_ops`; compare routing with
@@ -404,16 +483,18 @@ class BulkOps:
     """
 
     def __init__(self, name: str, *, kernel_push: bool = False,
-                 kernel_pop: bool = False, kernel_steal: bool = False):
+                 kernel_pop: bool = False, kernel_steal: bool = False,
+                 kernel_transfer: bool = False):
         self.name = name
         self.kernel_push = bool(kernel_push)
         self.kernel_pop = bool(kernel_pop)
         self.kernel_steal = bool(kernel_steal)
+        self.kernel_transfer = bool(kernel_transfer)
 
     @property
     def resolved(self) -> str:
         """The effective routing: which implementation family serves ops."""
-        flags = (self.kernel_push, self.kernel_pop, self.kernel_steal)
+        flags = self._flags()
         if all(flags):
             return "pallas"
         if not any(flags):
@@ -422,18 +503,19 @@ class BulkOps:
 
     def __repr__(self) -> str:
         return (f"BulkOps({self.name!r}, push={self.kernel_push}, "
-                f"pop={self.kernel_pop}, steal={self.kernel_steal})")
+                f"pop={self.kernel_pop}, steal={self.kernel_steal}, "
+                f"transfer={self.kernel_transfer})")
 
     def __eq__(self, other) -> bool:
         return (isinstance(other, BulkOps)
-                and (self.kernel_push, self.kernel_pop, self.kernel_steal)
-                == (other.kernel_push, other.kernel_pop, other.kernel_steal))
+                and self._flags() == other._flags())
 
     def __hash__(self) -> int:
-        return hash((self.kernel_push, self.kernel_pop, self.kernel_steal))
+        return hash(self._flags())
 
-    def _flags(self) -> Tuple[bool, bool, bool]:
-        return (self.kernel_push, self.kernel_pop, self.kernel_steal)
+    def _flags(self) -> Tuple[bool, bool, bool, bool]:
+        return (self.kernel_push, self.kernel_pop, self.kernel_steal,
+                self.kernel_transfer)
 
     # -- operations ----------------------------------------------------------
 
@@ -483,6 +565,28 @@ class BulkOps:
         return _steal_exact(q, n, max_steal=max_steal,
                             kernel=self.kernel_steal)
 
+    def window(self, q: QueueState, *, max_steal: int,
+               donate: bool = False) -> Pytree:
+        """Raw (unmasked) ``max_steal``-row tail window at ``lo`` — the
+        victim-side contribution to the compact superstep's all_gather.
+        Pure read: the state is unchanged (the victim's detach is the
+        caller's cursor bump)."""
+        if donate:
+            return _donating(*self._flags()).window(q, max_steal=max_steal)
+        return _window(q, max_steal=max_steal, kernel=self.kernel_steal)
+
+    def transfer(self, q: QueueState, gathered: Pytree, src_row, n, *,
+                 max_steal: int, donate: bool = False
+                 ) -> Tuple[QueueState, jnp.ndarray]:
+        """Fused thief-side cut-and-splice: push ``gathered[src_row, :n]``
+        (leaves ``(W, max_steal, ...)``) at the owner end without
+        materializing the selected block; returns ``(state, n_spliced)``."""
+        if donate:
+            return _donating(*self._flags()).transfer(
+                q, gathered, src_row, n, max_steal=max_steal)
+        return _transfer(q, gathered, src_row, n, max_steal=max_steal,
+                         kernel=self.kernel_transfer)
+
 
 # ---------------------------------------------------------------------------
 # Registry
@@ -511,7 +615,7 @@ def _reference_factory(**_geometry) -> BulkOps:
 
 def _pallas_factory(**_geometry) -> BulkOps:
     return BulkOps("pallas", kernel_push=True, kernel_pop=True,
-                   kernel_steal=True)
+                   kernel_steal=True, kernel_transfer=True)
 
 
 def _auto_factory(*, capacity: Optional[int] = None,
@@ -530,6 +634,7 @@ def _auto_factory(*, capacity: Optional[int] = None,
         kernel_push=ok(kernel_push_available, max_push),
         kernel_pop=ok(kernel_pop_available, max_pop),
         kernel_steal=ok(kernel_steal_available, max_steal),
+        kernel_transfer=ok(kernel_transfer_available, max_steal),
     )
 
 

@@ -23,7 +23,10 @@ class StealPolicy:
 
     Attributes:
       proportion: fraction of the victim's queue taken per steal (paper's
-        ``steal(p)`` argument).
+        ``steal(p)`` argument).  The default 0.25 is the BENCH_PR3
+        adaptive-sweep winner (full-size Fig. 9 DAG drain: static
+        p=0.25 at 400 supersteps vs 420 for p=0.5 and every adaptive
+        config); ``steal_half()`` still gives the paper's 0.5.
       queue_limit: victims below this size are never stolen from (paper's
         ``_queue_limit_`` abort).
       low_watermark: a worker is *idle-eligible* (receives work) when its
@@ -40,14 +43,23 @@ class StealPolicy:
         ``use_kernel=`` boolean still maps onto it (True ->
         ``"pallas"``, False -> ``"reference"``) with a
         :class:`DeprecationWarning`, for one release.
+      exchange: which collective moves the stolen blocks in
+        ``master.superstep`` — ``"compact"`` (default: one
+        ``(max_steal, ...)`` window all_gather per lane + thief-side
+        dynamic row-select, with a zero-transfer fast path) or
+        ``"dense"`` (the O(W * max_steal)-payload outbox +
+        ``all_to_all``, kept as the exchange oracle and for the Fig. 10
+        scaling comparison).  Both are semantically identical
+        (property-tested); the plan they execute is the same.
     """
 
-    proportion: float = 0.5
+    proportion: float = 0.25
     queue_limit: int = 2
     low_watermark: int = 1
     high_watermark: int = 8
     max_steal: int = 256
     backend: str = "auto"
+    exchange: str = "compact"
     # Deprecation shim: the pre-BulkOps use_kernel dialect.
     use_kernel: dataclasses.InitVar[bool | None] = None
 

@@ -40,13 +40,17 @@ def make_sharded_queues(n_workers: int, capacity: int, item_spec: Pytree) -> q_o
     )
 
 
-def vmapped_superstep(policy: StealPolicy, axis_name: str = "workers") -> Callable:
+def vmapped_superstep(policy: StealPolicy, axis_name: str = "workers",
+                      ops: q_ops.BulkOps | None = None) -> Callable:
     """Single-device driver: the superstep vmapped over the worker axis with
-    collectives resolved through the vmap axis name."""
+    collectives resolved through the vmap axis name.  ``ops`` optionally
+    pins the :class:`~repro.core.ops.BulkOps` backend (otherwise it is
+    resolved from ``policy.backend`` at trace time)."""
 
     def step(qs: q_ops.QueueState):
         return jax.vmap(
-            functools.partial(master_ops.superstep, policy=policy, axis_name=axis_name),
+            functools.partial(master_ops.superstep, policy=policy,
+                              axis_name=axis_name, ops=ops),
             axis_name=axis_name,
         )(qs)
 
@@ -58,9 +62,26 @@ def sharded_superstep(
     policy: StealPolicy,
     worker_axis: str = "data",
     pod_axis: str | None = None,
+    ops: q_ops.BulkOps | None = None,
 ) -> Callable:
     """Production driver: shard_map over the mesh's worker axis (one queue
-    per device along that axis); optionally hierarchical over a pod axis."""
+    per device along that axis); optionally hierarchical over a pod axis.
+
+    Returns ``(queues, stats)`` with the FULL
+    :class:`~repro.core.master.RebalanceStats` (replicated leaves
+    returned once, scalar counters as shape ``(1,)`` arrays), exactly
+    like the vmapped driver — not just ``sizes_after``.  In flat mode
+    every field is replicated so the single copy is exact; in
+    hierarchical mode the copy is the lane-(pod 0, worker 0) view (pod
+    0's intra-pod share plus the xpod share, which is what the
+    representatives see — the same element the executor's exact
+    aggregation reads first).  ``ops``
+    optionally pins the :class:`~repro.core.ops.BulkOps` backend shared
+    by both levels; when omitted it is resolved from ``policy.backend``
+    and the queue geometry at trace time, so a pinned
+    ``StealPolicy(backend=...)`` selects the same implementation here as
+    everywhere else.
+    """
     from jax.experimental.shard_map import shard_map
 
     axes = (pod_axis, worker_axis) if pod_axis else (worker_axis,)
@@ -69,29 +90,33 @@ def sharded_superstep(
     if pod_axis is None:
         def inner(qs):
             q = jax.tree_util.tree_map(lambda x: x[0], qs)  # strip lane dim
-            q, stats = master_ops.superstep(q, policy, axis_name=worker_axis)
+            q, stats = master_ops.superstep(q, policy,
+                                            axis_name=worker_axis, ops=ops)
             return (
                 jax.tree_util.tree_map(lambda x: x[None], q),
-                jax.tree_util.tree_map(jnp.atleast_1d, stats.sizes_after),
+                jax.tree_util.tree_map(jnp.atleast_1d, stats),
             )
     else:
         def inner(qs):
             q = jax.tree_util.tree_map(lambda x: x[0], qs)
             q, stats = master_ops.hierarchical_superstep(
-                q, policy, worker_axis=worker_axis, pod_axis=pod_axis
+                q, policy, worker_axis=worker_axis, pod_axis=pod_axis,
+                ops=ops
             )
             return (
                 jax.tree_util.tree_map(lambda x: x[None], q),
-                jax.tree_util.tree_map(jnp.atleast_1d, stats.sizes_after),
+                jax.tree_util.tree_map(jnp.atleast_1d, stats),
             )
 
+    stats_spec = master_ops.RebalanceStats(
+        *([P(None)] * len(master_ops.RebalanceStats._fields)))
     fn = shard_map(
         inner,
         mesh=mesh,
         in_specs=(q_ops.QueueState(buf=spec, lo=spec, size=spec),),
         out_specs=(
             q_ops.QueueState(buf=spec, lo=spec, size=spec),
-            P(None),
+            stats_spec,
         ),
         check_rep=False,
     )

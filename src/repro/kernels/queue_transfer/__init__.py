@@ -1,0 +1,8 @@
+"""Fused exchange-side transfer kernel (compact superstep hot path)."""
+
+from repro.kernels.queue_transfer.kernel import (  # noqa: F401
+    ring_transfer,
+    ring_transfer_supported,
+)
+from repro.kernels.queue_transfer.ops import transfer_splice  # noqa: F401
+from repro.kernels.queue_transfer.ref import ring_transfer_ref  # noqa: F401

@@ -1,0 +1,131 @@
+"""Fused exchange-side transfer as a Pallas TPU kernel (compact superstep).
+
+In the compact collective superstep (``core.master``, ``exchange=
+"compact"``) every lane all_gathers one raw ``(max_steal, ...)`` ring
+window and the victim's "detach" is a pure cursor bump — no masked block
+is ever materialized on the victim.  What remains is the thief side:
+cut the victim's stolen segment out of the replicated ``(W * max_steal,
+...)`` gathered buffer (the ``steal_exact`` gather, relocated to the
+thief) and splice it into the thief's own ring at the owner end (the
+bulk ``push``).  ``ring_transfer`` fuses those two data movements into
+ONE kernel:
+
+* the source row offset ``src_start = src_row * max_steal`` is DYNAMIC
+  (which victim the replicated plan paired this thief with), so the
+  input DMA windows are aligned to it via scalar prefetch — the
+  ``(max_steal, ...)`` intermediate ``gathered[src]`` block that a
+  select-then-push pipeline would materialize never exists;
+* the splice start ``head = (lo + size) % cap`` is DYNAMIC too, exactly
+  as in ``kernels.queue_push.ring_scatter``: each touched ring block
+  straddles at most two aligned gathered blocks, the true segment is cut
+  with one ``dynamic_slice`` at ``block - head % block``, and rows
+  outside ``[0, n)`` pass the old ring contents through (read-modify-
+  write of the aliased block — the ring buffer is updated IN PLACE via
+  ``input_output_aliases``);
+* the grid covers only the ``max_steal // block + 1`` ring blocks the
+  splice touches — cost is O(max_steal), never O(capacity) and never
+  O(W * max_steal).
+
+Structurally this is ``ring_scatter`` generalized with a dynamic source
+offset into a source buffer W times larger than the splice span.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ring_transfer", "ring_transfer_supported", "DEFAULT_BLOCK"]
+
+DEFAULT_BLOCK = 128
+
+
+def ring_transfer_supported(capacity: int, max_steal: int, *,
+                            block: int = DEFAULT_BLOCK) -> bool:
+    """Whether :func:`ring_transfer` admits this geometry.  Same rule as
+    the push-side ring-scatter: ring and transfer span must be whole
+    numbers of (possibly shrunken) blocks, and the splice span
+    (``max_steal`` plus one straddle block) must not lap the ring so
+    every grid step writes a DISTINCT ring block.  The gathered source
+    is ``n_lanes * max_steal`` rows, automatically block-aligned when
+    ``max_steal`` is."""
+    block = min(block, max_steal, capacity)
+    return (block > 0 and capacity % block == 0 and max_steal % block == 0
+            and max_steal + block <= capacity)
+
+
+def _transfer_kernel(c_ref, prev_ref, cur_ref, buf_ref, o_ref, *,
+                     block: int, width: int, max_steal: int):
+    i = pl.program_id(0)
+    head, n = c_ref[0], c_ref[2]
+    r = head % block
+    n = jnp.minimum(n, max_steal)
+    # Gathered rows src_start + i*block - r + k, k in [0, block): cut one
+    # aligned window out of the two candidate gathered blocks.
+    both = jnp.concatenate([prev_ref[...], cur_ref[...]], axis=0)
+    vals = jax.lax.dynamic_slice(both, (block - r, 0), (block, width))
+    off = (i * block - r
+           + jax.lax.broadcasted_iota(jnp.int32, (block, width), 0))
+    live = (off >= 0) & (off < n)
+    # Read-modify-write: rows outside the splice keep the old ring
+    # contents (the output aliases the ring buffer input).
+    o_ref[...] = jnp.where(live, vals, buf_ref[...])
+
+
+def ring_transfer(buf: jnp.ndarray, gathered: jnp.ndarray,
+                  head: jnp.ndarray, src_start: jnp.ndarray,
+                  n: jnp.ndarray, *, max_steal: int,
+                  block: int = DEFAULT_BLOCK,
+                  interpret: bool = False) -> jnp.ndarray:
+    """buf: (cap, W), gathered: (S, W) with ``S = n_lanes * max_steal``;
+    returns buf with rows ``(head + i) % cap = gathered[src_start + i]``
+    for ``i < n`` (``n <= max_steal``).
+
+    ``src_start`` must be a multiple of the span ``max_steal`` (it is
+    ``src_row * max_steal``), which keeps the dynamic source windows
+    block-aligned.  Geometry must satisfy
+    :func:`ring_transfer_supported`; the ring buffer argument is donated
+    to the output (in-place splice).
+    """
+    cap, width = buf.shape
+    srows = gathered.shape[0]
+    block = min(block, max_steal, cap)
+    assert ring_transfer_supported(cap, max_steal, block=block)
+    assert srows % block == 0
+    nb = cap // block
+    sb = srows // block
+    bb = max_steal // block
+
+    kern = functools.partial(_transfer_kernel, block=block, width=width,
+                             max_steal=max_steal)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        # bb gathered blocks land on bb + 1 ring blocks (dynamic straddle).
+        grid=(bb + 1,),
+        in_specs=[
+            pl.BlockSpec((block, width),
+                         lambda i, c: ((c[1] // block + (i - 1) % bb) % sb,
+                                       0)),
+            pl.BlockSpec((block, width),
+                         lambda i, c: ((c[1] // block + i % bb) % sb, 0)),
+            pl.BlockSpec((block, width),
+                         lambda i, c: ((c[0] // block + i) % nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, width),
+                               lambda i, c: ((c[0] // block + i) % nb, 0)),
+    )
+    scalars = jnp.stack([jnp.asarray(head, jnp.int32),
+                         jnp.asarray(src_start, jnp.int32),
+                         jnp.asarray(n, jnp.int32)])
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cap, width), buf.dtype),
+        # Inputs count the scalar-prefetch arg first: buf is operand 3.
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(scalars, gathered, gathered, buf)

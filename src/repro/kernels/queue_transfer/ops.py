@@ -1,0 +1,51 @@
+"""Jitted wrapper: fused exchange-side transfer for arbitrary payload pytrees.
+
+Leaves of the ring are flattened to ``(cap, -1)`` and the gathered
+window stack to ``(W * max_steal, -1)``, moved with the Pallas kernel
+(TPU) or the jnp oracle (elsewhere), and reshaped back.  Used by
+kernel-routed ``repro.core.ops.BulkOps`` backends for ``transfer`` (the
+compact superstep's thief-side cut-and-splice).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.queue_transfer.kernel import ring_transfer
+from repro.kernels.queue_transfer.ref import ring_transfer_ref
+
+__all__ = ["transfer_splice"]
+
+
+@functools.partial(jax.jit, static_argnames=("max_steal", "use_pallas",
+                                             "interpret"))
+def transfer_splice(buf_tree, gathered_tree, head, src_row, n, *,
+                    max_steal: int, use_pallas: bool = False,
+                    interpret: bool = False):
+    """Splice ``gathered_tree[src_row, :n] -> buf_tree[(head + i) % cap]``;
+    ``gathered_tree`` leaves are ``(W, max_steal, ...)`` stacks of
+    per-lane windows.  Returns the updated ring pytree.  The Pallas path
+    aliases the ring input to the output (``input_output_aliases``) so
+    under a donating caller the splice is in place, and the
+    ``gathered[src_row]`` block is never materialized."""
+    src_start = jnp.asarray(src_row, jnp.int32) * jnp.int32(max_steal)
+    n = jnp.minimum(jnp.asarray(n, jnp.int32), jnp.int32(max_steal))
+
+    def one(buf, gathered):
+        shape = buf.shape
+        w = gathered.shape[0]
+        flat = buf.reshape(shape[0], -1)
+        fg = gathered.reshape(w * max_steal, -1)
+        if use_pallas or interpret:
+            out = ring_transfer(flat, fg, head, src_start, n,
+                                max_steal=max_steal,
+                                interpret=interpret or
+                                jax.default_backend() != "tpu")
+        else:
+            out = ring_transfer_ref(flat, fg, head, src_start, n)
+        return out.reshape(shape)
+
+    return jax.tree_util.tree_map(one, buf_tree, gathered_tree)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused exchange-side transfer.
+
+``ring_transfer_ref(buf, gathered, head, src_start, n)``: splice rows
+``gathered[src_start + i]`` into ``buf[(head + i) % cap]`` for ``i < n``
+— the thief-side cut-and-splice the compact superstep performs after the
+window all_gather (``steal_exact``'s gather relocated to the thief,
+fused with the bulk ``push``; see ``kernels.queue_transfer.kernel``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ring_transfer_ref"]
+
+
+def ring_transfer_ref(buf: jnp.ndarray, gathered: jnp.ndarray, head,
+                      src_start, n) -> jnp.ndarray:
+    """``n`` must be pre-clamped to the span (ops.py does)."""
+    cap = buf.shape[0]
+    srows = gathered.shape[0]
+    # Mirror the kernel's structure — a read-modify-write over the static
+    # ring (one gather + select) — rather than an XLA scatter, whose CPU
+    # lowering is per-row (see queue_push.ref for the same reasoning).
+    off = (jnp.arange(cap, dtype=jnp.int32)
+           - jnp.asarray(head, jnp.int32)) % cap
+    live = off < jnp.asarray(n, jnp.int32)
+    rows = jnp.minimum(jnp.asarray(src_start, jnp.int32) + off, srows - 1)
+    vals = gathered[rows]
+    return jnp.where(live.reshape((cap,) + (1,) * (buf.ndim - 1)),
+                     vals, buf)

@@ -58,13 +58,15 @@ before claiming the in-place splice numbers (see ROADMAP).
 
 from repro.runtime.adaptive import AdaptiveConfig, AdaptiveController
 from repro.runtime.executor import StealRuntime
-from repro.runtime.telemetry import RoundRecord, Telemetry, item_nbytes
+from repro.runtime.telemetry import (RoundRecord, Telemetry, WaveRecord,
+                                     item_nbytes)
 
 __all__ = [
     "AdaptiveConfig",
     "AdaptiveController",
     "StealRuntime",
     "RoundRecord",
+    "WaveRecord",
     "Telemetry",
     "item_nbytes",
 ]

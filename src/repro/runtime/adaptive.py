@@ -49,7 +49,15 @@ class AdaptiveConfig:
         sweep stays within [0.1, 0.6]; stealing > 3/4 would invert the
         imbalance).
       gain: first-order smoothing toward the target (1.0 = jump straight
-        to the target each round).
+        to the target each round).  The BENCH_PR3 full-size sweep found
+        gain/clamp indistinguishable on rounds-to-drain (every adaptive
+        config drained the Fig. 9 DAG in the same 420 supersteps; wall
+        differences were within noise), so only the sweep's unambiguous
+        winner was promoted — static p=0.25, now the
+        :class:`~repro.core.policy.StealPolicy` default — and the
+        smoothing default stays 0.5, which also spreads work across
+        more lanes on the DD branch-and-bound workload than an
+        unsmoothed jump does.
     """
 
     min_proportion: float = 0.125

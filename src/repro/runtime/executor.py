@@ -286,13 +286,14 @@ class StealRuntime:
 
         return jax.jit(fused, donate_argnums=self._donate_argnums())
 
-    def _round_counts(self, stats) -> Tuple[int, int]:
-        """Exact (n_steals, n_transferred) for one round's stats (numpy
-        leaves, leading axis = lanes)."""
+    def _round_counts(self, stats) -> Tuple[int, int, int]:
+        """Exact (n_steals, n_transferred, bytes_moved) for one round's
+        stats (numpy leaves, leading axis = lanes)."""
         if self.pod_size is None:
             # Per-lane stats are replicated in flat mode: element 0 exact.
             return (int(np.asarray(stats.n_steals).reshape(-1)[0]),
-                    int(np.asarray(stats.n_transferred).reshape(-1)[0]))
+                    int(np.asarray(stats.n_transferred).reshape(-1)[0]),
+                    int(np.asarray(stats.bytes_moved).reshape(-1)[0]))
         # Hierarchical mode: lane (p, 0) carries pod p's intra-pod share;
         # the cross-pod share lives in the *_xpod fields, nonzero only on
         # lane-0 representatives and replicated across them — summing
@@ -304,7 +305,13 @@ class StealRuntime:
             rep(stats.n_steals_xpod)[0])
         n_transferred = int(rep(stats.n_transferred).sum()) + int(
             rep(stats.n_transferred_xpod)[0])
-        return n_steals, n_transferred
+        # bytes_moved stays PER-LANE (unlike the cluster-total counters):
+        # the busiest lane's injection — its pod's intra-level payload
+        # plus the pod-level share (identical across representatives, so
+        # max-intra + xpod IS one representative's actual traffic).
+        bytes_moved = int(rep(stats.bytes_moved).max()) + int(
+            rep(stats.bytes_moved_xpod)[0])
+        return n_steals, n_transferred, bytes_moved
 
     def round(self, worker_fn: Optional[WorkerFn] = None,
               carry: Optional[Pytree] = None
@@ -329,10 +336,11 @@ class StealRuntime:
         self.queues, carry, stats = fn(self.queues, carry,
                                        jnp.float32(proportion))
         sizes = self.sizes()
-        n_steals, n_transferred = self._round_counts(stats)
+        n_steals, n_transferred, bytes_moved = self._round_counts(stats)
         self.telemetry.record(sizes=sizes, n_steals=n_steals,
                               n_transferred=n_transferred,
-                              proportion=proportion)
+                              proportion=proportion,
+                              bytes_moved=bytes_moved)
         if self.controller is not None:
             self.controller.update(sizes)
         self.rounds_run += 1
@@ -383,11 +391,12 @@ class StealRuntime:
         stats = tele["stats"]
         for r in range(rounds):
             stats_r = jax.tree_util.tree_map(lambda x: x[r], stats)
-            n_steals, n_transferred = self._round_counts(stats_r)
+            n_steals, n_transferred, bytes_moved = self._round_counts(stats_r)
             self.telemetry.record(sizes=tele["sizes"][r],
                                   n_steals=n_steals,
                                   n_transferred=n_transferred,
-                                  proportion=float(tele["proportion"][r]))
+                                  proportion=float(tele["proportion"][r]),
+                                  bytes_moved=bytes_moved)
         if self.controller is not None and rounds > 0:
             self.controller.absorb(tele["proportion"][:rounds],
                                    float(p_final))

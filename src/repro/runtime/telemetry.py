@@ -3,9 +3,14 @@
 Host-side, numpy-only (it must also serve the serving controller, which
 never touches a device): each rebalancing round appends one
 :class:`RoundRecord` with the steal count, items/bytes moved, the
-queue-depth histogram and imbalance statistics.  ``summary()`` collapses
-the log into the numbers EXPERIMENTS.md wants (total transfer volume,
-mean/final proportion, final imbalance).
+exchange payload (``bytes_moved`` — what the round's block collective
+carried per lane, the Fig. 10 scaling metric), the queue-depth histogram
+and imbalance statistics.  Wave-level consumers (the serving engine)
+append :class:`WaveRecord` entries through the same object, so one
+telemetry stream covers both the master's rounds and the workload's
+waves.  ``summary()`` collapses the log into the numbers EXPERIMENTS.md
+wants (total transfer volume, exchange payload, mean/final proportion,
+final imbalance, wave throughput).
 """
 
 from __future__ import annotations
@@ -15,19 +20,16 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["item_nbytes", "RoundRecord", "Telemetry"]
+__all__ = ["item_nbytes", "RoundRecord", "WaveRecord", "Telemetry"]
 
 
 def item_nbytes(item_spec: Any) -> int:
-    """Bytes per queue item: sum over payload-pytree leaves."""
-    import jax
-    import jax.numpy as jnp
+    """Bytes per queue item — delegates to ``core.ops.item_nbytes``, the
+    single source of truth (the master's ``bytes_moved`` uses the same
+    accounting, so payload and transfer byte telemetry can't diverge)."""
+    from repro.core.ops import item_nbytes as _impl
 
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(item_spec):
-        total += int(np.prod(leaf.shape, dtype=np.int64)) * jnp.dtype(
-            leaf.dtype).itemsize
-    return total
+    return _impl(item_spec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +41,7 @@ class RoundRecord:
     n_steals: int              # victim->thief transfers planned
     n_transferred: int         # items moved
     transfer_bytes: int        # payload bytes moved
+    bytes_moved: int           # exchange payload, busiest lane's view
     sizes_total: int
     sizes_max: int
     sizes_mean: float
@@ -50,6 +53,17 @@ class RoundRecord:
         return self.sizes_max / self.sizes_mean if self.sizes_mean else 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class WaveRecord:
+    """One workload wave (e.g. a serving engine tick), as observed by
+    whoever drives the rounds — same stream, coarser granularity."""
+
+    wave: int
+    served: int                # requests completed this wave
+    tokens: int                # tokens generated this wave (0 if n/a)
+    loads: Sequence[int]       # per-worker load after the wave
+
+
 class Telemetry:
     """Append-only per-round log + aggregate summary."""
 
@@ -59,9 +73,10 @@ class Telemetry:
         self.capacity = capacity
         self.n_bins = n_bins
         self.rounds: List[RoundRecord] = []
+        self.waves: List[WaveRecord] = []
 
     def record(self, *, sizes, n_steals: int, n_transferred: int,
-               proportion: float) -> RoundRecord:
+               proportion: float, bytes_moved: int = 0) -> RoundRecord:
         sizes = np.asarray(sizes)
         hi = self.capacity if self.capacity else max(int(sizes.max()), 1)
         hist, _ = np.histogram(sizes, bins=self.n_bins, range=(0, hi))
@@ -71,12 +86,25 @@ class Telemetry:
             n_steals=int(n_steals),
             n_transferred=int(n_transferred),
             transfer_bytes=int(n_transferred) * self.item_bytes,
+            bytes_moved=int(bytes_moved),
             sizes_total=int(sizes.sum()),
             sizes_max=int(sizes.max()) if sizes.size else 0,
             sizes_mean=float(sizes.mean()) if sizes.size else 0.0,
             depth_hist=tuple(int(x) for x in hist),
         )
         self.rounds.append(rec)
+        return rec
+
+    def record_wave(self, *, loads, served: int,
+                    tokens: int = 0) -> WaveRecord:
+        """Append one workload wave (serving tick, solver epoch, ...)."""
+        rec = WaveRecord(
+            wave=len(self.waves),
+            served=int(served),
+            tokens=int(tokens),
+            loads=tuple(int(x) for x in np.asarray(loads).reshape(-1)),
+        )
+        self.waves.append(rec)
         return rec
 
     # -- aggregates ----------------------------------------------------------
@@ -93,15 +121,35 @@ class Telemetry:
     def total_transfer_bytes(self) -> int:
         return sum(r.transfer_bytes for r in self.rounds)
 
+    @property
+    def total_bytes_moved(self) -> int:
+        """Total per-lane exchange payload across rounds (the number the
+        compact superstep shrinks by ~W vs the dense one)."""
+        return sum(r.bytes_moved for r in self.rounds)
+
+    @property
+    def total_served(self) -> int:
+        return sum(w.served for w in self.waves)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(w.tokens for w in self.waves)
+
     def summary(self) -> Dict[str, Any]:
         props = [r.proportion for r in self.rounds]
-        return {
+        out = {
             "rounds": len(self.rounds),
             "steals": self.total_steals,
             "items_transferred": self.total_transferred,
             "bytes_transferred": self.total_transfer_bytes,
+            "bytes_moved": self.total_bytes_moved,
             "proportion_mean": float(np.mean(props)) if props else 0.0,
             "proportion_final": props[-1] if props else 0.0,
             "imbalance_final": self.rounds[-1].imbalance if self.rounds
             else 0.0,
         }
+        if self.waves:
+            out["waves"] = len(self.waves)
+            out["served"] = self.total_served
+            out["tokens"] = self.total_tokens
+        return out

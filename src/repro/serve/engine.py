@@ -74,7 +74,15 @@ class ServeCluster:
     master run several steal rounds per wave tick
     (``AdmissionMaster.rebalance_many`` — the host analogue of the
     executor's fused supersteps), which converges a badly skewed cluster
-    within one tick."""
+    within one tick.
+
+    Waves flow through the SAME executor-layer telemetry stream the
+    master's rebalance rounds use (``runtime.telemetry.Telemetry`` on
+    :attr:`telemetry` — the master's instance): each tick appends one
+    :class:`~repro.runtime.telemetry.WaveRecord` (requests served,
+    tokens generated, post-wave per-replica loads) next to the round
+    records, so ``stats()["telemetry"]`` reports rounds and waves from
+    one source instead of ad-hoc host counters."""
 
     def __init__(self, replicas: List[Replica],
                  master: Optional[AdmissionMaster] = None,
@@ -84,11 +92,18 @@ class ServeCluster:
         self.rebalance_rounds = int(rebalance_rounds)
         self.done: List[Request] = []
 
+    @property
+    def telemetry(self):
+        """The unified per-round + per-wave telemetry stream (the
+        admission master's ``runtime.telemetry.Telemetry``)."""
+        return self.master.telemetry
+
     def submit(self, reqs: List[Request]):
         self.master.submit(reqs)
 
     def step(self) -> int:
         served = 0
+        tokens_before = sum(r.tokens_generated for r in self.replicas)
         for rid, rep in enumerate(self.replicas):
             rq = self.master.replicas[rid]
             # straggler simulation: slow replicas take smaller waves
@@ -98,6 +113,10 @@ class ServeCluster:
             rq.finish_wave(len(finished))
             self.done.extend(finished)
             served += len(finished)
+        tokens = sum(r.tokens_generated for r in self.replicas) - tokens_before
+        self.telemetry.record_wave(
+            loads=[r.load() for r in self.master.replicas],
+            served=served, tokens=tokens)
         self.master.rebalance_many(self.rebalance_rounds)
         return served
 

@@ -12,6 +12,8 @@ from repro.kernels.flash_attention.ops import mha
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.queue_steal.ops import steal_gather
 from repro.kernels.queue_steal.ref import ring_gather_ref
+from repro.kernels.queue_transfer.ops import transfer_splice
+from repro.kernels.queue_transfer.ref import ring_transfer_ref
 from repro.kernels.ssd_scan.ops import ssd
 from repro.models.ssm import ssd_chunked
 
@@ -73,6 +75,57 @@ def test_queue_steal_matches_ref(case):
                          max_steal=max_steal, interpret=True)
     out_r = ring_gather_ref(buf, lo, n, max_steal)
     np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+# ----------------------------------------------------- queue_transfer
+
+# (cap, W, n_lanes, max_steal, head, src_row, n, dtype)
+TRANSFER_CASES = [
+    (512, 8, 4, 256, 0, 0, 100, jnp.float32),
+    (512, 8, 4, 256, 500, 3, 256, jnp.float32),   # splice wraps the ring
+    (1024, 16, 8, 128, 777, 5, 33, jnp.float32),
+    (256, 4, 4, 64, 255, 2, 64, jnp.int32),       # int payload, wrap
+    (256, 4, 4, 64, 13, 1, 0, jnp.float32),       # empty transfer
+    (256, 128, 2, 128, 100, 1, 77, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", TRANSFER_CASES)
+def test_queue_transfer_matches_ref(case):
+    cap, W, n_lanes, max_steal, head, src_row, n, dtype = case
+    ks = jax.random.split(KEY, 2)
+    if jnp.issubdtype(dtype, jnp.integer):
+        buf = jax.random.randint(ks[0], (cap, W), 0, 1000, dtype)
+        gathered = jax.random.randint(ks[1], (n_lanes, max_steal, W), 0,
+                                      1000, dtype)
+    else:
+        buf = jax.random.normal(ks[0], (cap, W), jnp.float32).astype(dtype)
+        gathered = jax.random.normal(ks[1], (n_lanes, max_steal, W),
+                                     jnp.float32).astype(dtype)
+    out_k = transfer_splice(buf, gathered, jnp.int32(head),
+                            jnp.int32(src_row), jnp.int32(n),
+                            max_steal=max_steal, interpret=True)
+    out_r = ring_transfer_ref(buf, gathered.reshape(-1, W),
+                              head, src_row * max_steal, n)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_queue_transfer_equals_select_then_push():
+    """The fused transfer must equal the two-step oracle: select the
+    victim's window row, then ring-scatter it at the head."""
+    from repro.kernels.queue_push.ref import ring_scatter_ref
+
+    cap, W, n_lanes, max_steal = 512, 8, 4, 128
+    ks = jax.random.split(KEY, 2)
+    buf = jax.random.normal(ks[0], (cap, W), jnp.float32)
+    gathered = jax.random.normal(ks[1], (n_lanes, max_steal, W), jnp.float32)
+    for head, src_row, n in [(0, 0, 128), (450, 3, 100), (77, 2, 1)]:
+        fused = transfer_splice(buf, gathered, jnp.int32(head),
+                                jnp.int32(src_row), jnp.int32(n),
+                                max_steal=max_steal, interpret=True)
+        two_step = ring_scatter_ref(buf, gathered[src_row], head, n)
+        np.testing.assert_array_equal(np.asarray(fused),
+                                      np.asarray(two_step))
 
 
 # --------------------------------------------------------------- ssd_scan

@@ -7,6 +7,7 @@ the production dry-run.
 """
 
 import functools
+from dataclasses import replace as dataclasses_replace
 
 import jax
 import jax.numpy as jnp
@@ -106,3 +107,96 @@ def test_superstep_reduces_imbalance():
     assert s.sum() == 100
     assert s.max() <= 60  # load spread out
     assert (s > 0).sum() >= 4
+
+
+# ---------------------------------------------------------------------------
+# Compact vs dense exchange: same plan, same queues, W x less payload
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=2, max_size=6),
+       st.integers(1, 4), st.sampled_from(["reference", "auto"]))
+def test_compact_exchange_matches_dense_oracle(sizes, rounds, backend):
+    """The compact exchange must produce bit-identical queues to the
+    dense-exchange oracle from any starting state, on both the reference
+    backend and the geometry-resolved auto routing (which exercises the
+    fused ring_transfer kernel where the geometry admits it)."""
+    W = len(sizes)
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32, backend=backend)
+    results = {}
+    for exchange in ("compact", "dense"):
+        qs = make_sharded_queues(W, 128, SPEC)
+        qs, _ = fill(qs, sizes)
+        step = vmapped_superstep(
+            dataclasses_replace(pol, exchange=exchange))
+        for _ in range(rounds):
+            qs, stats = step(qs)
+        results[exchange] = (qs, stats)
+    qc, sc = results["compact"]
+    qd, sd = results["dense"]
+    np.testing.assert_array_equal(np.asarray(qc.size), np.asarray(qd.size))
+    # identical live multisets, lane by lane (not just sizes)
+    assert totals(qc) == totals(qd)
+    for f in ("sizes_before", "sizes_after", "n_transferred", "n_steals"):
+        np.testing.assert_array_equal(np.asarray(getattr(sc, f)),
+                                      np.asarray(getattr(sd, f)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=2, max_size=6),
+       st.integers(1, 5))
+def test_compact_exchange_conserves_tasks(sizes, rounds):
+    """No task lost, duplicated, or invented across randomized compact
+    rounds (the dense-path conservation property, re-asserted on the
+    compact path on its own)."""
+    W = len(sizes)
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32, exchange="compact")
+    qs = make_sharded_queues(W, 128, SPEC)
+    qs, _ = fill(qs, sizes)
+    ids_before = sorted(totals(qs))
+    qs = make_sharded_queues(W, 128, SPEC)
+    qs, _ = fill(qs, sizes)
+    step = vmapped_superstep(pol)
+    for _ in range(rounds):
+        qs, _ = step(qs)
+    assert sorted(totals(qs)) == ids_before
+
+
+def test_compact_zero_transfer_fast_path():
+    """A balanced round plans no transfers: the compact exchange reports
+    zero exchange payload (the lax.cond skipped the collective) while
+    the dense exchange still pays the full W * max_steal outbox."""
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=6,
+                      max_steal=16)
+    item_bytes = 4  # one int32 per item (SPEC)
+    for exchange, expected in (("compact", 0),
+                               ("dense", 4 * 16 * item_bytes)):
+        qs = make_sharded_queues(4, 64, SPEC)
+        qs, _ = fill(qs, [4, 5, 4, 5])  # balanced: no (victim, thief) pair
+        step = vmapped_superstep(dataclasses_replace(pol, exchange=exchange))
+        qs2, stats = step(qs)
+        np.testing.assert_array_equal(np.asarray(qs2.size),
+                                      np.asarray(qs.size))
+        assert int(stats.n_transferred[0]) == 0
+        assert int(stats.bytes_moved[0]) == expected
+
+
+def test_compact_payload_is_w_times_smaller():
+    """On a round that DOES move work, the dense exchange injects exactly
+    W x the compact exchange's payload per lane (the Fig. 10 claim)."""
+    W, max_steal = 8, 16
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=6,
+                      max_steal=max_steal)
+    moved = {}
+    for exchange in ("compact", "dense"):
+        qs = make_sharded_queues(W, 64, SPEC)
+        qs, _ = fill(qs, [20, 0, 0, 0, 12, 0, 0, 0])
+        step = vmapped_superstep(dataclasses_replace(pol, exchange=exchange))
+        qs, stats = step(qs)
+        assert int(stats.n_transferred[0]) > 0
+        moved[exchange] = int(stats.bytes_moved[0])
+    assert moved["compact"] == max_steal * 4
+    assert moved["dense"] == W * moved["compact"]

@@ -122,6 +122,51 @@ def test_executor_hierarchical_conserves():
     assert _drained_ids(rt) == sorted(ids)
 
 
+def test_executor_reports_exchange_payload():
+    """bytes_moved telemetry: compact rounds that transfer report one
+    max_steal window per lane; skipped rounds report zero; the dense
+    exchange reports the W x payload every round — through both
+    .round() and .run_fused()."""
+    W, max_steal, item_bytes = 4, 32, 4  # SPEC is one int32 per item
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=max_steal)
+    rt = StealRuntime(W, 128, SPEC, policy=pol, adaptive=False)
+    _seed(rt, [40, 0, 0, 0])
+    rt.round()
+    assert rt.telemetry.rounds[-1].bytes_moved == max_steal * item_bytes
+    rt.run_fused(3)
+    active = [r.bytes_moved for r in rt.telemetry.rounds
+              if r.n_transferred > 0]
+    idle = [r.bytes_moved for r in rt.telemetry.rounds
+            if r.n_transferred == 0]
+    assert all(b == max_steal * item_bytes for b in active)
+    assert all(b == 0 for b in idle)  # the lax.cond fast path
+    assert rt.telemetry.summary()["bytes_moved"] == sum(
+        r.bytes_moved for r in rt.telemetry.rounds)
+
+    pol_d = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                        max_steal=max_steal, exchange="dense")
+    rt_d = StealRuntime(W, 128, SPEC, policy=pol_d, adaptive=False)
+    _seed(rt_d, [40, 0, 0, 0])
+    rt_d.round()
+    assert (rt_d.telemetry.rounds[-1].bytes_moved
+            == W * max_steal * item_bytes)
+
+
+def test_executor_exchange_payload_stays_per_lane_hierarchically():
+    """Hierarchical bytes_moved is the busiest LANE's injection (intra +
+    xpod), not a cluster sum: one compact window per level at most."""
+    max_steal, item_bytes = 32, 4
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=max_steal)
+    rt = StealRuntime(8, 128, SPEC, policy=pol, adaptive=False, pod_size=4)
+    _seed(rt, [50, 0, 0, 0, 0, 12, 0, 0])  # both pods rebalance intra
+    rt.round()
+    window = max_steal * item_bytes
+    # at most one window per level for the busiest lane, never 2 pods' sum
+    assert 0 < rt.telemetry.rounds[-1].bytes_moved <= 2 * window
+
+
 def test_executor_spreads_load():
     pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
                       max_steal=64)

@@ -87,6 +87,33 @@ def test_cluster_serves_all_with_straggler():
     assert st_["completed"][1] > st_["completed"][0]
 
 
+def test_cluster_waves_flow_through_executor_telemetry():
+    """Every cluster tick appends one WaveRecord to the SAME telemetry
+    stream the master's rebalance rounds write — one unified source."""
+    cfg = configs.reduced(configs.get("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reps = [Replica(model, params, wave_size=4, max_seq=64)
+            for _ in range(2)]
+    pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=2)
+    cluster = ServeCluster(reps, AdmissionMaster(2, policy=pol),
+                           rebalance_rounds=2)
+    cluster.submit([Request(prompt=[1, 2], max_new=2) for _ in range(8)])
+    done = cluster.run_until_drained()
+    tel = cluster.telemetry
+    assert tel is cluster.master.telemetry  # one stream, not a copy
+    assert len(tel.waves) > 0
+    assert tel.total_served == len(done) == 8
+    assert tel.total_tokens > 0
+    # each wave logged the post-wave per-replica loads
+    assert all(len(w.loads) == 2 for w in tel.waves)
+    summ = tel.summary()
+    assert summ["waves"] == len(tel.waves)
+    assert summ["served"] == 8
+    # rebalance rounds landed in the same stream
+    assert summ["rounds"] == len(tel.rounds) > 0
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.integers(1, 20), min_size=1, max_size=12),
        st.integers(2, 5))
