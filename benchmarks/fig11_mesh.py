@@ -1,0 +1,165 @@
+"""Fig. 11 — vmap-lane vs shard_map (mesh) executor, wall per round.
+
+PR 5's question: what does running the FULL fused round loop under
+``shard_map`` (one queue lane per device, collectives on a real mesh
+axis, the round loop device-resident) cost or save versus the vmapped
+lane simulation on one device, at identical work?  Both executors come
+from ``repro.distributed.launch_runtime`` and run the same round body,
+so the gap is pure execution-mode overhead (per-device dispatch,
+cross-device collective latency) — on this CPU container the "devices"
+are fake host devices, so the absolute numbers are a smoke reading; the
+machine-independent content is the parity column (the two modes must
+report IDENTICAL transfer telemetry and final queue states, asserted
+per cell).
+
+Every timed block replays the same seeded transferring state (the
+Fig. 10 reset methodology): every 8th lane holds half its ring, so each
+``run_fused(ROUNDS)`` block plans real transfers.
+
+NOTE: the worker-mesh needs one device per lane, so this benchmark must
+force fake host devices BEFORE jax initializes — ``run.py --mesh`` does
+that, as does running this module directly; importing it into an
+already-initialized process skips the cells that don't fit.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Tuple
+
+WORKERS = (8, 16, 64)
+TINY_WORKERS = (4, 8)
+ROUNDS = 4
+
+
+def force_host_devices(n: int) -> None:
+    """Best-effort: fake ``n`` host devices.  Only effective before jax
+    initializes (call it before anything imports jax)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+if __name__ == "__main__":  # direct run: claim devices before jax loads
+    force_host_devices(max(WORKERS))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import Table  # noqa: E402
+from repro.core import ops as bulk_ops  # noqa: E402
+from repro.core.policy import StealPolicy  # noqa: E402
+from repro.distributed import launch_runtime  # noqa: E402
+
+SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def _seeded_state(n_workers: int, capacity: int) -> bulk_ops.QueueState:
+    """Every 8th lane holds half its ring (distinct payloads), the rest
+    empty — sustained transfers for ROUNDS (same as fig10)."""
+    heavy = capacity // 2
+    lane = jnp.arange(n_workers, dtype=jnp.int32)[:, None]
+    buf = lane * capacity + jnp.arange(capacity, dtype=jnp.int32)[None, :] + 1
+    sizes = jnp.where(lane[:, 0] % 8 == 0, jnp.int32(heavy), jnp.int32(0))
+    return bulk_ops.QueueState(
+        buf=buf, lo=jnp.zeros((n_workers,), jnp.int32), size=sizes)
+
+
+def _bench_mode(mode: str, n_workers: int, max_steal: int,
+                repeats: int) -> Dict:
+    capacity = 4 * max_steal
+    pol = StealPolicy(proportion=0.5, low_watermark=2,
+                      high_watermark=max_steal // 2, max_steal=max_steal)
+    rt = launch_runtime(n_workers, capacity, SPEC, execution=mode,
+                        policy=pol, adaptive=False)
+    seeded = _seeded_state(n_workers, capacity)
+    if mode == "mesh":
+        seeded = jax.device_put(seeded, rt.sharding)
+
+    def reset():
+        rt.queues = jax.tree_util.tree_map(lambda x: x.copy(), seeded)
+
+    reset()
+    rt.run_fused(ROUNDS)  # compile + counters outside timing
+    transferred = sum(r.n_transferred for r in rt.telemetry.rounds)
+    bytes_moved = sum(r.bytes_moved for r in rt.telemetry.rounds)
+    assert transferred > 0, "fig11 workload must transfer every block"
+    final_sizes = np.asarray(rt.queues.size).tolist()
+
+    best = float("inf")
+    for _ in range(repeats):
+        reset()
+        t0 = time.perf_counter()
+        rt.run_fused(ROUNDS)
+        jax.block_until_ready(rt.queues.size)
+        best = min(best, time.perf_counter() - t0)
+    return {
+        "mode": mode,
+        "workers": n_workers,
+        "max_steal": max_steal,
+        "rounds": ROUNDS,
+        "wall_per_round_ms": best / ROUNDS * 1e3,
+        "transferred_per_block": transferred,
+        "bytes_moved_per_block": bytes_moved,
+        "final_sizes": final_sizes,
+    }
+
+
+def run(tiny: bool = False, repeats: int | None = None
+        ) -> Tuple[Table, Dict]:
+    workers = TINY_WORKERS if tiny else WORKERS
+    max_steal = 32 if tiny else 64
+    repeats = repeats or (2 if tiny else 3)
+    have = jax.device_count()
+
+    rows: List[Dict] = []
+    skipped: List[int] = []
+    parity = True
+    t = Table(f"Fig. 11: vmap-lane vs shard_map executor "
+              f"({ROUNDS} transferring rounds per fused block, "
+              f"min of {repeats}; {have} devices visible)",
+              "W", ["vmap ms/rd", "mesh ms/rd", "mesh/vmap",
+                    "moved/block", "parity"])
+    for w in workers:
+        if have < w:
+            skipped.append(w)
+            t.add(str(w), ["-", "-", "-", "-",
+                           f"skipped ({have} devices < {w})"])
+            continue
+        cell = {m: _bench_mode(m, w, max_steal, repeats)
+                for m in ("vmap", "mesh")}
+        v, m = cell["vmap"], cell["mesh"]
+        ok = (v["transferred_per_block"] == m["transferred_per_block"]
+              and v["bytes_moved_per_block"] == m["bytes_moved_per_block"]
+              and v["final_sizes"] == m["final_sizes"])
+        parity = parity and ok
+        rows.extend(cell.values())
+        ratio = m["wall_per_round_ms"] / max(v["wall_per_round_ms"], 1e-9)
+        t.add(str(w),
+              [f"{v['wall_per_round_ms']:.2f}",
+               f"{m['wall_per_round_ms']:.2f}",
+               f"{ratio:.2f}x",
+               v["transferred_per_block"],
+               "ok" if ok else "MISMATCH"])
+    data = {
+        "workers": list(workers),
+        "max_steal": max_steal,
+        "rounds": ROUNDS,
+        "repeats": repeats,
+        "devices_visible": have,
+        "skipped_workers": skipped,
+        "cells": rows,
+        # machine-independent acceptance: identical telemetry + final
+        # queue sizes between the two execution modes, in EVERY cell —
+        # a skipped cell (too few devices) fails the gate rather than
+        # passing it vacuously.
+        "mesh_matches_vmap": parity and not skipped,
+    }
+    return t, data
+
+
+if __name__ == "__main__":
+    run()[0].show()

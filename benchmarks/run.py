@@ -6,6 +6,8 @@
       [--out BENCH_PR3.json]
   PYTHONPATH=src python -m benchmarks.run --scaling [--tiny] \
       [--out BENCH_PR4.json]
+  PYTHONPATH=src python -m benchmarks.run --mesh [--tiny] \
+      [--out BENCH_PR5.json]
 
 ``--json`` runs the figures that seed the repo's perf trajectory (Fig. 6
 push latency incl. the backend sweep, Fig. 7 steal latency, the Fig. 9
@@ -17,7 +19,9 @@ sweep (AdaptiveConfig gain/clamp vs static proportions on the Fig. 9
 DAG workload) and records the winner in BENCH_PR3.json.  ``--scaling``
 runs the full Fig. 10 worker-count scaling sweep (W x max_steal x
 {dense, compact}: wall per round + exchange payload) into
-BENCH_PR4.json.
+BENCH_PR4.json.  ``--mesh`` runs the Fig. 11 vmap-lane vs shard_map
+executor comparison (W fake host devices are claimed BEFORE jax
+initializes, so run it as its own process) into BENCH_PR5.json.
 """
 
 from __future__ import annotations
@@ -94,6 +98,45 @@ def run_scaling(out: str, tiny: bool) -> int:
     return 0
 
 
+def run_mesh(out: str, tiny: bool) -> int:
+    # Claim the fake host devices BEFORE anything imports jax (importing
+    # benchmarks.fig11_mesh already pulls jax in, so the env var is set
+    # here, inline) — the worker mesh needs one device per lane.  8/64
+    # mirror max(fig11_mesh.TINY_WORKERS / WORKERS).
+    import os
+
+    n = 8 if tiny else 64
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+    import jax
+
+    from benchmarks import fig11_mesh
+
+    t0 = time.time()
+    table, data = fig11_mesh.run(tiny=tiny)
+    table.show()
+    results = {
+        "meta": {
+            "bench": "BENCH_PR5",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "tiny": tiny,
+            "wall_s": time.time() - t0,
+        },
+        "fig11_mesh": data,
+    }
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[benchmarks] wrote {out} "
+          f"(mesh matches vmap: {data['mesh_matches_vmap']}, "
+          f"{results['meta']['wall_s']:.1f}s)")
+    return 0
+
+
 def run_adaptive_sweep(out: str, tiny: bool) -> int:
     import jax
 
@@ -134,11 +177,17 @@ def main():
     ap.add_argument("--scaling", action="store_true",
                     help="Fig. 10 worker-count scaling sweep (dense vs "
                          "compact exchange) -> BENCH_PR4.json")
+    ap.add_argument("--mesh", action="store_true",
+                    help="Fig. 11 vmap-lane vs shard_map executor "
+                         "comparison (claims fake host devices; run as "
+                         "its own process) -> BENCH_PR5.json")
     ap.add_argument("--out", default=None,
                     help="output path for --json / --sweep-adaptive / "
                          "--scaling")
     args = ap.parse_args()
 
+    if args.mesh:
+        return run_mesh(args.out or "BENCH_PR5.json", args.tiny)
     if args.scaling:
         return run_scaling(args.out or "BENCH_PR4.json", args.tiny)
     if args.sweep_adaptive:

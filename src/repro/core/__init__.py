@@ -1,10 +1,13 @@
 """repro.core — the paper's contribution: lock-free bulk work-stealing.
 
 Layers:
-  ops           the BulkOps backend contract (reference / pallas / auto)
-                over the functional ring-deque: bulk push / pop /
-                proportional bulk steal, one operation surface
-  queue         QueueState + host paging; deprecated use_kernel shims
+  ops           the BulkOps backend contract (reference / pallas / auto /
+                relaxed) over the functional ring-deque: bulk push /
+                pop / proportional bulk steal, one operation surface
+  relaxed       the fence-free multiplicity-tolerant backend
+                (Castañeda & Piña): optimistic full-window steal +
+                posterior reconcile, registered as "relaxed"
+  queue         QueueState re-exports + host paging (PagedQueue)
   policy        steal policies + the virtual master's transfer planner
   master        SPMD rebalancing supersteps (compact one-window
                 all_gather exchange by default; dense all_to_all oracle)
@@ -12,6 +15,10 @@ Layers:
   host_queue    faithful host-threaded port of the paper's Listings 1-4,
                 behind the HostQueue protocol
   dd            decision-diagram branch-and-bound solver (paper's application)
+
+(The pre-BulkOps ``use_kernel`` dialect — module-level queue ops and
+their ``*_inplace`` variants — had its one deprecation release at PR 3
+and is gone; construct a backend with :func:`make_ops`.)
 """
 
 from repro.core.ops import (  # noqa: F401
@@ -24,16 +31,10 @@ from repro.core.ops import (  # noqa: F401
     register_backend,
     steal_counted,
 )
+from repro.core import relaxed as _relaxed  # noqa: F401  (registers "relaxed")
 from repro.core.queue import (  # noqa: F401
     PagedQueue,
     pop,
-    # Deprecated use_kernel-dialect shims, re-exported so pre-BulkOps
-    # package-level imports keep working for one release (each call
-    # emits DeprecationWarning).
-    pop_bulk,
-    push,
-    steal,
-    steal_exact,
 )
 from repro.core.policy import (  # noqa: F401
     StealPolicy,

@@ -33,7 +33,6 @@ the same optimum as the sequential oracle (tests assert this).
 
 from __future__ import annotations
 
-import warnings
 from typing import Tuple
 
 import jax
@@ -45,7 +44,6 @@ from repro.core.dd.diagram import NEG
 from repro.core.dd.knapsack import Knapsack
 from repro.core.ops import BulkOps, QueueState
 from repro.core.policy import StealPolicy
-from repro.runtime import StealRuntime
 
 __all__ = ["parallel_solve"]
 
@@ -111,8 +109,12 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
                    max_supersteps: int = 10_000, adaptive: bool = True,
                    backend: str | BulkOps | None = None,
                    fused_rounds: int = 8,
-                   use_kernel: bool | None = None) -> Tuple[int, dict]:
-    """Solve on W executor lanes (the same round shard_maps onto a mesh).
+                   execution: str = "vmap") -> Tuple[int, dict]:
+    """Solve on W executor lanes — vmapped on one device by default, or
+    one lane per device of a worker mesh with ``execution="mesh"`` (the
+    solver body is mode-agnostic; both modes come from
+    :func:`repro.distributed.launch_runtime` and run the identical
+    fused round loop).
 
     ``backend`` optionally overrides the :class:`~repro.core.ops.BulkOps`
     routing for every queue op (master steal/splice AND the worker
@@ -126,21 +128,18 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
     Returns (optimum, stats); ``stats["telemetry"]`` carries the
     runtime's per-round rebalancing summary.
     """
-    if use_kernel is not None:  # deprecation shim (pre-BulkOps dialect)
-        warnings.warn(
-            "parallel_solve(use_kernel=...) is deprecated; pass "
-            "backend='pallas'/'reference'/'auto' instead",
-            DeprecationWarning, stacklevel=2)
-        backend = "pallas" if use_kernel else "reference"
+    from repro.distributed.launch import launch_runtime
+
     policy = policy or StealPolicy(proportion=0.5, high_watermark=4,
                                    low_watermark=0,
                                    max_steal=min(capacity, 1024))
     w = jnp.asarray(inst.weights, jnp.int32)
     p = jnp.asarray(inst.profits, jnp.int32)
 
-    runtime = StealRuntime(n_workers, capacity, _item_spec(),
-                           policy=policy, adaptive=adaptive,
-                           backend=backend, max_pop=batch, axis_name=AXIS)
+    runtime = launch_runtime(n_workers, capacity, _item_spec(),
+                             execution=execution, policy=policy,
+                             adaptive=adaptive, backend=backend,
+                             max_pop=batch, axis_name=AXIS)
     # seed: root subproblem on worker 0
     runtime.push(0, {"layer": jnp.zeros((1,), jnp.int32),
                      "state": jnp.full((1,), inst.capacity, jnp.int32),
@@ -161,5 +160,6 @@ def parallel_solve(inst: Knapsack, *, n_workers: int = 8,
         "per_worker_explored": [int(x) for x in carry["explored"]],
         "telemetry": runtime.telemetry.summary(),
         "backend": runtime.ops.resolved,
+        "execution": execution,
     }
     return int(carry["incumbent"][0]), stats

@@ -65,7 +65,8 @@ from repro.core import ops as bulk_ops
 from repro.core.ops import QueueState
 from repro.core.policy import StealPolicy, plan_transfers
 
-__all__ = ["RebalanceStats", "superstep", "hierarchical_superstep"]
+__all__ = ["RebalanceStats", "superstep", "hierarchical_superstep",
+           "gather_sizes"]
 
 Pytree = Any
 
@@ -108,6 +109,22 @@ class RebalanceStats(NamedTuple):
     n_steals_xpod: jnp.ndarray
     bytes_moved: jnp.ndarray
     bytes_moved_xpod: jnp.ndarray
+
+
+def gather_sizes(q: QueueState, *, worker_axis: str,
+                 pod_axis: str | None = None) -> jnp.ndarray:
+    """The master's bookkeeping as ONE flat vector: every lane's true
+    queue size, gathered over the worker axis (and, when two-level, the
+    pod axis), in lane order ``pod * pod_size + worker`` — the same
+    order the executors stack lanes in.  4 bytes per lane per level;
+    replicated on every lane, so callers may feed it to the adaptive
+    controller or a drain check and every device takes the same branch.
+    Works identically under ``vmap(axis_name=...)`` and ``shard_map``.
+    """
+    sizes = lax.all_gather(q.size, worker_axis)  # (pod_size,) or (W,)
+    if pod_axis is None:
+        return sizes
+    return lax.all_gather(sizes, pod_axis).reshape(-1)  # (n_pods*pod_size,)
 
 
 def _resolve_ops(policy: StealPolicy, q: QueueState) -> bulk_ops.BulkOps:

@@ -29,6 +29,12 @@ Backends are named and live in a registry:
     ``ring_gather_supported``): ops whose geometry the kernels support
     become kernel-backed, the rest stay reference.  No per-call
     branching.
+``"relaxed"``
+    The fence-free multiplicity-tolerant steal path per Castañeda &
+    Piña (``repro.core.relaxed``, registered when ``repro.core``
+    imports): optimistic full-window read, bounded over-report,
+    posterior reconcile — observationally identical, gated by its own
+    geometry predicate.
 
 Operation contract
 ------------------

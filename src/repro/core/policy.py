@@ -10,7 +10,6 @@ size vector (see ``core.master``).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 
@@ -36,13 +35,11 @@ class StealPolicy:
         size on device).
       backend: name of the :class:`repro.core.ops.BulkOps` backend serving
         the master's queue ops (``"reference"`` / ``"pallas"`` /
-        ``"auto"``) — consumers resolve it via ``make_ops`` with their
-        geometry; the default ``"auto"`` resolves to the kernel routing
-        exactly where the geometry predicates admit it (and honours the
-        ``REPRO_QUEUE_BACKEND`` override).  The deprecated
-        ``use_kernel=`` boolean still maps onto it (True ->
-        ``"pallas"``, False -> ``"reference"``) with a
-        :class:`DeprecationWarning`, for one release.
+        ``"auto"`` / ``"relaxed"``) — consumers resolve it via
+        ``make_ops`` with their geometry; the default ``"auto"``
+        resolves to the kernel routing exactly where the geometry
+        predicates admit it (and honours the ``REPRO_QUEUE_BACKEND``
+        override).
       exchange: which collective moves the stolen blocks in
         ``master.superstep`` — ``"compact"`` (default: one
         ``(max_steal, ...)`` window all_gather per lane + thief-side
@@ -60,20 +57,6 @@ class StealPolicy:
     max_steal: int = 256
     backend: str = "auto"
     exchange: str = "compact"
-    # Deprecation shim: the pre-BulkOps use_kernel dialect.
-    use_kernel: dataclasses.InitVar[bool | None] = None
-
-    def __post_init__(self, use_kernel: bool | None):
-        if use_kernel is not None:
-            warnings.warn(
-                "StealPolicy(use_kernel=...) is deprecated; pass "
-                "backend='pallas' (use_kernel=True) or "
-                "backend='reference' (use_kernel=False) instead",
-                DeprecationWarning,
-                stacklevel=3,
-            )
-            object.__setattr__(self, "backend",
-                               "pallas" if use_kernel else "reference")
 
 
 def proportional(p: float, **kw) -> StealPolicy:

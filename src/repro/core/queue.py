@@ -32,28 +32,22 @@ re-thought for a functional, static-shape SPMD runtime:
 Payloads are arbitrary pytrees whose leaves share a leading ``capacity``
 (in the queue) / ``batch`` (in flight) dimension.
 
-DEPRECATION SHIM LAYER
-----------------------
-The module-level op functions (``push`` / ``pop_bulk`` / ``steal`` /
-``steal_exact`` and their ``*_inplace`` variants) with their
-``use_kernel=`` booleans are the PRE-BulkOps dialect.  They keep working
-for one release, emit :class:`DeprecationWarning`, and forward to the
-equivalent backend call (``use_kernel=True`` -> the ``"pallas"``
-backend, ``False`` -> ``"reference"``; ``*_inplace`` -> ``donate=True``).
-New code constructs a backend with :func:`repro.core.ops.make_ops`.
+(The pre-BulkOps module-level op functions and their ``use_kernel=`` /
+``*_inplace`` dialect had their one deprecation release at PR 3 and are
+removed; every consumer constructs a backend with
+:func:`repro.core.ops.make_ops` and calls its methods, with
+``donate=True`` for the in-place call shape.)
 """
 
 from __future__ import annotations
 
-import functools
-import warnings
-from typing import Any, NamedTuple, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ops import (  # noqa: F401  (re-exported, non-deprecated)
+from repro.core.ops import (  # noqa: F401  (re-exported)
     DEFAULT_QUEUE_LIMIT,
     BulkOps,
     QueueState,
@@ -65,26 +59,17 @@ from repro.core.ops import (  # noqa: F401  (re-exported, non-deprecated)
     queue_size,
     steal_counted,
 )
-from repro.core.ops import _pop  # single-item pop has no kernel dialect
+from repro.core.ops import _pop  # single-item pop has no backend dialect
 
 __all__ = [
     "QueueState",
     "make_queue",
     "queue_size",
-    "push",
     "pop",
-    "pop_bulk",
-    "steal",
-    "steal_exact",
     "steal_counted",
     "kernel_steal_available",
     "kernel_push_available",
     "kernel_pop_available",
-    "InPlaceOps",
-    "inplace_ops",
-    "push_inplace",
-    "pop_bulk_inplace",
-    "steal_exact_inplace",
     "PagedQueue",
 ]
 
@@ -96,129 +81,9 @@ def pop(q: QueueState) -> Tuple[QueueState, Pytree, jnp.ndarray]:
 
     Returns ``(new_state, item, valid)``; ``item`` is arbitrary when
     ``valid`` is False (queue empty) — the null-pointer analogue.
-    (Not deprecated: ``pop`` is backend-independent — there is no kernel
-    dialect to choose.)
+    (Backend-independent: there is no kernel dialect to choose.)
     """
     return _pop(q)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated use_kernel dialect -> BulkOps backends
-# ---------------------------------------------------------------------------
-
-
-@functools.lru_cache(maxsize=None)
-def _shim_backend(use_kernel: bool) -> BulkOps:
-    return make_ops("pallas" if use_kernel else "reference")
-
-
-def _warn_shim(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.core.queue.{old} (the use_kernel dialect) is deprecated; "
-        f"construct a backend with repro.core.ops.make_ops(...) and call "
-        f"{new}",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def push(q: QueueState, batch: Pytree, n, *,
-         use_kernel: bool = False) -> Tuple[QueueState, jnp.ndarray]:
-    """Deprecated shim for ``BulkOps.push`` (see module docstring)."""
-    _warn_shim("push", "BulkOps.push")
-    return _shim_backend(use_kernel).push(q, batch, n)
-
-
-def pop_bulk(q: QueueState, max_n: int, n, *, use_kernel: bool = False
-             ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    """Deprecated shim for ``BulkOps.pop_bulk`` (see module docstring)."""
-    _warn_shim("pop_bulk", "BulkOps.pop_bulk")
-    return _shim_backend(use_kernel).pop_bulk(q, max_n, n)
-
-
-def steal(q: QueueState, proportion, *, max_steal: int,
-          queue_limit: int = DEFAULT_QUEUE_LIMIT, use_kernel: bool = False
-          ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    """Deprecated shim for ``BulkOps.steal`` (see module docstring)."""
-    _warn_shim("steal", "BulkOps.steal")
-    return _shim_backend(use_kernel).steal(
-        q, proportion, max_steal=max_steal, queue_limit=queue_limit)
-
-
-def steal_exact(q: QueueState, n, *, max_steal: int, use_kernel: bool = False
-                ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    """Deprecated shim for ``BulkOps.steal_exact`` (see module docstring)."""
-    _warn_shim("steal_exact", "BulkOps.steal_exact")
-    return _shim_backend(use_kernel).steal_exact(q, n, max_steal=max_steal)
-
-
-# Warning-free donating forwarders, shared by the per-function shims and
-# the inplace_ops() bundle so the two deprecated surfaces cannot diverge.
-
-
-def _donate_push(q, batch, n, *, use_kernel: bool = False):
-    return _shim_backend(use_kernel).push(q, batch, n, donate=True)
-
-
-def _donate_pop(q):
-    return _shim_backend(False).pop(q, donate=True)
-
-
-def _donate_pop_bulk(q, max_n, n, *, use_kernel: bool = False):
-    return _shim_backend(use_kernel).pop_bulk(q, max_n, n, donate=True)
-
-
-def _donate_steal(q, proportion, *, max_steal,
-                  queue_limit=DEFAULT_QUEUE_LIMIT, use_kernel: bool = False):
-    return _shim_backend(use_kernel).steal(
-        q, proportion, max_steal=max_steal, queue_limit=queue_limit,
-        donate=True)
-
-
-def _donate_steal_exact(q, n, *, max_steal, use_kernel: bool = False):
-    return _shim_backend(use_kernel).steal_exact(q, n, max_steal=max_steal,
-                                                 donate=True)
-
-
-def push_inplace(q: QueueState, batch: Pytree, n, *,
-                 use_kernel: bool = False) -> Tuple[QueueState, jnp.ndarray]:
-    """Deprecated shim for ``BulkOps.push(..., donate=True)``."""
-    _warn_shim("push_inplace", "BulkOps.push(..., donate=True)")
-    return _donate_push(q, batch, n, use_kernel=use_kernel)
-
-
-def pop_bulk_inplace(q: QueueState, max_n: int, n, *,
-                     use_kernel: bool = False
-                     ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
-    """Deprecated shim for ``BulkOps.pop_bulk(..., donate=True)``."""
-    _warn_shim("pop_bulk_inplace", "BulkOps.pop_bulk(..., donate=True)")
-    return _donate_pop_bulk(q, max_n, n, use_kernel=use_kernel)
-
-
-def steal_exact_inplace(q: QueueState, n, *, max_steal: int,
-                        use_kernel: bool = False):
-    """Deprecated shim for ``BulkOps.steal_exact(..., donate=True)``."""
-    _warn_shim("steal_exact_inplace", "BulkOps.steal_exact(..., donate=True)")
-    return _donate_steal_exact(q, n, max_steal=max_steal,
-                               use_kernel=use_kernel)
-
-
-class InPlaceOps(NamedTuple):
-    push: Any
-    pop: Any
-    pop_bulk: Any
-    steal: Any
-    steal_exact: Any
-
-
-def inplace_ops() -> InPlaceOps:
-    """Deprecated shim for the pre-BulkOps donating-op bundle: returns a
-    namespace of ``donate=True`` backend calls with the old signatures
-    (each accepting the old ``use_kernel=`` keyword)."""
-    _warn_shim("inplace_ops", "BulkOps methods with donate=True")
-    return InPlaceOps(push=_donate_push, pop=_donate_pop,
-                      pop_bulk=_donate_pop_bulk, steal=_donate_steal,
-                      steal_exact=_donate_steal_exact)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,192 @@
+"""``"relaxed"`` — a fence-free, multiplicity-tolerant BulkOps backend.
+
+Castañeda & Piña's relaxed work-stealing queues drop the store-load
+fence on the steal path by letting a steal *over-report*: the stealer
+optimistically claims a block from a possibly-stale view of the queue,
+bounded multiplicity means at most a fixed window of entries can be
+claimed beyond what the owner still agrees exists, and the owner
+reconciles the discrepancy on its next take.  The payoff is a
+fence-free hot path at the cost of a bounded repair.
+
+The functional translation (states are immutable, so a *torn* read is
+impossible — what survives is the fenced-vs-optimistic DATAFLOW):
+
+* the ``"reference"`` steal is **fenced**: it first fixes the stolen
+  count ``n`` from a coherent size snapshot (``n = clip(req, 0,
+  min(size, max_steal))``) and only then gathers + masks exactly that
+  block — count before data, the analogue of fencing the size read
+  against the copy;
+* the ``"relaxed"`` steal is **optimistic**: it reads the ENTIRE static
+  ``max_steal`` window at the tail first — the multiplicity window, up
+  to ``max_steal - n`` rows beyond what the claim will settle at, rows
+  the owner may well still consider its own — and *then* reconciles the
+  over-report against the owner's size in a separate posterior step
+  that withdraws (zero-masks) the over-claimed rows and settles the
+  cursor bump.  Data before count: no ordering between the size read
+  and the window copy is required, which is exactly the fence the
+  relaxed design deletes.
+
+The observable contract is IDENTICAL to the reference backend (the
+parametrized queue/runtime/master suites sweep ``"relaxed"`` alongside
+``"reference"`` and ``"auto"`` and assert it): over-reporting is always
+repaired before anything escapes, and the multiplicity is bounded by
+the static window.  Note the compact superstep's victim side already
+works this way for everyone — ``BulkOps.window`` ships the raw unmasked
+tail window through the all_gather and the thief discards the dead rows
+— so the relaxed backend simply extends the same optimistic discipline
+to the owner-facing steal ops.
+
+Registry drop-in: ``make_ops("relaxed", capacity=..., max_steal=...)``.
+The geometry predicate :func:`relaxed_supported` gates the optimistic
+dataflow exactly like the kernel predicates gate the Pallas routing —
+an unsupported/unknown geometry falls back to the fenced reference
+routing (still named ``"relaxed"``, still observationally identical).
+"""
+
+from __future__ import annotations
+
+import functools
+import types
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as bulk_ops
+from repro.core.ops import QueueState
+
+__all__ = ["RelaxedBulkOps", "relaxed_supported"]
+
+Pytree = object
+
+
+def relaxed_supported(capacity: Optional[int],
+                      max_steal: Optional[int]) -> bool:
+    """Whether the optimistic full-window steal can serve this geometry:
+    the multiplicity window must be real rows, i.e. fit the ring
+    (``max_steal <= capacity``), else the unmasked window read would
+    wrap onto itself and a single over-reported row could alias a live
+    one.  Unknown geometry is conservatively unsupported (the backend
+    then keeps the fenced reference routing, mirroring ``"auto"``)."""
+    return (capacity is not None and max_steal is not None
+            and 0 < int(max_steal) <= int(capacity))
+
+
+def _optimistic_window(q: QueueState, max_steal: int) -> Pytree:
+    """The fence-free bulk read: ALL ``max_steal`` tail rows, unmasked —
+    no count is consulted, so nothing orders this copy against the size
+    read that follows it."""
+    cap = jax.tree_util.tree_leaves(q.buf)[0].shape[0]
+    offs = jnp.arange(max_steal, dtype=jnp.int32)
+    phys = (q.lo + offs) % cap
+    return jax.tree_util.tree_map(lambda b: b[phys], q.buf)
+
+
+def _reconcile(q: QueueState, window: Pytree, claim: jnp.ndarray,
+               max_steal: int) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    """The posterior repair (the owner-side reconcile of the paper's
+    design, folded into the steal's return because states are values):
+    settle the over-reported ``claim`` against the owner's size, withdraw
+    the over-claimed rows from the window, bump the cursor by the
+    settled count only."""
+    cap = jax.tree_util.tree_leaves(q.buf)[0].shape[0]
+    n = jnp.minimum(jnp.clip(jnp.asarray(claim, jnp.int32), 0,
+                             jnp.int32(max_steal)),
+                    q.size)
+    offs = jnp.arange(max_steal, dtype=jnp.int32)
+
+    def _withdraw(x):
+        shape = (max_steal,) + (1,) * (x.ndim - 1)
+        return jnp.where((offs < n).reshape(shape), x, jnp.zeros_like(x))
+
+    batch = jax.tree_util.tree_map(_withdraw, window)
+    new_q = QueueState(buf=q.buf, lo=(q.lo + n) % cap, size=q.size - n)
+    return new_q, batch, n
+
+
+def _relaxed_steal_exact(q: QueueState, n, *, max_steal: int
+                         ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    window = _optimistic_window(q, max_steal)  # data first (no fence) ...
+    return _reconcile(q, window, n, max_steal)  # ... count + repair after
+
+
+def _relaxed_steal(q: QueueState, proportion, *, max_steal: int,
+                   queue_limit: int
+                   ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    # The claim uses the paper's Listing-4 arithmetic unclamped by the
+    # coherent-read fence: keep floor(size * (1-p)), claim the rest.
+    size = jnp.asarray(q.size, jnp.int32)
+    keep = jnp.asarray(
+        jnp.floor(size.astype(jnp.float32) * (1.0 - proportion)), jnp.int32)
+    claim = jnp.where(size < queue_limit, jnp.int32(0), size - keep)
+    return _relaxed_steal_exact(q, claim, max_steal=max_steal)
+
+
+@functools.lru_cache(maxsize=None)
+def _donating() -> types.SimpleNamespace:
+    donate = () if jax.default_backend() == "cpu" else (0,)
+    return types.SimpleNamespace(
+        steal=jax.jit(_relaxed_steal,
+                      static_argnames=("max_steal", "queue_limit"),
+                      donate_argnums=donate),
+        steal_exact=jax.jit(_relaxed_steal_exact,
+                            static_argnames=("max_steal",),
+                            donate_argnums=donate),
+    )
+
+
+class RelaxedBulkOps(bulk_ops.BulkOps):
+    """The fence-free backend: optimistic steal ops, reference routing
+    for everything else (push/pop/pop_bulk/window/transfer are the
+    owner/thief sides, which the relaxed design leaves fenced)."""
+
+    def __init__(self):
+        super().__init__("relaxed")
+
+    @property
+    def resolved(self) -> str:
+        return "relaxed"
+
+    def __eq__(self, other) -> bool:
+        return type(other) is RelaxedBulkOps
+
+    def __hash__(self) -> int:
+        return hash((RelaxedBulkOps, self._flags()))
+
+    def multiplicity_bound(self, max_steal: int) -> int:
+        """The most rows a steal may transiently over-report before the
+        reconcile withdraws them: the whole static window (a claim can
+        settle as low as 0) — the bounded-multiplicity guarantee."""
+        return int(max_steal)
+
+    def steal(self, q: QueueState, proportion, *, max_steal: int,
+              queue_limit: int = bulk_ops.DEFAULT_QUEUE_LIMIT,
+              donate: bool = False
+              ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+        if donate:
+            return _donating().steal(q, proportion, max_steal=max_steal,
+                                     queue_limit=queue_limit)
+        return _relaxed_steal(q, proportion, max_steal=max_steal,
+                              queue_limit=queue_limit)
+
+    def steal_exact(self, q: QueueState, n, *, max_steal: int,
+                    donate: bool = False
+                    ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+        if donate:
+            return _donating().steal_exact(q, n, max_steal=max_steal)
+        return _relaxed_steal_exact(q, n, max_steal=max_steal)
+
+
+def _relaxed_factory(*, capacity: Optional[int] = None,
+                     max_push: Optional[int] = None,
+                     max_pop: Optional[int] = None,
+                     max_steal: Optional[int] = None) -> bulk_ops.BulkOps:
+    if relaxed_supported(capacity, max_steal):
+        return RelaxedBulkOps()
+    # Geometry unknown or window > ring: fenced reference routing under
+    # the same name (the predicate-gated fallback every backend family
+    # uses), so a consumer can always ask for "relaxed" safely.
+    return bulk_ops.BulkOps("relaxed")
+
+
+bulk_ops.register_backend("relaxed", _relaxed_factory)

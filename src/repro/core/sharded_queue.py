@@ -27,17 +27,29 @@ Pytree = Any
 __all__ = ["make_sharded_queues", "vmapped_superstep", "sharded_superstep"]
 
 
-def make_sharded_queues(n_workers: int, capacity: int, item_spec: Pytree) -> q_ops.QueueState:
-    """A stacked pytree of W empty queues (leading axis = worker)."""
+def make_sharded_queues(n_workers: int, capacity: int, item_spec: Pytree,
+                        *, sharding: NamedSharding | None = None
+                        ) -> q_ops.QueueState:
+    """A stacked pytree of W empty queues (leading axis = worker).
+
+    ``sharding`` optionally places every leaf with a
+    :class:`~jax.sharding.NamedSharding` over the leading worker axis
+    (one ring shard per device along the mesh's worker axes) — what the
+    mesh executor passes so each device OWNS its lane's ring from the
+    first byte; omitted, the stack lives wherever jax defaults (single
+    device), which is what the vmap-lane executor wants."""
     buf = jax.tree_util.tree_map(
         lambda s: jnp.zeros((n_workers, capacity) + tuple(s.shape), dtype=s.dtype),
         item_spec,
     )
-    return q_ops.QueueState(
+    qs = q_ops.QueueState(
         buf=buf,
         lo=jnp.zeros((n_workers,), jnp.int32),
         size=jnp.zeros((n_workers,), jnp.int32),
     )
+    if sharding is not None:
+        qs = jax.device_put(qs, sharding)
+    return qs
 
 
 def vmapped_superstep(policy: StealPolicy, axis_name: str = "workers",

@@ -1,0 +1,30 @@
+"""repro.distributed — mesh-native execution of the full round loop.
+
+The vmapped :class:`repro.runtime.StealRuntime` simulates W worker lanes
+on one device; this package runs the SAME round body with one queue lane
+per device of a real mesh axis, which is the paper's deployment shape:
+each worker owns its queue, the (virtual) master is replicated, and at
+most one stealer touches a victim per round — now with the rings
+physically resident on their owners and the exchange collectives riding
+ICI/DCN instead of vmap lanes.
+
+  executor  :class:`MeshStealRuntime` — the whole fused round loop
+            (worker bodies, exchange, adaptive update, telemetry) as one
+            ``shard_map`` block with per-device donated queue shards
+  launch    :func:`launch_runtime` — ``execution="vmap" | "mesh"`` in
+            one factory, integrated with ``repro.launch.mesh``
+  serve     :class:`RuntimeAdmissionMaster` — the serving cluster's
+            admission/rebalance on executor lanes (request IDs on
+            device, payloads on host)
+
+Parity contract: for identical seeds and policies, the mesh executor's
+queues, stats and adaptive-proportion trajectory are bit-identical to
+the vmapped executor's (asserted by ``tests/test_distributed.py`` on 8
+fake host devices; the telemetry reduction is shared, not duplicated).
+"""
+
+from repro.distributed.executor import MeshStealRuntime
+from repro.distributed.launch import launch_runtime
+from repro.distributed.serve import RuntimeAdmissionMaster
+
+__all__ = ["MeshStealRuntime", "launch_runtime", "RuntimeAdmissionMaster"]

@@ -1,0 +1,197 @@
+"""Device-resident admission: the serving master's queues AS executor lanes.
+
+The host :class:`~repro.serve.scheduler.AdmissionMaster` keeps request
+queues in Python objects and runs the steal plan in a loop — fine for a
+handful of replicas, but it is exactly the layer the executors already
+implement on device.  :class:`RuntimeAdmissionMaster` swaps the host
+queues for executor lanes holding request IDs (4 bytes/request): one
+ring per replica, admission is one bulk push, and every rebalance round
+is a real ``master.superstep`` through
+:func:`repro.distributed.launch_runtime` — vmap lanes on one device
+(``execution="vmap"``) or one lane per device under shard_map
+(``execution="mesh"``).  Request payloads (prompts, outputs) stay on the
+host in an id-keyed table; only the IDs ride the rings, so the device
+traffic per moved request is constant and tiny while the plan, the
+adaptive proportion and the telemetry are the SAME code paths the DD
+solver and the benchmarks exercise.
+
+The class implements the master surface :class:`~repro.serve.engine.
+ServeCluster` drives (``replicas`` / ``submit`` / ``rebalance_many`` /
+``telemetry`` / ``stats``), so ``ServeCluster(execution="mesh")`` is a
+drop-in switch.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import StealPolicy
+from repro.distributed.launch import launch_runtime
+from repro.runtime.adaptive import AdaptiveConfig
+
+__all__ = ["RuntimeAdmissionMaster", "DeviceReplicaLane"]
+
+_SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+class DeviceReplicaLane:
+    """One replica's view of its executor lane: the ``ReplicaQueue``
+    surface (``load`` / ``pop_wave`` / ``finish_wave``) over ring slot
+    ``replica_id`` of the master's runtime."""
+
+    def __init__(self, master: "RuntimeAdmissionMaster", replica_id: int):
+        self._master = master
+        self.replica_id = replica_id
+        self.in_flight = 0
+        self.completed = 0
+
+    def __len__(self) -> int:
+        return int(self._master.runtime.sizes()[self.replica_id])
+
+    def load(self) -> int:
+        return len(self) + self.in_flight
+
+    def pop_wave(self, max_wave: int) -> List:
+        """Pop up to ``max_wave`` newest request IDs off this lane —
+        ONE owner-side bulk pop, not per-item dispatches — and resolve
+        them to :class:`~repro.serve.scheduler.Request` objects, newest
+        first (the host queues' LIFO discipline)."""
+        rt = self._master.runtime
+        i = self.replica_id
+        qi = jax.tree_util.tree_map(lambda x: x[i], rt.queues)
+        qi, batch, n = rt.ops.pop_bulk(qi, int(max_wave),
+                                       jnp.int32(max_wave))
+        rt.queues = jax.tree_util.tree_map(
+            lambda full, one: full.at[i].set(one), rt.queues, qi)
+        # pop_bulk returns the block oldest-first; reverse for LIFO.
+        rids = np.asarray(batch)[: int(n)][::-1]
+        wave = [self._master.lookup(int(r)) for r in rids]
+        self.in_flight += len(wave)
+        return wave
+
+    def finish_wave(self, n: int) -> None:
+        self.in_flight -= n
+        self.completed += n
+
+    # ``AdmissionMaster.rebalance`` reads ``r.q``; the cluster only ever
+    # touches len()/load(), which this object answers itself.
+    @property
+    def q(self):
+        return self
+
+
+class RuntimeAdmissionMaster:
+    """The single stealer + admission router, on executor lanes.
+
+    Args:
+      n_replicas: lanes (= devices along the worker mesh axis when
+        ``execution="mesh"``).
+      policy / adaptive / adaptive_config: as the host master; the
+        policy's proportion seeds the runtime's adaptive controller.
+      execution: ``"vmap"`` or ``"mesh"`` (see
+        :func:`repro.distributed.launch_runtime`).
+      capacity: per-lane ring capacity (queued request IDs per replica).
+      mesh: optional pinned mesh for ``execution="mesh"``.
+    """
+
+    def __init__(self, n_replicas: int,
+                 policy: Optional[StealPolicy] = None,
+                 adaptive: bool = True,
+                 adaptive_config: Optional[AdaptiveConfig] = None, *,
+                 execution: str = "vmap",
+                 capacity: int = 512,
+                 mesh=None):
+        self.policy = policy or StealPolicy(proportion=0.5,
+                                            low_watermark=1,
+                                            high_watermark=8,
+                                            max_steal=min(256, capacity))
+        self.execution = execution
+        self.runtime = launch_runtime(
+            n_replicas, capacity, _SPEC, execution=execution, mesh=mesh,
+            policy=self.policy, adaptive=adaptive,
+            adaptive_config=adaptive_config)
+        self.replicas = [DeviceReplicaLane(self, i)
+                         for i in range(n_replicas)]
+        self._requests: Dict[int, object] = {}
+        self.stolen = 0
+
+    # -- request table -------------------------------------------------------
+
+    def lookup(self, rid: int):
+        return self._requests[rid]
+
+    # -- the AdmissionMaster surface ----------------------------------------
+
+    @property
+    def telemetry(self):
+        """The runtime's unified round + wave stream (the cluster appends
+        ``WaveRecord``s here, next to real executor ``RoundRecord``s)."""
+        return self.runtime.telemetry
+
+    @property
+    def controller(self):
+        return self.runtime.controller
+
+    @property
+    def rounds(self) -> int:
+        return self.runtime.rounds_run
+
+    @property
+    def proportion(self) -> float:
+        return self.runtime.proportion
+
+    def submit(self, requests: Sequence) -> int:
+        """Bulk-admit to the least-loaded replica: ONE ring splice of the
+        request-id batch (constant latency in the batch size)."""
+        requests = list(requests)
+        if not requests:
+            return -1
+        target = min(self.replicas, key=lambda r: r.load())
+        for r in requests:
+            self._requests[r.rid] = r
+        rids = jnp.asarray([r.rid for r in requests], jnp.int32)
+        pushed = self.runtime.push(target.replica_id, rids, len(requests))
+        if pushed < len(requests):
+            raise RuntimeError(
+                f"admission ring overflow on replica {target.replica_id}: "
+                f"pushed {pushed}/{len(requests)} (capacity "
+                f"{self.runtime.capacity})")
+        return target.replica_id
+
+    def rebalance(self) -> int:
+        """One REAL rebalance round through the executor (plan + exchange
+        + adaptive update + telemetry on device).  Returns requests
+        moved."""
+        before = self.runtime.telemetry.total_transferred
+        self.runtime.round()
+        moved = self.runtime.telemetry.total_transferred - before
+        self.stolen += moved
+        return moved
+
+    def rebalance_many(self, k: int) -> int:
+        """Up to ``k`` rounds per tick, stopping once a round moves
+        nothing (the host master's early-exit discipline)."""
+        moved = 0
+        for _ in range(int(k)):
+            step = self.rebalance()
+            moved += step
+            if step == 0:
+                break
+        return moved
+
+    def stats(self) -> Dict:
+        return {
+            "loads": [r.load() for r in self.replicas],
+            "queued": [len(r) for r in self.replicas],
+            "completed": [r.completed for r in self.replicas],
+            "stolen": self.stolen,
+            "rounds": self.rounds,
+            "proportion": self.proportion,
+            "execution": self.execution,
+            "backend": self.runtime.ops.resolved,
+            "telemetry": self.telemetry.summary(),
+        }

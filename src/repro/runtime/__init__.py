@@ -15,7 +15,8 @@ the in-place production call shape).  Backends are registry-named:
 ``"reference"`` (jnp oracle), ``"pallas"`` (hand-written ring kernels),
 ``"auto"`` (kernel routing resolved ONCE at construction from the
 geometry predicates, honouring the ``REPRO_QUEUE_BACKEND`` environment
-override).  :class:`~repro.runtime.executor.StealRuntime` resolves its
+override), ``"relaxed"`` (the fence-free multiplicity-tolerant
+Castañeda & Piña variant, ``repro.core.relaxed``).  :class:`~repro.runtime.executor.StealRuntime` resolves its
 backend at construction (``backend="auto"`` default) and exposes it as
 ``runtime.ops`` so worker bodies pop/push through the identical routing
 the master's steal uses; swapping backends never touches consumer code
@@ -33,7 +34,15 @@ the master's steal uses; swapping backends never touches consumer code
   queue-size imbalance (``RebalanceStats``), fed back as a *traced*
   scalar so re-tuning never recompiles.
 * :mod:`~repro.runtime.telemetry` records per-round steal counts,
-  transfer bytes and queue-depth histograms.
+  transfer bytes and queue-depth histograms
+  (:func:`~repro.runtime.telemetry.reduce_round_stats` is the one exact
+  per-round reduction both execution modes share).
+
+The round body itself is mode-agnostic
+(:func:`~repro.runtime.executor.make_lane_step`):
+:class:`repro.distributed.MeshStealRuntime` runs the identical body —
+and the identical fused loop — with one queue lane per device under
+``shard_map``, bit-identical to the vmapped runtime here.
 
 How the paper's single-stealer invariant is preserved
 -----------------------------------------------------

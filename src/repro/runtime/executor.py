@@ -41,7 +41,6 @@ incumbent) exactly like ``core.dd.parallel`` does.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -56,13 +55,49 @@ from repro.core.policy import StealPolicy
 from repro.core.sharded_queue import make_sharded_queues
 from repro.runtime.adaptive import (AdaptiveConfig, AdaptiveController,
                                     adaptive_update)
-from repro.runtime.telemetry import Telemetry, item_nbytes
+from repro.runtime.telemetry import (Telemetry, item_nbytes,
+                                     reduce_round_stats)
 
 Pytree = Any
 WorkerFn = Callable[[bulk_ops.QueueState, Pytree],
                     Tuple[bulk_ops.QueueState, Pytree]]
 
-__all__ = ["StealRuntime"]
+__all__ = ["StealRuntime", "make_lane_step"]
+
+
+def make_lane_step(policy: StealPolicy, ops: bulk_ops.BulkOps,
+                   worker_fn: Optional[WorkerFn], *, axis_name: str,
+                   pod_axis: Optional[str] = None,
+                   hierarchical: bool = False) -> Callable:
+    """The mode-agnostic round body for ONE lane:
+    ``(q, carry, proportion) -> (q, carry, stats)``.
+
+    This is the single definition of what a round IS — optional worker
+    body, then the rebalancing superstep (flat over ``axis_name``, or
+    hierarchical over ``(pod_axis, axis_name)``), with the steal
+    proportion injected as a traced scalar.  Both executors build their
+    execution mode AROUND it: :class:`StealRuntime` maps it with
+    ``jax.vmap(axis_name=...)`` over stacked lanes on one device, and
+    :class:`repro.distributed.MeshStealRuntime` runs it per-shard under
+    ``shard_map`` over real mesh axes of the same names.  Because the
+    collectives resolve through the axis names either way, the two modes
+    execute the identical computation — the parity tests assert the
+    results are bit-identical.
+    """
+
+    def lane(q, carry, proportion):
+        if worker_fn is not None:
+            q, carry = worker_fn(q, carry)
+        pol = dataclasses.replace(policy, proportion=proportion)
+        if hierarchical:
+            q, stats = master_ops.hierarchical_superstep(
+                q, pol, worker_axis=axis_name, pod_axis=pod_axis, ops=ops)
+        else:
+            q, stats = master_ops.superstep(q, pol, axis_name=axis_name,
+                                            ops=ops)
+        return q, carry, stats
+
+    return lane
 
 
 class StealRuntime:
@@ -105,16 +140,10 @@ class StealRuntime:
                  axis_name: str = "workers",
                  pod_size: Optional[int] = None,
                  pod_axis: str = "pods",
-                 use_kernel: Optional[bool] = None):
+                 queue_sharding=None):
         if pod_size is not None and n_workers % pod_size != 0:
             raise ValueError(
                 f"n_workers={n_workers} not divisible by pod_size={pod_size}")
-        if use_kernel is not None:  # deprecation shim (pre-BulkOps dialect)
-            warnings.warn(
-                "StealRuntime(use_kernel=...) is deprecated; pass "
-                "backend='pallas'/'reference'/'auto' instead",
-                DeprecationWarning, stacklevel=2)
-            backend = "pallas" if use_kernel else "reference"
         self.n_workers = int(n_workers)
         self.capacity = int(capacity)
         self.item_spec = item_spec
@@ -128,7 +157,12 @@ class StealRuntime:
             backend, capacity=self.capacity, max_push=base.max_steal,
             max_pop=max_pop, max_steal=base.max_steal)
         self.policy = dataclasses.replace(base, backend=self.ops.name)
-        self.queues = make_sharded_queues(n_workers, capacity, item_spec)
+        # ``queue_sharding`` (a NamedSharding over the lane axis) places
+        # each lane's ring on its owning device from the first byte —
+        # what the mesh subclass passes; the stack is built sharded, not
+        # built dense and re-placed.
+        self.queues = make_sharded_queues(n_workers, capacity, item_spec,
+                                          sharding=queue_sharding)
         self.controller = (AdaptiveController(self.policy, adaptive_config)
                            if adaptive else None)
         self.telemetry = Telemetry(item_bytes=item_nbytes(item_spec),
@@ -178,24 +212,18 @@ class StealRuntime:
 
     # -- the round -----------------------------------------------------------
 
+    def _lane_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
+        """The shared one-lane round body (see :func:`make_lane_step`)."""
+        return make_lane_step(self.policy, self.ops, worker_fn,
+                              axis_name=self.axis_name,
+                              pod_axis=self.pod_axis,
+                              hierarchical=self.pod_size is not None)
+
     def _make_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
         """Un-jitted ``(qs, carry, proportion) -> (qs, carry, stats)``."""
-        policy, ops = self.policy, self.ops
-        axis_name, pod_axis = self.axis_name, self.pod_axis
         pod_size = self.pod_size
-
-        def lane(q, carry, proportion):
-            if worker_fn is not None:
-                q, carry = worker_fn(q, carry)
-            pol = dataclasses.replace(policy, proportion=proportion)
-            if pod_size is not None:
-                q, stats = master_ops.hierarchical_superstep(
-                    q, pol, worker_axis=axis_name, pod_axis=pod_axis,
-                    ops=ops)
-            else:
-                q, stats = master_ops.superstep(q, pol, axis_name=axis_name,
-                                                ops=ops)
-            return q, carry, stats
+        axis_name, pod_axis = self.axis_name, self.pod_axis
+        lane = self._lane_step(worker_fn)
 
         if pod_size is None:
             mapped = jax.vmap(lane, axis_name=axis_name,
@@ -288,30 +316,11 @@ class StealRuntime:
 
     def _round_counts(self, stats) -> Tuple[int, int, int]:
         """Exact (n_steals, n_transferred, bytes_moved) for one round's
-        stats (numpy leaves, leading axis = lanes)."""
-        if self.pod_size is None:
-            # Per-lane stats are replicated in flat mode: element 0 exact.
-            return (int(np.asarray(stats.n_steals).reshape(-1)[0]),
-                    int(np.asarray(stats.n_transferred).reshape(-1)[0]),
-                    int(np.asarray(stats.bytes_moved).reshape(-1)[0]))
-        # Hierarchical mode: lane (p, 0) carries pod p's intra-pod share;
-        # the cross-pod share lives in the *_xpod fields, nonzero only on
-        # lane-0 representatives and replicated across them — summing
-        # intra over pods and adding xpod ONCE is exact (the former
-        # upper-bound replication is gone).
-        n_pods = self.n_workers // self.pod_size
-        rep = lambda x: np.asarray(x).reshape(n_pods, -1)[:, 0]
-        n_steals = int(rep(stats.n_steals).sum()) + int(
-            rep(stats.n_steals_xpod)[0])
-        n_transferred = int(rep(stats.n_transferred).sum()) + int(
-            rep(stats.n_transferred_xpod)[0])
-        # bytes_moved stays PER-LANE (unlike the cluster-total counters):
-        # the busiest lane's injection — its pod's intra-level payload
-        # plus the pod-level share (identical across representatives, so
-        # max-intra + xpod IS one representative's actual traffic).
-        bytes_moved = int(rep(stats.bytes_moved).max()) + int(
-            rep(stats.bytes_moved_xpod)[0])
-        return n_steals, n_transferred, bytes_moved
+        stats (numpy leaves, leading axis = lanes) — the shared
+        :func:`repro.runtime.telemetry.reduce_round_stats` reduction,
+        identical for vmap-stacked lanes and shard_map-gathered shards."""
+        return reduce_round_stats(stats, n_workers=self.n_workers,
+                                  pod_size=self.pod_size)
 
     def round(self, worker_fn: Optional[WorkerFn] = None,
               carry: Optional[Pytree] = None

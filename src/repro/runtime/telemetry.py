@@ -20,7 +20,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["item_nbytes", "RoundRecord", "WaveRecord", "Telemetry"]
+__all__ = ["item_nbytes", "reduce_round_stats", "RoundRecord", "WaveRecord",
+           "Telemetry"]
 
 
 def item_nbytes(item_spec: Any) -> int:
@@ -30,6 +31,40 @@ def item_nbytes(item_spec: Any) -> int:
     from repro.core.ops import item_nbytes as _impl
 
     return _impl(item_spec)
+
+
+def reduce_round_stats(stats, *, n_workers: int, pod_size: Optional[int] = None
+                       ) -> tuple:
+    """Exact ``(n_steals, n_transferred, bytes_moved)`` for one round from
+    per-lane ``RebalanceStats`` counters (numpy leaves, leading axis =
+    lanes).
+
+    This is the one reduction both executors share: the vmapped
+    ``StealRuntime`` reads lanes of a stacked array, the mesh runtime
+    reads the same layout after shard_map gathered each device's shard
+    into lane order — so per-shard counters reduce to the identical
+    exact ``RoundRecord`` regardless of where the lanes live.
+
+    Flat mode: per-lane counters are replicated, so element 0 is exact.
+    Hierarchical mode: lane ``(p, 0)`` carries pod p's intra-pod share;
+    the cross-pod share lives in the ``*_xpod`` fields, nonzero only on
+    lane-0 representatives and replicated across them — summing intra
+    over pods and adding xpod ONCE is exact.  ``bytes_moved`` stays
+    PER-LANE (the busiest lane's injection: its pod's intra-level
+    payload plus the pod-level share)."""
+    if pod_size is None:
+        return (int(np.asarray(stats.n_steals).reshape(-1)[0]),
+                int(np.asarray(stats.n_transferred).reshape(-1)[0]),
+                int(np.asarray(stats.bytes_moved).reshape(-1)[0]))
+    n_pods = n_workers // pod_size
+    rep = lambda x: np.asarray(x).reshape(n_pods, -1)[:, 0]
+    n_steals = int(rep(stats.n_steals).sum()) + int(
+        rep(stats.n_steals_xpod)[0])
+    n_transferred = int(rep(stats.n_transferred).sum()) + int(
+        rep(stats.n_transferred_xpod)[0])
+    bytes_moved = int(rep(stats.bytes_moved).max()) + int(
+        rep(stats.bytes_moved_xpod)[0])
+    return n_steals, n_transferred, bytes_moved
 
 
 @dataclasses.dataclass(frozen=True)

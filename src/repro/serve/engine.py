@@ -82,13 +82,33 @@ class ServeCluster:
     :class:`~repro.runtime.telemetry.WaveRecord` (requests served,
     tokens generated, post-wave per-replica loads) next to the round
     records, so ``stats()["telemetry"]`` reports rounds and waves from
-    one source instead of ad-hoc host counters."""
+    one source instead of ad-hoc host counters.
+
+    ``execution`` selects where the admission queues live:
+    ``"host"`` (default) keeps the Python
+    :class:`~repro.serve.scheduler.AdmissionMaster` over ``HostQueue``
+    implementations; ``"vmap"`` / ``"mesh"`` swap in
+    :class:`repro.distributed.RuntimeAdmissionMaster` — request IDs on
+    executor lanes (one ring per replica; one ring per DEVICE under
+    ``"mesh"``), every rebalance a real device superstep through
+    :func:`repro.distributed.launch_runtime`."""
 
     def __init__(self, replicas: List[Replica],
                  master: Optional[AdmissionMaster] = None,
-                 rebalance_rounds: int = 1):
+                 rebalance_rounds: int = 1,
+                 execution: str = "host",
+                 admission_capacity: int = 512):
         self.replicas = replicas
-        self.master = master or AdmissionMaster(len(replicas))
+        if master is None:
+            if execution == "host":
+                master = AdmissionMaster(len(replicas))
+            else:
+                from repro.distributed.serve import RuntimeAdmissionMaster
+
+                master = RuntimeAdmissionMaster(
+                    len(replicas), execution=execution,
+                    capacity=admission_capacity)
+        self.master = master
         self.rebalance_rounds = int(rebalance_rounds)
         self.done: List[Request] = []
 

@@ -1,16 +1,20 @@
-"""The use_kernel dialect keeps working for one release: every shim
-emits ``DeprecationWarning`` and returns results identical to the
-equivalent ``BulkOps`` backend call."""
+"""The ``use_kernel`` dialect had its one deprecation release (PR 3 -> PR 4)
+and is now REMOVED: the shims are gone from the surface, the old keyword
+raises, and the whole replacement dialect (``BulkOps`` backends +
+``donate=``) is warning-free.  The behavioural parity the shims were
+tested for lives on in the ``backend=``-parametrized suites
+(test_queue / test_runtime / test_master)."""
 
+import inspect
 import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import ops as bulk_ops
 from repro.core import queue as q_ops
+from repro.core.dd.parallel import parallel_solve
 from repro.core.policy import StealPolicy
 from repro.runtime import StealRuntime
 
@@ -18,137 +22,33 @@ CAP = 64
 SPEC = jax.ShapeDtypeStruct((), jnp.int32)
 
 
-def _seeded(n=10):
-    q = bulk_ops.make_queue(CAP, SPEC)
-    ref = bulk_ops.make_ops("reference")
-    q, _ = ref.push(q, jnp.arange(1, 17, dtype=jnp.int32), jnp.int32(n))
-    return q
-
-
-@pytest.mark.parametrize("use_kernel", [False, True])
-def test_queue_shims_warn_and_match_backend(use_kernel):
-    backend = bulk_ops.make_ops("pallas" if use_kernel else "reference")
-    batch = jnp.arange(1, 17, dtype=jnp.int32)
-    q0 = _seeded()
-
-    with pytest.warns(DeprecationWarning, match="push"):
-        q_s, n_s = q_ops.push(q0, batch, jnp.int32(5),
-                              use_kernel=use_kernel)
-    q_b, n_b = backend.push(q0, batch, jnp.int32(5))
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(q_s.buf), np.asarray(q_b.buf))
-
-    with pytest.warns(DeprecationWarning, match="pop_bulk"):
-        q_s, b_s, n_s = q_ops.pop_bulk(q0, 8, jnp.int32(4),
-                                       use_kernel=use_kernel)
-    q_b, b_b, n_b = backend.pop_bulk(q0, 8, jnp.int32(4))
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_b))
-
-    with pytest.warns(DeprecationWarning, match="steal_exact"):
-        q_s, b_s, n_s = q_ops.steal_exact(q0, jnp.int32(4), max_steal=8,
-                                          use_kernel=use_kernel)
-    q_b, b_b, n_b = backend.steal_exact(q0, jnp.int32(4), max_steal=8)
-    assert int(n_s) == int(n_b)
-    assert int(q_s.lo) == int(q_b.lo)
-    np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_b))
-
-    with pytest.warns(DeprecationWarning, match="steal"):
-        q_s, b_s, n_s = q_ops.steal(q0, 0.5, max_steal=8,
-                                    use_kernel=use_kernel)
-    q_b, b_b, n_b = backend.steal(q0, 0.5, max_steal=8)
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_b))
-
-
-def test_inplace_shims_warn_and_match_donate():
-    backend = bulk_ops.make_ops("reference")
-    batch = jnp.arange(1, 17, dtype=jnp.int32)
-    q0 = _seeded()
-
-    with pytest.warns(DeprecationWarning, match="push_inplace"):
-        q_s, n_s = q_ops.push_inplace(q0, batch, jnp.int32(5))
-    q_b, n_b = backend.push(q0, batch, jnp.int32(5), donate=True)
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(q_s.buf), np.asarray(q_b.buf))
-
-    with pytest.warns(DeprecationWarning, match="pop_bulk_inplace"):
-        q_s, b_s, n_s = q_ops.pop_bulk_inplace(q0, 8, jnp.int32(4))
-    q_b, b_b, n_b = backend.pop_bulk(q0, 8, jnp.int32(4), donate=True)
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_b))
-
-    with pytest.warns(DeprecationWarning, match="steal_exact_inplace"):
-        q_s, b_s, n_s = q_ops.steal_exact_inplace(q0, jnp.int32(4),
-                                                  max_steal=8)
-    q_b, b_b, n_b = backend.steal_exact(q0, jnp.int32(4), max_steal=8,
-                                        donate=True)
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_b))
-
-
-def test_inplace_ops_bundle_warns_and_matches_donate():
-    """The pre-BulkOps ``inplace_ops()`` bundle keeps its old surface."""
+def test_queue_shims_are_gone():
+    """No module-level op functions, no *_inplace variants, no bundle."""
+    for name in ("push", "pop_bulk", "steal", "steal_exact",
+                 "push_inplace", "pop_bulk_inplace", "steal_exact_inplace",
+                 "inplace_ops", "InPlaceOps"):
+        assert not hasattr(q_ops, name), name
     import repro.core as core_pkg
 
-    # package-level re-exports of the shims still resolve
-    assert core_pkg.push is q_ops.push
-    assert core_pkg.steal_exact is q_ops.steal_exact
-    with pytest.warns(DeprecationWarning, match="inplace_ops"):
-        bundle = q_ops.inplace_ops()
-    backend = bulk_ops.make_ops("reference")
-    q0 = _seeded()
-    batch = jnp.arange(1, 17, dtype=jnp.int32)
-    q_s, n_s = bundle.push(q0, batch, jnp.int32(5))
-    q_b, n_b = backend.push(q0, batch, jnp.int32(5), donate=True)
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(q_s.buf), np.asarray(q_b.buf))
-    q_s, b_s, n_s = bundle.steal(q0, 0.5, max_steal=8, use_kernel=True)
-    q_b, b_b, n_b = bulk_ops.make_ops("pallas").steal(q0, 0.5, max_steal=8,
-                                                      donate=True)
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_b))
-    q_s, it_s, v_s = bundle.pop(q0)
-    q_b, it_b, v_b = backend.pop(q0, donate=True)
-    assert bool(v_s) == bool(v_b) and int(it_s) == int(it_b)
-    q_s, b_s, n_s = bundle.pop_bulk(q0, 8, jnp.int32(3))
-    q_b, b_b, n_b = backend.pop_bulk(q0, 8, jnp.int32(3), donate=True)
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_b))
-    q_s, b_s, n_s = bundle.steal_exact(q0, jnp.int32(2), max_steal=8)
-    q_b, b_b, n_b = backend.steal_exact(q0, jnp.int32(2), max_steal=8,
-                                        donate=True)
-    assert int(n_s) == int(n_b)
-    np.testing.assert_array_equal(np.asarray(b_s), np.asarray(b_b))
+    for name in ("push", "pop_bulk", "steal", "steal_exact"):
+        assert not hasattr(core_pkg, name), name
+    # the non-deprecated survivors still resolve
+    assert core_pkg.pop is q_ops.pop
+    assert core_pkg.make_queue is bulk_ops.make_queue
 
 
-def test_policy_use_kernel_maps_to_backend():
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        pol = StealPolicy(use_kernel=True)
-    assert pol.backend == "pallas"
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        pol = StealPolicy(use_kernel=False)
-    assert pol.backend == "reference"
-    # no shim kwarg -> no warning, replace() keeps the backend silently
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        pol = StealPolicy(backend="auto")
-        import dataclasses
-        pol2 = dataclasses.replace(pol, proportion=0.3)
-    assert pol2.backend == "auto" and pol2.proportion == 0.3
-
-
-def test_runtime_use_kernel_maps_to_backend():
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        rt = StealRuntime(2, 64, SPEC, use_kernel=True)
-    assert rt.ops.resolved == "pallas"
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        rt = StealRuntime(2, 64, SPEC, use_kernel=False)
-    assert rt.ops.resolved == "reference"
+def test_use_kernel_kwarg_raises_everywhere():
+    with pytest.raises(TypeError):
+        StealPolicy(use_kernel=True)
+    with pytest.raises(TypeError):
+        StealRuntime(2, CAP, SPEC, use_kernel=True)
+    assert "use_kernel" not in inspect.signature(parallel_solve).parameters
+    assert "use_kernel" not in inspect.signature(StealPolicy).parameters
 
 
 def test_new_surface_is_warning_free():
-    """The whole new-dialect hot path raises no DeprecationWarning."""
+    """The whole replacement-dialect hot path raises no
+    DeprecationWarning."""
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         pol = StealPolicy(proportion=0.5, low_watermark=1, high_watermark=4,

@@ -1,8 +1,10 @@
 """Unit + property tests for the JAX bulk work-stealing queue.
 
 Every test drives the queue through a :class:`repro.core.ops.BulkOps`
-backend and is parametrized over ``backend in ("reference", "auto")`` —
-the paper's single-contract / many-implementations discipline.  The
+backend and is parametrized over ``backend in ("reference", "auto",
+"relaxed")`` — the paper's single-contract / many-implementations
+discipline (``"relaxed"`` is the fence-free multiplicity-tolerant
+variant, which must be observationally identical).  The
 linearizability property tests mirror the paper's §III-B argument: for
 any sequence of owner bulk-pushes / pops and stealer bulk-steals, the
 queue behaves exactly like a sequential deque where the owner operates
@@ -22,7 +24,7 @@ from repro.core import ops as bulk_ops
 
 CAP = 64
 SPEC = jax.ShapeDtypeStruct((), jnp.int32)
-BACKENDS = ("reference", "auto")
+BACKENDS = ("reference", "auto", "relaxed")
 
 
 @pytest.fixture(params=BACKENDS)

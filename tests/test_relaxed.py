@@ -1,0 +1,142 @@
+"""The ``"relaxed"`` fence-free multiplicity-tolerant backend
+(Castañeda & Piña, see ``core/relaxed.py``): registry drop-in, geometry
+predicate + fenced fallback, bounded over-report always reconciled, and
+steal-path equivalence to the fenced reference oracle from arbitrary
+states (the broader behavioural sweep lives in the
+backend-parametrized test_queue / test_runtime / test_master suites)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # real install or conftest's mini-shim
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops as bulk_ops
+from repro.core.relaxed import (RelaxedBulkOps, _optimistic_window,
+                                relaxed_supported)
+
+CAP = 64
+SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+REF = bulk_ops.make_ops("reference")
+
+
+def _seeded(values, cap=CAP):
+    q = bulk_ops.make_queue(cap, SPEC)
+    buf = np.zeros((max(len(values), 1),), np.int32)
+    buf[: len(values)] = values
+    q, _ = REF.push(q, jnp.asarray(buf), len(values))
+    return q
+
+
+def test_registry_and_predicate():
+    assert "relaxed" in bulk_ops.available_backends()
+    assert relaxed_supported(64, 32)
+    assert relaxed_supported(64, 64)
+    assert not relaxed_supported(64, 128)   # window larger than the ring
+    assert not relaxed_supported(None, 32)  # unknown geometry
+    assert not relaxed_supported(64, None)
+    ok = bulk_ops.make_ops("relaxed", capacity=64, max_steal=32)
+    assert isinstance(ok, RelaxedBulkOps)
+    assert ok.name == ok.resolved == "relaxed"
+    assert ok.multiplicity_bound(32) == 32
+    # predicate-gated fallback: same name, fenced reference routing
+    fb = bulk_ops.make_ops("relaxed", capacity=64, max_steal=128)
+    assert not isinstance(fb, RelaxedBulkOps)
+    assert fb.name == "relaxed" and fb.resolved == "reference"
+    assert bulk_ops.make_ops("relaxed").resolved == "reference"
+
+
+def test_optimistic_window_is_unmasked_overreport():
+    """The fence-free read really does claim the whole multiplicity
+    window — rows past ``size`` carry live ring bytes, not zeros."""
+    q = _seeded([1, 2, 3])
+    window = _optimistic_window(q, 8)
+    np.testing.assert_array_equal(np.asarray(window)[:3], [1, 2, 3])
+    # over-reported rows read whatever the ring holds (zeros here is the
+    # empty-ring payload, but the READ itself spans all 8 rows); after a
+    # wrap, the over-report picks up stale live bytes:
+    q2 = _seeded(list(range(1, 11)), cap=8)  # clamped to 8 pushed
+    q2, _, _ = REF.steal_exact(q2, 5, max_steal=8)  # lo advances to 5
+    w2 = _optimistic_window(q2, 8)
+    assert np.asarray(w2).shape == (8,)
+    assert (np.asarray(w2) != 0).sum() > int(q2.size)  # stale rows read
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=0, max_size=40),
+       st.integers(0, 48), st.floats(0.05, 1.5))
+def test_relaxed_reconcile_matches_fenced_reference(sizes, n_exact, prop):
+    """From arbitrary fill levels, steal_exact and proportional steal
+    settle to EXACTLY the fenced reference result: same count, same
+    rows, same cursor, over-report fully withdrawn (dead rows zeroed)."""
+    rel = bulk_ops.make_ops("relaxed", capacity=CAP, max_steal=32)
+    assert isinstance(rel, RelaxedBulkOps)
+    vals = list(range(1, len(sizes) + 1))
+    q0 = _seeded(vals)
+
+    a_q, a_b, a_n = rel.steal_exact(q0, jnp.int32(n_exact), max_steal=32)
+    r_q, r_b, r_n = REF.steal_exact(q0, jnp.int32(n_exact), max_steal=32)
+    assert int(a_n) == int(r_n)
+    np.testing.assert_array_equal(np.asarray(a_b), np.asarray(r_b))
+    assert int(a_q.lo) == int(r_q.lo) and int(a_q.size) == int(r_q.size)
+
+    a_q, a_b, a_n = rel.steal(q0, prop, max_steal=32)
+    r_q, r_b, r_n = REF.steal(q0, prop, max_steal=32)
+    assert int(a_n) == int(r_n)
+    np.testing.assert_array_equal(np.asarray(a_b), np.asarray(r_b))
+    assert int(a_q.lo) == int(r_q.lo) and int(a_q.size) == int(r_q.size)
+
+
+def test_relaxed_donate_matches_pure():
+    rel = bulk_ops.make_ops("relaxed", capacity=CAP, max_steal=16)
+    q0 = _seeded(list(range(1, 13)))
+    q_p, b_p, n_p = rel.steal_exact(q0, jnp.int32(5), max_steal=16)
+    q_d, b_d, n_d = rel.steal_exact(_seeded(list(range(1, 13))),
+                                    jnp.int32(5), max_steal=16, donate=True)
+    assert int(n_p) == int(n_d)
+    np.testing.assert_array_equal(np.asarray(b_p), np.asarray(b_d))
+    np.testing.assert_array_equal(np.asarray(q_p.buf), np.asarray(q_d.buf))
+
+
+def test_relaxed_through_superstep_matches_reference():
+    """The virtual master on the relaxed backend produces bit-identical
+    queues to the reference backend (both exchanges)."""
+    import dataclasses
+
+    from repro.core.policy import StealPolicy
+    from repro.core.sharded_queue import make_sharded_queues, vmapped_superstep
+
+    pol = StealPolicy(proportion=0.5, low_watermark=2, high_watermark=8,
+                      max_steal=32)
+    sizes = [40, 0, 0, 0, 25, 0, 3, 0]
+
+    def seed():
+        qs = make_sharded_queues(8, 128, SPEC)
+        nxt = 1
+        for i, n in enumerate(sizes):
+            vals = np.zeros((max(sizes),), np.int32)
+            vals[:n] = range(nxt, nxt + n)
+            nxt += n
+            qi = jax.tree_util.tree_map(lambda x: x[i], qs)
+            qi, _ = REF.push(qi, jnp.asarray(vals), n)
+            qs = jax.tree_util.tree_map(
+                lambda full, one: full.at[i].set(one), qs, qi)
+        return qs
+
+    for exchange in ("compact", "dense"):
+        p = dataclasses.replace(pol, exchange=exchange)
+        out = {}
+        for backend in ("reference", "relaxed"):
+            ops = bulk_ops.make_ops(backend, capacity=128, max_push=32,
+                                    max_steal=32)
+            qs = seed()
+            step = vmapped_superstep(p, ops=ops)
+            for _ in range(3):
+                qs, stats = step(qs)
+            out[backend] = qs
+        np.testing.assert_array_equal(np.asarray(out["reference"].size),
+                                      np.asarray(out["relaxed"].size))
+        np.testing.assert_array_equal(np.asarray(out["reference"].buf),
+                                      np.asarray(out["relaxed"].buf))

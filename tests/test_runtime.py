@@ -2,9 +2,9 @@
 (per-round, fused, and early-exit fused), backend-dispatch parity
 (pallas-routed vs reference BulkOps for steal/push/pop on dynamic
 cursors straddling block boundaries), and donate= vs pure equivalence.
-Executor tests are parametrized over ``backend in ("reference", "auto")``
-— the oracle and the geometry-resolved routing must be observationally
-identical."""
+Executor tests are parametrized over ``backend in ("reference", "auto",
+"relaxed")`` — the oracle, the geometry-resolved routing and the
+fence-free relaxed backend must be observationally identical."""
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from repro.kernels.queue_steal.ref import ring_gather_ref
 from repro.runtime import AdaptiveConfig, StealRuntime
 
 SPEC = jax.ShapeDtypeStruct((), jnp.int32)
-BACKENDS = ("reference", "auto")
+BACKENDS = ("reference", "auto", "relaxed")
 REF = bulk_ops.make_ops("reference")
 PALLAS = bulk_ops.make_ops("pallas")
 

@@ -87,6 +87,38 @@ def test_cluster_serves_all_with_straggler():
     assert st_["completed"][1] > st_["completed"][0]
 
 
+def test_cluster_on_device_admission_lanes():
+    """``ServeCluster(execution="vmap")`` swaps the host AdmissionMaster
+    for ``repro.distributed.RuntimeAdmissionMaster``: request IDs live
+    on executor lanes, every rebalance is a real device superstep, and
+    the cluster still serves everything (the "mesh" flavour of the same
+    master is exercised on the 8-device lane by test_distributed.py)."""
+    from repro.distributed.serve import RuntimeAdmissionMaster
+
+    cfg = configs.reduced(configs.get("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reps = [Replica(model, params, wave_size=4, max_seq=64)
+            for _ in range(2)]
+    reps[0].speed = 0.25   # straggler
+    cluster = ServeCluster(reps, rebalance_rounds=2, execution="vmap",
+                           admission_capacity=64)
+    assert isinstance(cluster.master, RuntimeAdmissionMaster)
+    reqs = [Request(prompt=[1, 2], max_new=2) for _ in range(12)]
+    cluster.submit(reqs)
+    done = cluster.run_until_drained()
+    assert len(done) == 12
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    st_ = cluster.master.stats()
+    assert st_["execution"] == "vmap"
+    assert st_["stolen"] > 0, "device master never rebalanced"
+    # waves and REAL executor rounds share one telemetry stream
+    tel = cluster.telemetry
+    assert tel is cluster.master.runtime.telemetry
+    assert len(tel.waves) > 0 and len(tel.rounds) > 0
+    assert tel.total_served == 12
+
+
 def test_cluster_waves_flow_through_executor_telemetry():
     """Every cluster tick appends one WaveRecord to the SAME telemetry
     stream the master's rebalance rounds write — one unified source."""
