@@ -8,6 +8,7 @@
       [--out BENCH_PR4.json]
   PYTHONPATH=src python -m benchmarks.run --mesh [--tiny] \
       [--out BENCH_PR5.json]
+  PYTHONPATH=src python -m benchmarks.run --check
 
 ``--json`` runs the figures that seed the repo's perf trajectory (Fig. 6
 push latency incl. the backend sweep, Fig. 7 steal latency, the Fig. 9
@@ -163,6 +164,41 @@ def run_adaptive_sweep(out: str, tiny: bool) -> int:
     return 0
 
 
+def run_check() -> int:
+    """Tiny Fig. 9 smoke under the conservation sanitizer: the same
+    device workload runs unchecked (baseline wall) and with REPRO_CHECK=1
+    (every BulkOps call validated, superstep conservation callbacks on),
+    asserts zero violations, and reports the sanitizer overhead."""
+    import os
+
+    from benchmarks import fig9_dag
+    from repro.analysis import sanitize
+
+    had = os.environ.pop("REPRO_CHECK", None)
+    try:
+        t0 = time.time()
+        _, base = fig9_dag.device_run(tiny=True)
+        plain_s = time.time() - t0
+
+        os.environ["REPRO_CHECK"] = "1"
+        sanitize.reset_violations()
+        t0 = time.time()
+        _, checked = fig9_dag.device_run(tiny=True)
+        checked_s = time.time() - t0
+        sanitize.assert_clean()
+    finally:
+        if had is not None:
+            os.environ["REPRO_CHECK"] = had
+        else:
+            os.environ.pop("REPRO_CHECK", None)
+    print(f"[benchmarks] --check: 0 violations "
+          f"(fused speedup {base['fused_speedup']:.2f}x unchecked / "
+          f"{checked['fused_speedup']:.2f}x checked; sanitizer overhead "
+          f"{checked_s / max(plain_s, 1e-9):.1f}x wall, "
+          f"{plain_s:.1f}s -> {checked_s:.1f}s)")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -181,11 +217,17 @@ def main():
                     help="Fig. 11 vmap-lane vs shard_map executor "
                          "comparison (claims fake host devices; run as "
                          "its own process) -> BENCH_PR5.json")
+    ap.add_argument("--check", action="store_true",
+                    help="tiny Fig. 9 smoke under the conservation "
+                         "sanitizer (REPRO_CHECK=1); fails on any "
+                         "invariant violation and reports the overhead")
     ap.add_argument("--out", default=None,
                     help="output path for --json / --sweep-adaptive / "
                          "--scaling")
     args = ap.parse_args()
 
+    if args.check:
+        return run_check()
     if args.mesh:
         return run_mesh(args.out or "BENCH_PR5.json", args.tiny)
     if args.scaling:

@@ -1,0 +1,30 @@
+"""``repro.analysis`` — the machine-checked correctness layer.
+
+The paper argues linearizability and lock-freedom *informally*; this
+package turns the sketch into CI-enforced fact, three ways:
+
+* :mod:`repro.analysis.linearize` — a small-step operational model of
+  :class:`~repro.core.ops.QueueState` checked against a sequential
+  specification over exhaustive owner/stealer interleavings on small
+  geometries.  Exact linearizability for the fenced backends; the
+  bounded-multiplicity contract for the fence-free ``relaxed`` backend.
+* :mod:`repro.analysis.lint` — an AST-level static pass (no execution):
+  kernel-package completeness (geometry predicate + jnp oracle + parity
+  test), ``input_output_aliases`` ↔ ``donate=`` mirroring,
+  use-after-donate, and leftover ``use_kernel``-era patterns.
+* :mod:`repro.analysis.sanitize` — the runtime sanitizer: ``REPRO_CHECK=1``
+  (or ``make_ops(..., check=True)``) wraps every backend op in invariant
+  checks — conservation of tagged items, cursor monotonicity, dead rows
+  zeroed, spill/refill accounting for :class:`~repro.core.queue.PagedQueue`.
+
+Each pass has a CLI (``python -m repro.analysis.lint`` /
+``python -m repro.analysis.linearize``) wired into the CI ``analysis``
+lane; DESIGN.md §7 documents the model and what each check means.
+"""
+
+from repro.analysis.sanitize import (CheckedBulkOps, SanitizerError,
+                                     assert_clean, checking_enabled,
+                                     reset_violations, violations)
+
+__all__ = ["CheckedBulkOps", "SanitizerError", "assert_clean",
+           "checking_enabled", "reset_violations", "violations"]

@@ -1,0 +1,463 @@
+"""Static invariant lint for the kernel/backend contract (AST only).
+
+The BulkOps registry (PR 3) and the donation contract rest on three
+conventions that nothing used to enforce mechanically.  This pass walks
+the source tree **without executing anything** and checks:
+
+``K1`` — kernel-package completeness
+    Every package under ``src/repro/kernels/`` that ships a ``kernel.py``
+    must (a) register a geometry predicate (a function whose name ends in
+    ``_supported``) in that ``kernel.py``, (b) ship a jnp oracle
+    (``ref.py`` defining at least one function), and (c) be exercised by
+    a parity test (some file under ``tests/`` references
+    ``kernels.<pkg>``).  The predicate is what lets dispatchers fall back
+    to the oracle instead of tripping a kernel assert mid-trace.
+
+``K2`` — donation mirror
+    Every kernel that declares ``input_output_aliases`` writes its output
+    in place, which is only sound when the caller's ring buffer is
+    actually donated.  For each aliasing kernel package, the BulkOps ops
+    it serves must appear in the ``_donating`` jit namespace with
+    ``donate_argnums`` set, and the corresponding ``BulkOps`` method must
+    expose a ``donate`` keyword.
+
+``D1`` — use-after-donate
+    A value passed as the queue-state argument of a ``donate=True`` call
+    must not be read again in the same scope before being rebound: after
+    donation the old buffer may have been overwritten in place.  The scan
+    is linear per function scope, models execution order inside a
+    statement (values load before targets bind, so the idiomatic
+    ``q, out = ops.push(q, ..., donate=True)`` is clean), and tracks
+    dotted names (``self.state``).
+
+``U1`` — ``use_kernel``-era patterns
+    The pre-BulkOps dialect (``use_kernel=`` keywords, ``*_inplace``
+    function names) was removed at PR 3; any syntactic reappearance is
+    flagged.  Docstrings and comments are naturally exempt (AST).
+
+CLI::
+
+    python -m repro.analysis.lint [paths...]   # default: src benchmarks examples
+
+Exit status 1 iff any finding.  Wired into CI's ``analysis`` lane.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, List, Optional
+
+__all__ = ["Finding", "lint_paths", "lint_file", "main"]
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+# K2: which BulkOps ops each in-place (aliasing) kernel package serves.
+# Only packages whose kernel.py declares input_output_aliases are held
+# to the mirror; this table says which methods must then be donatable.
+ALIASING_OPS = {
+    "queue_push": ("push",),
+    "queue_transfer": ("transfer",),
+    "queue_steal": ("steal", "steal_exact"),
+    "queue_pop": ("pop", "pop_bulk"),
+}
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _parse(path: Path) -> Optional[ast.Module]:
+    try:
+        return ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError:
+        return None
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a`` / ``a.b.c`` -> dotted name string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO_ROOT))
+    except ValueError:
+        return str(path)
+
+
+# ---------------------------------------------------------------------------
+# K1: kernel-package completeness
+# ---------------------------------------------------------------------------
+
+
+def _check_kernel_packages(root: Path, tests_dir: Path) -> List[Finding]:
+    kernels = root / "src" / "repro" / "kernels"
+    if not kernels.is_dir():
+        return []
+    test_text = "".join(p.read_text() for p in sorted(tests_dir.glob("**/*.py"))) \
+        if tests_dir.is_dir() else ""
+    out: List[Finding] = []
+    for pkg in sorted(p for p in kernels.iterdir() if p.is_dir()):
+        kernel_py = pkg / "kernel.py"
+        if not kernel_py.is_file():
+            continue
+        tree = _parse(kernel_py)
+        if tree is None:
+            out.append(Finding("K1", _rel(kernel_py), 1, "kernel.py does not parse"))
+            continue
+        preds = [n for n in ast.walk(tree)
+                 if isinstance(n, ast.FunctionDef) and n.name.endswith("_supported")]
+        if not preds:
+            out.append(Finding(
+                "K1", _rel(kernel_py), 1,
+                f"kernel package '{pkg.name}' registers no geometry predicate "
+                f"(no function ending '_supported' in kernel.py) — dispatchers "
+                f"cannot route around its asserts"))
+        ref_py = pkg / "ref.py"
+        ref_tree = _parse(ref_py) if ref_py.is_file() else None
+        has_ref = ref_tree is not None and any(
+            isinstance(n, ast.FunctionDef) for n in ast.walk(ref_tree))
+        if not has_ref:
+            out.append(Finding(
+                "K1", _rel(pkg / "ref.py"), 1,
+                f"kernel package '{pkg.name}' ships no jnp oracle "
+                f"(ref.py missing or defines no function)"))
+        if f"kernels.{pkg.name}" not in test_text:
+            out.append(Finding(
+                "K1", _rel(pkg), 1,
+                f"kernel package '{pkg.name}' has no parity test "
+                f"(nothing under tests/ references kernels.{pkg.name})"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# K2: input_output_aliases <-> donate mirror
+# ---------------------------------------------------------------------------
+
+
+def _kernel_aliases(kernel_py: Path) -> bool:
+    tree = _parse(kernel_py)
+    if tree is None:
+        return False
+    for node in ast.walk(tree):
+        if isinstance(node, ast.keyword) and node.arg == "input_output_aliases":
+            return True
+    return False
+
+
+def _donating_namespace_ops(ops_py: Path) -> dict:
+    """Map op name -> bool(donate_argnums present) from ``_donating``."""
+    tree = _parse(ops_py)
+    found: dict = {}
+    if tree is None:
+        return found
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == "_donating":
+            for call in ast.walk(node):
+                if not (isinstance(call, ast.Call)
+                        and isinstance(call.func, ast.Attribute)):
+                    continue
+                # the SimpleNamespace(...) call carries op=jax.jit(...) kwargs
+                if call.func.attr != "SimpleNamespace":
+                    continue
+                for kw in call.keywords:
+                    if kw.arg is None:
+                        continue
+                    donated = any(
+                        isinstance(inner, ast.keyword)
+                        and inner.arg == "donate_argnums"
+                        for inner in ast.walk(kw.value))
+                    found[kw.arg] = donated
+    return found
+
+
+def _bulkops_donate_kwargs(ops_py: Path) -> set:
+    """Names of BulkOps methods exposing a ``donate`` keyword."""
+    tree = _parse(ops_py)
+    out: set = set()
+    if tree is None:
+        return out
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "BulkOps":
+            for fn in node.body:
+                if isinstance(fn, ast.FunctionDef) and any(
+                        a.arg == "donate" for a in fn.args.kwonlyargs + fn.args.args):
+                    out.add(fn.name)
+    return out
+
+
+def _check_donation_mirror(root: Path) -> List[Finding]:
+    kernels = root / "src" / "repro" / "kernels"
+    ops_py = root / "src" / "repro" / "core" / "ops.py"
+    if not (kernels.is_dir() and ops_py.is_file()):
+        return []
+    namespace = _donating_namespace_ops(ops_py)
+    donate_kwargs = _bulkops_donate_kwargs(ops_py)
+    out: List[Finding] = []
+    for pkg in sorted(p for p in kernels.iterdir() if p.is_dir()):
+        kernel_py = pkg / "kernel.py"
+        if not (kernel_py.is_file() and _kernel_aliases(kernel_py)):
+            continue
+        served = ALIASING_OPS.get(pkg.name)
+        if served is None:
+            out.append(Finding(
+                "K2", _rel(kernel_py), 1,
+                f"kernel package '{pkg.name}' declares input_output_aliases "
+                f"but is not in the lint ALIASING_OPS table — add its served "
+                f"BulkOps ops so the donation mirror is checked"))
+            continue
+        for op in served:
+            if not namespace.get(op, False):
+                out.append(Finding(
+                    "K2", _rel(ops_py), 1,
+                    f"kernel '{pkg.name}' aliases its ring in place but "
+                    f"_donating has no donate_argnums-jitted '{op}' — the "
+                    f"in-place write is unsound without donation"))
+            if op not in donate_kwargs:
+                out.append(Finding(
+                    "K2", _rel(ops_py), 1,
+                    f"kernel '{pkg.name}' aliases its ring in place but "
+                    f"BulkOps.{op} exposes no donate= keyword"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# D1: use-after-donate
+# ---------------------------------------------------------------------------
+
+
+class _ScopeScanner:
+    """Linear event scan of one function scope (or module top level).
+
+    Events, in execution order: ``load(name)``, ``donate(name)``,
+    ``bind(name)``.  Inside a statement, value expressions emit their
+    loads (and donates) before assignment targets bind — so the idiom
+    ``q, out = ops.push(q, batch, n, donate=True)`` donates then
+    immediately rebinds and stays clean, while a later bare read of a
+    still-donated name is flagged.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.donated: dict = {}  # dotted name -> donate lineno
+        self.findings: List[Finding] = []
+
+    # -- events --
+
+    def load(self, name: str, line: int) -> None:
+        for don, dline in self.donated.items():
+            if name == don or name.startswith(don + "."):
+                self.findings.append(Finding(
+                    "D1", self.path, line,
+                    f"'{name}' is read after being donated at line {dline} "
+                    f"(donate=True aliases the buffer in place; rebind the "
+                    f"name from the op's return value first)"))
+
+    def donate(self, name: str, line: int) -> None:
+        self.donated[name] = line
+
+    def bind(self, name: str) -> None:
+        self.donated.pop(name, None)
+
+    # -- expression walk (loads + donates, execution order) --
+
+    def expr(self, node: ast.AST) -> None:
+        if node is None:
+            return
+        dotted = _dotted(node)
+        if dotted is not None and isinstance(getattr(node, "ctx", None), ast.Load):
+            self.load(dotted, node.lineno)
+            return  # a.b.c counted once, not per attribute level
+        if isinstance(node, ast.Call):
+            self.expr(node.func)
+            for a in node.args:
+                self.expr(a)
+            for kw in node.keywords:
+                self.expr(kw.value)
+            donate_kw = next(
+                (kw for kw in node.keywords if kw.arg == "donate"), None)
+            if donate_kw is not None and not (
+                    isinstance(donate_kw.value, ast.Constant)
+                    and donate_kw.value.value is False) and node.args:
+                target = _dotted(node.args[0])
+                if target is not None:
+                    self.donate(target, node.lineno)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                             ast.ClassDef)):
+            return  # separate scope
+        for child in ast.iter_child_nodes(node):
+            self.expr(child)
+
+    # -- statement walk --
+
+    def bind_target(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for elt in node.elts:
+                self.bind_target(elt)
+            return
+        if isinstance(node, ast.Starred):
+            self.bind_target(node.value)
+            return
+        dotted = _dotted(node)
+        if dotted is not None:
+            self.bind(dotted)
+        else:  # subscript etc: value part is a load
+            self.expr(node)
+
+    def stmt(self, node: ast.stmt) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested scope scanned separately
+        if isinstance(node, ast.Assign):
+            self.expr(node.value)
+            for t in node.targets:
+                self.bind_target(t)
+            return
+        if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            self.expr(node.value)
+            self.bind_target(node.target)
+            return
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            self.expr(node.iter)
+            self.bind_target(node.target)
+            for s in node.body + node.orelse:
+                self.stmt(s)
+            return
+        if isinstance(node, (ast.If, ast.While)):
+            self.expr(node.test)
+            for s in node.body + node.orelse:
+                self.stmt(s)
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self.expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self.bind_target(item.optional_vars)
+            for s in node.body:
+                self.stmt(s)
+            return
+        if isinstance(node, ast.Try):
+            for s in node.body + node.orelse + node.finalbody:
+                self.stmt(s)
+            for h in node.handlers:
+                for s in h.body:
+                    self.stmt(s)
+            return
+        # Return / Expr / Assert / Raise / Delete / ...: walk expressions
+        for child in ast.iter_child_nodes(node):
+            self.expr(child)
+
+
+def _check_use_after_donate(path: Path, tree: ast.Module) -> List[Finding]:
+    findings: List[Finding] = []
+    scopes: List[List[ast.stmt]] = [list(tree.body)]
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scopes.append(list(node.body))
+    for body in scopes:
+        sc = _ScopeScanner(_rel(path))
+        for stmt in body:
+            sc.stmt(stmt)
+        findings.extend(sc.findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# U1: use_kernel-era patterns
+# ---------------------------------------------------------------------------
+
+
+def _check_use_kernel_era(path: Path, tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    rel = _rel(path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.keyword) and node.arg == "use_kernel":
+            out.append(Finding(
+                "U1", rel, node.value.lineno,
+                "use_kernel= keyword — the flag dialect was removed at PR 3; "
+                "construct a backend with make_ops(...) instead"))
+        if isinstance(node, ast.FunctionDef) and node.name.endswith("_inplace"):
+            out.append(Finding(
+                "U1", rel, node.lineno,
+                f"'{node.name}' — *_inplace variants were removed at PR 3; "
+                f"use the backend's donate=True call shape"))
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                if alias.name.endswith("_inplace"):
+                    out.append(Finding(
+                        "U1", rel, node.lineno,
+                        f"import of '{alias.name}' — *_inplace variants were "
+                        f"removed at PR 3"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def lint_file(path: Path) -> List[Finding]:
+    """Per-file rules only (D1, U1)."""
+    tree = _parse(path)
+    if tree is None:
+        return [Finding("E0", _rel(path), 1, "file does not parse")]
+    return _check_use_after_donate(path, tree) + _check_use_kernel_era(path, tree)
+
+
+def lint_paths(paths: Iterable[Path], *, root: Path = REPO_ROOT) -> List[Finding]:
+    findings: List[Finding] = []
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.glob("**/*.py")))
+        elif p.is_file():
+            files.append(p)
+    for f in files:
+        findings.extend(lint_file(f))
+    findings.extend(_check_kernel_packages(root, root / "tests"))
+    findings.extend(_check_donation_mirror(root))
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    paths = [Path(a) for a in argv] if argv else [
+        REPO_ROOT / d for d in DEFAULT_PATHS]
+    findings = lint_paths(paths)
+    for f in findings:
+        print(f)
+    n_files = sum(len(list(Path(p).glob('**/*.py'))) if Path(p).is_dir() else 1
+                  for p in paths)
+    if findings:
+        print(f"lint: {len(findings)} finding(s) across {n_files} file(s)")
+        return 1
+    print(f"lint: clean ({n_files} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

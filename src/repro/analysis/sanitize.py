@@ -1,0 +1,551 @@
+"""Runtime sanitizer: every queue op validated against its contract.
+
+``REPRO_CHECK=1`` (or ``make_ops(..., check=True)``) makes
+:func:`repro.core.ops.make_ops` wrap whatever backend it resolves in a
+:class:`CheckedBulkOps`.  The wrapper delegates the real work to the
+wrapped backend unchanged and validates the result against the
+sequential contract the model checker (:mod:`repro.analysis.linearize`)
+proves on small geometries — so production-sized runs get the same
+invariants, spot-checked live:
+
+* **concrete states** (host-driven calls: seeding, draining,
+  ``PagedQueue`` paging, the model checker itself) get the FULL check —
+  exact content conservation (the op's output rows are exactly the
+  right slice of the input's live region), clamp arithmetic, cursor
+  monotonicity (``lo' == (lo + n) % cap`` on the steal side, ``lo``
+  frozen elsewhere), dead batch rows zeroed;
+* **traced states** (inside ``jit``/``vmap``/``scan`` — the superstep
+  and the fused round loop) get the scalar subset via
+  ``jax.debug.callback``: count/cursor/bounds arithmetic per op, which
+  survives batching (the callback sees stacked lanes and checks them
+  all).
+
+Violations are *recorded*, not raised from inside a trace (an exception
+inside a callback would poison async dispatch): host checkpoints —
+``StealRuntime.round`` / ``run_fused``, ``benchmarks/run.py --check``,
+:func:`assert_clean` — drain the log and raise :class:`SanitizerError`.
+Eager (concrete-path) violations raise immediately, naming the op.
+
+The executor adds two cross-op checks when the sanitizer is on: per
+round, the superstep must conserve ``sum(sizes)`` (flat mode), and for
+pure rebalancing rounds (no worker body) the *multiset of live items*
+across all lanes must be exactly preserved — the tagged-id conservation
+argument of the paper, checked on real payload bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops as bulk_ops
+from repro.core.ops import QueueState
+
+__all__ = [
+    "CheckedBulkOps",
+    "SanitizerError",
+    "checking_enabled",
+    "violations",
+    "reset_violations",
+    "assert_clean",
+    "raise_pending",
+    "record_violation",
+    "check_round_stats",
+    "trace_check_superstep",
+    "queues_fingerprint",
+    "check_conserved",
+]
+
+Pytree = Any
+
+
+class SanitizerError(AssertionError):
+    """A queue-op invariant did not hold at runtime."""
+
+
+_VIOLATIONS: List[str] = []
+
+
+def checking_enabled() -> bool:
+    """Whether ``REPRO_CHECK`` asks for the sanitizer (the same switch
+    :func:`repro.core.ops.make_ops` consults)."""
+    return bulk_ops._env_check()
+
+
+def violations() -> Tuple[str, ...]:
+    return tuple(_VIOLATIONS)
+
+
+def reset_violations() -> None:
+    _VIOLATIONS.clear()
+
+
+def record_violation(msg: str, *, eager: bool = False) -> None:
+    """Log one violation.  ``eager=True`` (host-path checks) raises
+    immediately; traced checks only record — a checkpoint raises."""
+    _VIOLATIONS.append(msg)
+    if eager:
+        raise SanitizerError(msg)
+
+
+def raise_pending(context: str) -> None:
+    """Raise (and clear) any violations recorded since the last
+    checkpoint — called by the executor after each dispatch completes,
+    so traced-callback findings surface at a useful host frame."""
+    if _VIOLATIONS:
+        msgs = list(_VIOLATIONS)
+        _VIOLATIONS.clear()
+        raise SanitizerError(
+            f"{len(msgs)} invariant violation(s) at {context}:\n  "
+            + "\n  ".join(msgs))
+
+
+def assert_clean() -> None:
+    """Final checkpoint: raise if anything was recorded, else no-op."""
+    raise_pending("assert_clean")
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _is_traced(*vals) -> bool:
+    return any(isinstance(v, jax.core.Tracer) for v in vals)
+
+
+def _capacity(q: QueueState) -> int:
+    return jax.tree_util.tree_leaves(q.buf)[0].shape[0]
+
+
+def _live_rows(q: QueueState) -> List[np.ndarray]:
+    """Host copies of the live region per buffer leaf, queue order
+    (oldest first) — snapshot BEFORE a donating call may invalidate."""
+    cap = _capacity(q)
+    lo, size = int(q.lo), int(q.size)
+    idx = np.array([(lo + i) % cap for i in range(size)], np.int64)
+    return [np.asarray(leaf)[idx].copy()
+            for leaf in jax.tree_util.tree_leaves(q.buf)]
+
+
+def _batch_rows(batch: Pytree, sl) -> List[np.ndarray]:
+    return [np.asarray(leaf)[sl].copy()
+            for leaf in jax.tree_util.tree_leaves(batch)]
+
+
+def _rows_equal(a: Sequence[np.ndarray], b: Sequence[np.ndarray]) -> bool:
+    return (len(a) == len(b)
+            and all(x.shape == y.shape and np.array_equal(x, y)
+                    for x, y in zip(a, b)))
+
+
+def _concat(a: Sequence[np.ndarray], b: Sequence[np.ndarray]
+            ) -> List[np.ndarray]:
+    return [np.concatenate([x, y], axis=0) for x, y in zip(a, b)]
+
+
+def _zero_rows(batch: Pytree, sl) -> bool:
+    return all(not np.any(r) for r in _batch_rows(batch, sl))
+
+
+def _mirror_steal_plan(size: int, proportion, queue_limit: int,
+                       max_steal: int) -> int:
+    """Host mirror of ``ops._steal_plan``'s float32 arithmetic (the
+    relaxed claim settles to the identical count — see linearize)."""
+    if isinstance(proportion, (int, float)):
+        mult = np.float32(1.0 - float(proportion))
+    else:  # concrete f32 scalar: subtract in f32 like the traced op
+        mult = np.float32(1.0) - np.float32(np.asarray(proportion))
+    keep = int(np.floor(np.float32(size) * mult))
+    n = int(np.clip(size - keep, 0, min(size, max_steal)))
+    return 0 if size < queue_limit else n
+
+
+# ---------------------------------------------------------------------------
+# Traced-path scalar checks (jax.debug.callback)
+# ---------------------------------------------------------------------------
+
+
+def _on_scalars(op: str, cap: int, lo_b, size_b, lo_a, size_a, n) -> None:
+    lo_b, size_b, lo_a, size_a, n = (np.asarray(x).reshape(-1)
+                                     for x in (lo_b, size_b, lo_a, size_a, n))
+
+    def bad(cond: np.ndarray, what: str) -> None:
+        if np.any(cond):
+            lanes = np.nonzero(cond)[0][:4].tolist()
+            record_violation(
+                f"{op}: {what} (cap={cap}, lanes~{lanes}, "
+                f"lo {lo_b[lanes[0]]}->{lo_a[lanes[0]]}, "
+                f"size {size_b[lanes[0]]}->{size_a[lanes[0]]}, "
+                f"n={n[lanes[0]]})")
+
+    bad(n < 0, "negative count")
+    bad((size_a < 0) | (size_a > cap), "size left [0, capacity]")
+    bad((size_b < 0) | (size_b > cap), "size entered op outside [0, capacity]")
+    if op in ("steal", "steal_exact"):
+        bad(size_a != size_b - n, "size != size - n after steal")
+        bad(lo_a != (lo_b + n) % cap, "steal cursor not bumped by n")
+    elif op in ("push", "transfer"):
+        bad(size_a != size_b + n, "size != size + n after push/splice")
+        bad(lo_a != lo_b, "owner op moved the steal cursor")
+    elif op in ("pop", "pop_bulk"):
+        bad(size_a != size_b - n, "size != size - n after pop")
+        bad(lo_a != lo_b, "owner op moved the steal cursor")
+
+
+def _trace_check(op: str, cap: int, lo_b, size_b,
+                 q_after: QueueState, n) -> None:
+    """``lo_b`` / ``size_b`` are cursor values captured BEFORE the op ran
+    (the op may have donated the input state, so the state itself must
+    not be read afterwards — the lint pass's D1 rule)."""
+    jax.debug.callback(functools.partial(_on_scalars, op, cap),
+                       lo_b, size_b, q_after.lo, q_after.size,
+                       jnp.asarray(n, jnp.int32))
+
+
+def trace_check_superstep(sizes_before, sizes_after, *, capacity: int) -> None:
+    """In-trace conservation check for one superstep level: the gathered
+    size vectors (replicated per lane) must have equal sums and stay in
+    ``[0, capacity]`` — inserted by ``master.superstep`` at trace time
+    when the sanitizer is on (valid at BOTH hierarchical levels: each
+    level's exchange conserves that level's effective sizes)."""
+
+    def _cb(before, after):
+        before = np.asarray(before)
+        after = np.asarray(after)
+        # Replicated vectors may arrive lane-stacked; compare flat sums
+        # lane-by-lane along the last (gathered) axis.
+        b = before.reshape(-1, before.shape[-1])
+        a = after.reshape(-1, after.shape[-1])
+        if np.any(b.sum(axis=-1) != a.sum(axis=-1)):
+            record_violation(
+                f"superstep: sum(sizes) not conserved "
+                f"({b.sum(axis=-1).tolist()} -> {a.sum(axis=-1).tolist()})")
+        if np.any((a < 0) | (a > capacity)):
+            record_violation(
+                f"superstep: sizes_after outside [0, {capacity}]")
+
+    jax.debug.callback(_cb, sizes_before, sizes_after)
+
+
+# ---------------------------------------------------------------------------
+# The checked backend wrapper
+# ---------------------------------------------------------------------------
+
+
+class CheckedBulkOps(bulk_ops.BulkOps):
+    """Delegating wrapper: same :class:`~repro.core.ops.BulkOps` surface,
+    same results, every call validated (see module docstring).  Obtain
+    via ``make_ops(..., check=True)`` or ``REPRO_CHECK=1``."""
+
+    def __init__(self, inner: bulk_ops.BulkOps):
+        super().__init__(inner.name, kernel_push=inner.kernel_push,
+                         kernel_pop=inner.kernel_pop,
+                         kernel_steal=inner.kernel_steal,
+                         kernel_transfer=inner.kernel_transfer)
+        self.inner = inner
+
+    @property
+    def resolved(self) -> str:
+        return self.inner.resolved
+
+    def __repr__(self) -> str:
+        return f"CheckedBulkOps({self.inner!r})"
+
+    def __getattr__(self, name: str):
+        # Backend extras (e.g. RelaxedBulkOps.multiplicity_bound) pass
+        # through; only called for attributes not found normally.
+        return getattr(self.inner, name)
+
+    # -- ops -----------------------------------------------------------------
+
+    def push(self, q, batch, n, *, donate: bool = False):
+        traced = _is_traced(q.size, q.lo, n)
+        cap = _capacity(q)
+        lo0, size0 = q.lo, q.size  # before the (possibly donating) op
+        if not traced:
+            size_b, lo_b = int(q.size), int(q.lo)
+            live_b = _live_rows(q)
+            bsz = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            n_req = int(n)
+            rows_b = _batch_rows(batch, slice(None))
+        q2, n_pushed = self.inner.push(q, batch, n, donate=donate)
+        if traced:
+            _trace_check("push", cap, lo0, size0, q2, n_pushed)
+            return q2, n_pushed
+        exp = max(min(n_req, cap - size_b), 0)
+        got = int(n_pushed)
+        if got != exp:
+            record_violation(
+                f"push: n_pushed={got}, expected clamp "
+                f"min(n={n_req}, space={cap - size_b}) = {exp}", eager=True)
+        if exp > bsz:
+            record_violation(
+                f"push: n={n_req} settled at {exp} > batch rows {bsz} — "
+                f"garbage rows became live (caller contract: n <= B)",
+                eager=True)
+        self._owner_cursor(q2, lo_b, size_b + got, "push")
+        live_a = _live_rows(q2)
+        want = _concat(live_b, [r[:got] for r in rows_b])
+        if not _rows_equal(live_a, want):
+            record_violation(
+                "push: live region != old live ++ batch[:n] "
+                f"(lo={lo_b}, size {size_b}->{size_b + got})", eager=True)
+        return q2, n_pushed
+
+    def pop(self, q, *, donate: bool = False):
+        traced = _is_traced(q.size, q.lo)
+        cap = _capacity(q)
+        lo0, size0 = q.lo, q.size
+        if not traced:
+            size_b, lo_b = int(q.size), int(q.lo)
+            live_b = _live_rows(q)
+        q2, item, valid = self.inner.pop(q, donate=donate)
+        if traced:
+            _trace_check("pop", cap, lo0, size0, q2,
+                         jnp.asarray(valid, jnp.int32))
+            return q2, item, valid
+        exp_valid = size_b > 0
+        if bool(valid) != exp_valid:
+            record_violation(
+                f"pop: valid={bool(valid)} on size={size_b}", eager=True)
+        got = int(exp_valid)
+        self._owner_cursor(q2, lo_b, size_b - got, "pop")
+        if exp_valid:
+            item_rows = [np.asarray(leaf)[None].copy()
+                         for leaf in jax.tree_util.tree_leaves(item)]
+            newest = [r[-1:] for r in live_b]
+            if not _rows_equal(item_rows, newest):
+                record_violation("pop: item != newest live row", eager=True)
+        if not _rows_equal(_live_rows(q2), [r[:size_b - got] for r in live_b]):
+            record_violation("pop: surviving live region changed",
+                             eager=True)
+        return q2, item, valid
+
+    def pop_bulk(self, q, max_n: int, n, *, donate: bool = False):
+        traced = _is_traced(q.size, q.lo, n)
+        cap = _capacity(q)
+        lo0, size0 = q.lo, q.size
+        if not traced:
+            size_b, lo_b, n_req = int(q.size), int(q.lo), int(n)
+            live_b = _live_rows(q)
+        q2, batch, n_popped = self.inner.pop_bulk(q, max_n, n, donate=donate)
+        if traced:
+            _trace_check("pop_bulk", cap, lo0, size0, q2, n_popped)
+            return q2, batch, n_popped
+        exp = max(min(n_req, size_b, max_n), 0)
+        got = int(n_popped)
+        if got != exp:
+            record_violation(
+                f"pop_bulk: n_popped={got}, expected "
+                f"min(n={n_req}, size={size_b}, max_n={max_n}) = {exp}",
+                eager=True)
+        self._owner_cursor(q2, lo_b, size_b - got, "pop_bulk")
+        self._block_out("pop_bulk", batch, got,
+                        [r[size_b - got:size_b] for r in live_b])
+        if not _rows_equal(_live_rows(q2), [r[:size_b - got] for r in live_b]):
+            record_violation("pop_bulk: surviving live region changed",
+                             eager=True)
+        return q2, batch, n_popped
+
+    def steal(self, q, proportion, *, max_steal: int,
+              queue_limit: int = bulk_ops.DEFAULT_QUEUE_LIMIT,
+              donate: bool = False):
+        traced = _is_traced(q.size, q.lo, proportion)
+        cap = _capacity(q)
+        lo0, size0 = q.lo, q.size
+        if not traced:
+            size_b, lo_b = int(q.size), int(q.lo)
+            live_b = _live_rows(q)
+        q2, batch, n = self.inner.steal(q, proportion, max_steal=max_steal,
+                                        queue_limit=queue_limit,
+                                        donate=donate)
+        if traced:
+            _trace_check("steal", cap, lo0, size0, q2, n)
+            return q2, batch, n
+        exp = _mirror_steal_plan(size_b, proportion, queue_limit, max_steal)
+        self._steal_checks("steal", q2, batch, int(n), exp, cap,
+                           lo_b, size_b, live_b)
+        return q2, batch, n
+
+    def steal_exact(self, q, n, *, max_steal: int, donate: bool = False):
+        traced = _is_traced(q.size, q.lo, n)
+        cap = _capacity(q)
+        lo0, size0 = q.lo, q.size
+        if not traced:
+            size_b, lo_b, n_req = int(q.size), int(q.lo), int(n)
+            live_b = _live_rows(q)
+        q2, batch, n_out = self.inner.steal_exact(q, n, max_steal=max_steal,
+                                                  donate=donate)
+        if traced:
+            _trace_check("steal_exact", cap, lo0, size0, q2, n_out)
+            return q2, batch, n_out
+        exp = int(np.clip(n_req, 0, min(size_b, max_steal)))
+        self._steal_checks("steal_exact", q2, batch, int(n_out), exp, cap,
+                           lo_b, size_b, live_b)
+        return q2, batch, n_out
+
+    def window(self, q, *, max_steal: int, donate: bool = False):
+        traced = _is_traced(q.size, q.lo)
+        if not traced:  # snapshot before the call: q must not outlive it
+            k = min(int(q.size), max_steal)
+            live_b = [r[:k] for r in _live_rows(q)]
+        window = self.inner.window(q, max_steal=max_steal, donate=donate)
+        if not traced:
+            if not _rows_equal(_batch_rows(window, slice(0, k)), live_b):
+                record_violation(
+                    "window: live prefix != queue's oldest rows",
+                    eager=True)
+        return window
+
+    def transfer(self, q, gathered, src_row, n, *, max_steal: int,
+                 donate: bool = False):
+        traced = _is_traced(q.size, q.lo, src_row, n)
+        cap = _capacity(q)
+        lo0, size0 = q.lo, q.size
+        if not traced:
+            size_b, lo_b, n_req = int(q.size), int(q.lo), int(n)
+            live_b = _live_rows(q)
+            src = [np.asarray(leaf)[int(src_row)].copy()
+                   for leaf in jax.tree_util.tree_leaves(gathered)]
+        q2, n_out = self.inner.transfer(q, gathered, src_row, n,
+                                        max_steal=max_steal, donate=donate)
+        if traced:
+            _trace_check("transfer", cap, lo0, size0, q2, n_out)
+            return q2, n_out
+        exp = max(min(n_req, cap - size_b, max_steal), 0)
+        got = int(n_out)
+        if got != exp:
+            record_violation(
+                f"transfer: n_spliced={got}, expected "
+                f"min(n={n_req}, space={cap - size_b}, "
+                f"max_steal={max_steal}) = {exp}", eager=True)
+        self._owner_cursor(q2, lo_b, size_b + got, "transfer")
+        if not _rows_equal(_live_rows(q2),
+                           _concat(live_b, [r[:got] for r in src])):
+            record_violation(
+                "transfer: live region != old live ++ gathered[src, :n]",
+                eager=True)
+        return q2, n_out
+
+    # -- shared eager assertions --------------------------------------------
+
+    @staticmethod
+    def _owner_cursor(q2, lo_b: int, size_exp: int, op: str) -> None:
+        if int(q2.lo) != lo_b:
+            record_violation(f"{op}: owner op moved the steal cursor "
+                             f"({lo_b} -> {int(q2.lo)})", eager=True)
+        if int(q2.size) != size_exp:
+            record_violation(f"{op}: size {int(q2.size)} != {size_exp}",
+                             eager=True)
+
+    @staticmethod
+    def _block_out(op: str, batch, n: int, want_rows) -> None:
+        if not _rows_equal(_batch_rows(batch, slice(0, n)), want_rows):
+            record_violation(f"{op}: batch[:n] != the detached live block",
+                             eager=True)
+        if not _zero_rows(batch, slice(n, None)):
+            record_violation(f"{op}: rows >= n not zeroed (dead rows must "
+                             f"be collective-safe)", eager=True)
+
+    def _steal_checks(self, op, q2, batch, got, exp, cap, lo_b, size_b,
+                      live_b) -> None:
+        if got != exp:
+            record_violation(f"{op}: n_stolen={got}, expected {exp}",
+                             eager=True)
+        if int(q2.lo) != (lo_b + got) % cap:
+            record_violation(
+                f"{op}: cursor lo {lo_b} -> {int(q2.lo)}, expected "
+                f"(lo + {got}) % {cap} = {(lo_b + got) % cap}", eager=True)
+        if int(q2.size) != size_b - got:
+            record_violation(
+                f"{op}: size {size_b} -> {int(q2.size)} != size - n",
+                eager=True)
+        self._block_out(op, batch, got, [r[:got] for r in live_b])
+        if not _rows_equal(_live_rows(q2), [r[got:] for r in live_b]):
+            record_violation(f"{op}: surviving live region changed",
+                             eager=True)
+
+
+# ---------------------------------------------------------------------------
+# Executor-level checks (host side, after read-back)
+# ---------------------------------------------------------------------------
+
+
+def check_round_stats(stats, *, n_workers: int, capacity: int,
+                      pod_size: Optional[int] = None,
+                      context: str = "round") -> None:
+    """Validate one round's :class:`~repro.core.master.RebalanceStats`
+    after host read-back.  Flat mode: the gathered size vectors are
+    replicated per lane — lane 0's row must conserve its sum and stay in
+    bounds; counters must be non-negative.  Hierarchical mode: lanes > 0
+    gathered sentinel sizes at the pod level, so only the counter-sign
+    checks apply (the in-trace superstep check still covers each level's
+    conservation)."""
+    n_steals = np.asarray(stats.n_steals).reshape(-1)
+    n_transferred = np.asarray(stats.n_transferred).reshape(-1)
+    if np.any(n_steals < 0) or np.any(n_transferred < 0):
+        record_violation(f"{context}: negative steal/transfer counters")
+    if pod_size is None:
+        before = np.asarray(stats.sizes_before)
+        after = np.asarray(stats.sizes_after)
+        b = before.reshape(-1, before.shape[-1])[0]
+        a = after.reshape(-1, after.shape[-1])[0]
+        if b.sum() != a.sum():
+            record_violation(
+                f"{context}: superstep lost items — sum(sizes) "
+                f"{int(b.sum())} -> {int(a.sum())}")
+        if np.any((a < 0) | (a > capacity)) or np.any(
+                (b < 0) | (b > capacity)):
+            record_violation(
+                f"{context}: sizes outside [0, {capacity}]")
+
+
+def _sorted_rows(a: np.ndarray) -> np.ndarray:
+    flat = np.ascontiguousarray(a.reshape(a.shape[0], -1))
+    if flat.shape[0] == 0:
+        return flat
+    return flat[np.lexsort(flat.T[::-1])]
+
+
+def queues_fingerprint(queues: QueueState) -> List[np.ndarray]:
+    """Order-independent multiset fingerprint of every live item across
+    stacked lanes (leading axis = lanes): per buffer leaf, the live rows
+    of all lanes concatenated and sorted lexicographically.  Two
+    fingerprints are equal iff the live-item multisets are equal — the
+    executor compares them across pure rebalancing rounds."""
+    lanes = jax.tree_util.tree_leaves(queues.buf)[0].shape[0]
+    los = np.asarray(queues.lo).reshape(-1)
+    sizes = np.asarray(queues.size).reshape(-1)
+    leaves = [np.asarray(leaf) for leaf in
+              jax.tree_util.tree_leaves(queues.buf)]
+    cap = leaves[0].shape[1]
+    out: List[np.ndarray] = []
+    for leaf in leaves:
+        rows = []
+        for w in range(lanes):
+            idx = (int(los[w]) + np.arange(int(sizes[w]))) % cap
+            rows.append(leaf[w][idx])
+        out.append(_sorted_rows(np.concatenate(rows, axis=0) if rows
+                                else leaf[:0]))
+    return out
+
+
+def check_conserved(before: List[np.ndarray], after: List[np.ndarray],
+                    *, context: str) -> None:
+    """Compare two :func:`queues_fingerprint` snapshots: a pure
+    rebalancing round must preserve the live-item multiset exactly."""
+    for i, (b, a) in enumerate(zip(before, after)):
+        if b.shape != a.shape:
+            record_violation(
+                f"{context}: live-item count changed on leaf {i} "
+                f"({b.shape[0]} -> {a.shape[0]} rows)")
+        elif not np.array_equal(b, a):
+            record_violation(
+                f"{context}: live-item multiset changed on leaf {i} "
+                f"(items duplicated or replaced)")

@@ -294,6 +294,13 @@ def superstep(
             f"unknown exchange {exchange!r}; expected 'compact' or 'dense'")
 
     sizes_after = lax.all_gather(q.size, axis_name)
+    if bulk_ops._env_check():
+        # Sanitizer on (REPRO_CHECK=1, decided at trace time): assert in
+        # trace that this level's exchange conserved its gathered sizes.
+        from repro.analysis import sanitize
+
+        cap = jax.tree_util.tree_leaves(q.buf)[0].shape[0]
+        sanitize.trace_check_superstep(sizes, sizes_after, capacity=cap)
     stats = RebalanceStats(
         sizes_before=sizes,
         sizes_after=sizes_after,

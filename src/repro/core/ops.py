@@ -64,6 +64,7 @@ from __future__ import annotations
 import functools
 import os
 import types
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -86,6 +87,8 @@ __all__ = [
     "kernel_transfer_available",
     "DEFAULT_QUEUE_LIMIT",
     "BACKEND_ENV_VAR",
+    "BackendFallbackWarning",
+    "reset_fallback_warnings",
 ]
 
 Pytree = Any
@@ -95,6 +98,34 @@ DEFAULT_QUEUE_LIMIT = 2
 
 # Environment override for what "auto" resolves to (CI's oracle lane).
 BACKEND_ENV_VAR = "REPRO_QUEUE_BACKEND"
+
+# Environment switch for the runtime sanitizer (repro.analysis.sanitize):
+# REPRO_CHECK=1 makes make_ops wrap every backend in invariant checks.
+CHECK_ENV_VAR = "REPRO_CHECK"
+
+
+class BackendFallbackWarning(UserWarning):
+    """A requested routing silently downgraded — ``"auto"`` resolved a
+    kernel op to the reference path because a geometry predicate rejected
+    the bound, ``"relaxed"`` fell back to the fenced reference routing,
+    or ``REPRO_QUEUE_BACKEND`` redirected ``"auto"`` wholesale.  Emitted
+    at most once per distinct reason per process (the downgrade is safe —
+    observationally identical — but should not be invisible)."""
+
+
+_FALLBACK_WARNED: set = set()
+
+
+def _warn_fallback(key: Tuple, message: str) -> None:
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(message, BackendFallbackWarning, stacklevel=4)
+
+
+def reset_fallback_warnings() -> None:
+    """Forget which one-shot fallback warnings already fired (tests)."""
+    _FALLBACK_WARNED.clear()
 
 
 class QueueState(NamedTuple):
@@ -631,16 +662,24 @@ def _auto_factory(*, capacity: Optional[int] = None,
     """Resolve the kernel routing once, from the geometry predicates.
     Unknown geometry components conservatively stay on the reference
     path (no per-call probing)."""
-    def ok(pred, bound):
-        return (capacity is not None and bound is not None
-                and pred(capacity, bound))
+    def ok(op, pred, bound):
+        if capacity is None or bound is None:
+            return False  # unknown geometry: documented reference default
+        if pred(capacity, bound):
+            return True
+        _warn_fallback(
+            ("auto", op, capacity, bound),
+            f"auto: {op} falls back to the reference path — the kernel "
+            f"geometry predicate rejected capacity={capacity}, "
+            f"bound={bound} (block tiling does not divide the ring)")
+        return False
 
     return BulkOps(
         "auto",
-        kernel_push=ok(kernel_push_available, max_push),
-        kernel_pop=ok(kernel_pop_available, max_pop),
-        kernel_steal=ok(kernel_steal_available, max_steal),
-        kernel_transfer=ok(kernel_transfer_available, max_steal),
+        kernel_push=ok("push", kernel_push_available, max_push),
+        kernel_pop=ok("pop_bulk", kernel_pop_available, max_pop),
+        kernel_steal=ok("steal", kernel_steal_available, max_steal),
+        kernel_transfer=ok("transfer", kernel_transfer_available, max_steal),
     )
 
 
@@ -649,11 +688,17 @@ register_backend("pallas", _pallas_factory)
 register_backend("auto", _auto_factory)
 
 
+def _env_check() -> bool:
+    return os.environ.get(CHECK_ENV_VAR, "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
 def make_ops(backend: Optional[str] = "auto", *,
              capacity: Optional[int] = None,
              max_push: Optional[int] = None,
              max_pop: Optional[int] = None,
-             max_steal: Optional[int] = None) -> BulkOps:
+             max_steal: Optional[int] = None,
+             check: Optional[bool] = None) -> BulkOps:
     """Construct a :class:`BulkOps` backend.
 
     ``backend`` is a registry name (``"reference"`` / ``"pallas"`` /
@@ -663,14 +708,27 @@ def make_ops(backend: Optional[str] = "auto", *,
     once, from the geometry keywords — and honours the
     ``REPRO_QUEUE_BACKEND`` environment override; explicit names are
     never overridden.
+
+    ``check=True`` (default: the ``REPRO_CHECK`` environment switch)
+    wraps the backend in the runtime sanitizer
+    (``repro.analysis.sanitize.CheckedBulkOps``): every op validated
+    against the sequential contract — conservation, cursor monotonicity,
+    dead rows zeroed — eagerly on concrete states, via
+    ``jax.debug.callback`` scalar checks under a trace.
     """
+    if check is None:
+        check = _env_check()
     if isinstance(backend, BulkOps):
-        return backend
+        return _maybe_checked(backend, check)
     if backend is None:
         backend = "auto"
     if backend == "auto":
         env = os.environ.get(BACKEND_ENV_VAR, "").strip()
         if env and env != "auto":
+            _warn_fallback(
+                ("env", env),
+                f"auto resolved to {env!r} via the {BACKEND_ENV_VAR} "
+                f"environment override, not geometry routing")
             backend = env
     try:
         factory = _REGISTRY[backend]
@@ -678,5 +736,16 @@ def make_ops(backend: Optional[str] = "auto", *,
         raise ValueError(
             f"unknown queue backend {backend!r}; "
             f"available: {available_backends()}") from None
-    return factory(capacity=capacity, max_push=max_push, max_pop=max_pop,
-                   max_steal=max_steal)
+    ops = factory(capacity=capacity, max_push=max_push, max_pop=max_pop,
+                  max_steal=max_steal)
+    return _maybe_checked(ops, check)
+
+
+def _maybe_checked(ops: BulkOps, check: bool) -> BulkOps:
+    if not check:
+        return ops
+    from repro.analysis.sanitize import CheckedBulkOps  # deferred: no cycle
+
+    if isinstance(ops, CheckedBulkOps):
+        return ops
+    return CheckedBulkOps(ops)

@@ -122,6 +122,38 @@ class PagedQueue:
         self.ops = make_ops(backend, capacity=self.capacity,
                             max_push=self._spill_n,
                             max_steal=self._spill_n)
+        # Spill/refill accounting (the sanitizer's PagedQueue contract):
+        # paging moves items between ring and host pages, so the net
+        # external flow pushed - popped - stolen must equal total_size()
+        # after every public op.  Armed exactly when make_ops wrapped the
+        # backend (REPRO_CHECK=1 / check=True).
+        from repro.analysis.sanitize import CheckedBulkOps
+
+        self._check = isinstance(self.ops, CheckedBulkOps)
+        self._net_in = 0
+
+    def _audit(self, context: str) -> None:
+        if not self._check:
+            return
+        from repro.analysis import sanitize
+
+        size = int(self.state.size)
+        if not 0 <= size <= self.capacity:
+            sanitize.record_violation(
+                f"PagedQueue.{context}: ring size {size} outside "
+                f"[0, {self.capacity}]", eager=True)
+        for batch, n in self.pages:
+            rows = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            if n <= 0 or n > rows:
+                sanitize.record_violation(
+                    f"PagedQueue.{context}: host page count {n} outside "
+                    f"(0, rows={rows}]", eager=True)
+        if self.total_size() != self._net_in:
+            sanitize.record_violation(
+                f"PagedQueue.{context}: spill/refill accounting broken — "
+                f"total_size()={self.total_size()} but net external flow "
+                f"is {self._net_in} (items lost or duplicated while "
+                f"paging)", eager=True)
 
     # -- owner side ---------------------------------------------------------
 
@@ -142,10 +174,15 @@ class PagedQueue:
         if int(pushed) < n:  # ring still too small for this batch: page the rest
             rest = jax.tree_util.tree_map(lambda x: x[int(pushed):], batch)
             self.pages.append((jax.device_get(rest), n - int(pushed)))
+        self._net_in += int(n)
+        self._audit("push")
 
     def pop(self):
         self._maybe_refill()
         self.state, item, valid = self.ops.pop(self.state, donate=True)
+        if bool(valid):
+            self._net_in -= 1
+        self._audit("pop")
         return (item, bool(valid))
 
     def _maybe_refill(self) -> None:
@@ -182,6 +219,8 @@ class PagedQueue:
                 max_steal=self._spill_n, queue_limit=0, donate=True)
             if int(n):
                 got.append((jax.device_get(batch), int(n)))
+        self._net_in -= sum(n for _, n in got)
+        self._audit("steal")
         return got
 
     # -- HostQueue protocol adapters (int payload convenience) --------------

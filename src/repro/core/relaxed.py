@@ -55,7 +55,8 @@ import jax.numpy as jnp
 from repro.core import ops as bulk_ops
 from repro.core.ops import QueueState
 
-__all__ = ["RelaxedBulkOps", "relaxed_supported"]
+__all__ = ["RelaxedBulkOps", "relaxed_supported", "optimistic_read",
+           "reconcile"]
 
 Pytree = object
 
@@ -83,16 +84,34 @@ def _optimistic_window(q: QueueState, max_steal: int) -> Pytree:
 
 
 def _reconcile(q: QueueState, window: Pytree, claim: jnp.ndarray,
-               max_steal: int) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+               max_steal: int, *, floor: Optional[jnp.ndarray] = None
+               ) -> Tuple[QueueState, Pytree, jnp.ndarray]:
     """The posterior repair (the owner-side reconcile of the paper's
     design, folded into the steal's return because states are values):
     settle the over-reported ``claim`` against the owner's size, withdraw
     the over-claimed rows from the window, bump the cursor by the
-    settled count only."""
+    settled count only.
+
+    ``floor`` is the *stable-prefix* bound for the genuinely concurrent
+    (split-step) protocol: the minimum owner-visible size observed at
+    any point since the optimistic read.  The first ``floor`` rows of
+    the window are a stable prefix — no owner push or pop since the read
+    can have touched those physical slots — so a settle clamped to
+    ``min(claim, floor, size)`` extracts exactly live, current rows.
+    Without the clamp a dip-and-refill owner schedule (pop below the
+    claim, then push into the reused slots) would let the settle hand
+    out stale bytes while losing the refilled items.  The atomic
+    single-step path (``floor=None``) needs no clamp: nothing can run
+    between read and reconcile, so ``size`` itself is the stable prefix.
+    ``repro.analysis.linearize`` model-checks both claims exhaustively.
+    """
     cap = jax.tree_util.tree_leaves(q.buf)[0].shape[0]
     n = jnp.minimum(jnp.clip(jnp.asarray(claim, jnp.int32), 0,
                              jnp.int32(max_steal)),
                     q.size)
+    if floor is not None:
+        n = jnp.minimum(n, jnp.maximum(jnp.asarray(floor, jnp.int32),
+                                       jnp.int32(0)))
     offs = jnp.arange(max_steal, dtype=jnp.int32)
 
     def _withdraw(x):
@@ -102,6 +121,22 @@ def _reconcile(q: QueueState, window: Pytree, claim: jnp.ndarray,
     batch = jax.tree_util.tree_map(_withdraw, window)
     new_q = QueueState(buf=q.buf, lo=(q.lo + n) % cap, size=q.size - n)
     return new_q, batch, n
+
+
+def optimistic_read(q: QueueState, max_steal: int) -> Pytree:
+    """Step one of the split-step steal: the fence-free unmasked window
+    read.  Public so the model checker and the adversarial property
+    tests can interleave owner mutations between the two steps."""
+    return _optimistic_window(q, max_steal)
+
+
+def reconcile(q: QueueState, window: Pytree, claim, max_steal: int, *,
+              floor=None) -> Tuple[QueueState, Pytree, jnp.ndarray]:
+    """Step two of the split-step steal: settle ``claim`` against the
+    CURRENT owner state ``q``, clamped to the stable-prefix ``floor``
+    (min owner-visible size since the read — see :func:`_reconcile`).
+    Returns ``(new_state, batch, n)`` with over-claimed rows zeroed."""
+    return _reconcile(q, window, claim, max_steal, floor=floor)
 
 
 def _relaxed_steal_exact(q: QueueState, n, *, max_steal: int
@@ -186,6 +221,15 @@ def _relaxed_factory(*, capacity: Optional[int] = None,
     # Geometry unknown or window > ring: fenced reference routing under
     # the same name (the predicate-gated fallback every backend family
     # uses), so a consumer can always ask for "relaxed" safely.
+    if capacity is None or max_steal is None:
+        reason = (f"geometry unknown (capacity={capacity}, "
+                  f"max_steal={max_steal})")
+    else:
+        reason = (f"the multiplicity window does not fit the ring "
+                  f"(max_steal={max_steal} > capacity={capacity})")
+    bulk_ops._warn_fallback(
+        ("relaxed", capacity, max_steal),
+        f"relaxed falls back to the fenced reference routing: {reason}")
     return bulk_ops.BulkOps("relaxed")
 
 

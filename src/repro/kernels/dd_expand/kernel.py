@@ -22,10 +22,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["expand"]
+__all__ = ["expand", "expand_supported"]
 
 NEG = -(2 ** 30)
 DEFAULT_BLOCK = 256
+
+
+def expand_supported(n: int, *, block: int = DEFAULT_BLOCK) -> bool:
+    """Whether :func:`expand` admits this geometry.  Mirrors the block
+    selection below: the node array must be a whole number of (possibly
+    shrunken) blocks.  Callers use this to fall back to the jnp oracle
+    instead of tripping the kernel assert."""
+    block = min(block, n)
+    return block > 0 and n % block == 0
 
 
 def _kernel(wp_ref, s_ref, v_ref, s0_ref, v0_ref, s1_ref, v1_ref):
@@ -45,8 +54,8 @@ def expand(states: jnp.ndarray, values: jnp.ndarray, w, p, *,
            block: int = DEFAULT_BLOCK, interpret: bool = False):
     """states/values: (N,) int32; returns (s0, v0, s1, v1) each (N,)."""
     N = states.shape[0]
+    assert expand_supported(N, block=block), (N, block)
     block = min(block, N)
-    assert N % block == 0
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(N // block,),

@@ -8,7 +8,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dd_expand.kernel import expand
+from repro.kernels.dd_expand.kernel import expand, expand_supported
 from repro.kernels.dd_expand.ref import expand_ref
 
 __all__ = ["expand_layer_bulk"]
@@ -18,7 +18,7 @@ __all__ = ["expand_layer_bulk"]
 def expand_layer_bulk(states, values, w, p, *, use_pallas: bool = False,
                       interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(N,) nodes -> (2N,) children [0-arcs then 1-arcs], diagram layout."""
-    if use_pallas or interpret:
+    if (use_pallas or interpret) and expand_supported(states.shape[0]):
         s0, v0, s1, v1 = expand(states, values, w, p,
                                 interpret=interpret or
                                 jax.default_backend() != "tpu")

@@ -21,12 +21,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["flash_attention", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_K"]
+__all__ = ["flash_attention", "flash_attention_supported",
+           "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_K"]
 
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
 
 _NEG_INF = -1e30
+
+
+def flash_attention_supported(S: int, T: int, *,
+                              block_q: int = DEFAULT_BLOCK_Q,
+                              block_k: int = DEFAULT_BLOCK_K) -> bool:
+    """Whether :func:`flash_attention` admits this geometry.  Mirrors the
+    block selection below: both sequence lengths must be whole numbers of
+    (possibly shrunken) blocks.  Callers use this to fall back to the jnp
+    oracle instead of tripping the kernel assert."""
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    return (block_q > 0 and block_k > 0
+            and S % block_q == 0 and T % block_k == 0)
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
@@ -94,7 +108,8 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     T = k.shape[2]
     block_q = min(block_q, S)
     block_k = min(block_k, T)
-    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    assert flash_attention_supported(
+        S, T, block_q=block_q, block_k=block_k), (S, T, block_q, block_k)
     n_q, n_kv = S // block_q, T // block_k
     scale = 1.0 / (hd ** 0.5)
 

@@ -14,7 +14,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.kernel import (
+    flash_attention,
+    flash_attention_supported,
+)
 from repro.kernels.flash_attention.ref import attention_ref
 
 __all__ = ["mha"]
@@ -39,7 +42,8 @@ def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     if K != H:
         k = jnp.repeat(k, H // K, axis=2)
         v = jnp.repeat(v, H // K, axis=2)
-    if not (use_pallas or interpret):
+    T = k.shape[1]
+    if not ((use_pallas or interpret) and flash_attention_supported(S, T)):
         return attention_ref(q, k, v, causal=causal, window=window,
                              softcap=softcap)
     qt = jnp.moveaxis(q, 2, 1)  # (B, H, S, hd)

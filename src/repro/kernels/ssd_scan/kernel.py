@@ -21,7 +21,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["ssd_scan"]
+__all__ = ["ssd_scan", "ssd_scan_supported"]
+
+
+def ssd_scan_supported(S: int, chunk: int) -> bool:
+    """Whether :func:`ssd_scan` admits this geometry: the sequence must
+    be a whole number of chunks.  Callers use this to fall back to the
+    jnp oracle instead of tripping the kernel assert."""
+    return chunk > 0 and S % chunk == 0
 
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, fin_ref,
@@ -81,7 +88,7 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
     BH, S, hd = x.shape
     ns = B.shape[-1]
     Q = chunk
-    assert S % Q == 0
+    assert ssd_scan_supported(S, Q), (S, Q)
     nc = S // Q
 
     kern = functools.partial(_kernel, Q=Q, n_chunks=nc)

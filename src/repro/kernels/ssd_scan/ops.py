@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.kernel import ssd_scan, ssd_scan_supported
 
 __all__ = ["ssd"]
 
@@ -22,7 +22,8 @@ __all__ = ["ssd"]
 def ssd(x, dt, A, Bm, Cm, D, *, chunk: int, use_pallas: bool = False,
         interpret: bool = False):
     """Returns (y (B, S, nh, hd), final_state (B, nh, hd, ns))."""
-    if not (use_pallas or interpret):
+    if not ((use_pallas or interpret)
+            and ssd_scan_supported(x.shape[1], chunk)):
         from repro.models.ssm import ssd_chunked
 
         return ssd_chunked(x, dt, A, Bm, Cm, D, chunk)

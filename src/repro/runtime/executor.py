@@ -163,6 +163,13 @@ class StealRuntime:
         # built dense and re-placed.
         self.queues = make_sharded_queues(n_workers, capacity, item_spec,
                                           sharding=queue_sharding)
+        # Sanitizer wiring: REPRO_CHECK=1 (or an explicitly checked
+        # backend) turns on per-round invariant checkpoints — stats
+        # arithmetic plus, for pure rebalancing rounds, exact multiset
+        # conservation of the live items across lanes.
+        from repro.analysis.sanitize import CheckedBulkOps
+
+        self._check = isinstance(self.ops, CheckedBulkOps)
         self.controller = (AdaptiveController(self.policy, adaptive_config)
                            if adaptive else None)
         self.telemetry = Telemetry(item_bytes=item_nbytes(item_spec),
@@ -322,6 +329,32 @@ class StealRuntime:
         return reduce_round_stats(stats, n_workers=self.n_workers,
                                   pod_size=self.pod_size)
 
+    def _pre_dispatch_snapshot(self, worker_fn):
+        """When the sanitizer is on and the dispatch is a pure rebalance
+        (no worker body creating/consuming items), fingerprint the live
+        items so the post-dispatch check can assert exact conservation."""
+        if not self._check or worker_fn is not None:
+            return None
+        from repro.analysis import sanitize
+
+        return sanitize.queues_fingerprint(self.queues)
+
+    def _post_dispatch_checks(self, round_stats, snap, *, context) -> None:
+        """Sanitizer checkpoint after a dispatch's host read-back: stats
+        arithmetic per round, multiset conservation for pure rebalances,
+        then surface anything the in-trace callbacks recorded."""
+        from repro.analysis import sanitize
+
+        for stats_r in round_stats:
+            sanitize.check_round_stats(
+                stats_r, n_workers=self.n_workers, capacity=self.capacity,
+                pod_size=self.pod_size, context=context)
+        if snap is not None:
+            sanitize.check_conserved(
+                snap, sanitize.queues_fingerprint(self.queues),
+                context=context)
+        sanitize.raise_pending(context)
+
     def round(self, worker_fn: Optional[WorkerFn] = None,
               carry: Optional[Pytree] = None
               ) -> Tuple[Pytree, master_ops.RebalanceStats]:
@@ -341,11 +374,16 @@ class StealRuntime:
             fn = self._compiled[worker_fn] = self._compile(worker_fn)
         if carry is None:
             carry = jnp.zeros((self.n_workers,), jnp.int32)
+        snap = self._pre_dispatch_snapshot(worker_fn)
         proportion = self.proportion
         self.queues, carry, stats = fn(self.queues, carry,
                                        jnp.float32(proportion))
         sizes = self.sizes()
         n_steals, n_transferred, bytes_moved = self._round_counts(stats)
+        if self._check:
+            self._post_dispatch_checks(
+                [jax.tree_util.tree_map(np.asarray, stats)], snap,
+                context="StealRuntime.round")
         self.telemetry.record(sizes=sizes, n_steals=n_steals,
                               n_transferred=n_transferred,
                               proportion=proportion,
@@ -392,6 +430,7 @@ class StealRuntime:
                 worker_fn, k, until_drained)
         if carry is None:
             carry = jnp.zeros((self.n_workers,), jnp.int32)
+        snap = self._pre_dispatch_snapshot(worker_fn)
         p0 = jnp.float32(self.proportion)
         self.queues, carry, p_final, tele, rounds = fn(self.queues, carry, p0)
         rounds = int(rounds)
@@ -406,6 +445,11 @@ class StealRuntime:
                                   n_transferred=n_transferred,
                                   proportion=float(tele["proportion"][r]),
                                   bytes_moved=bytes_moved)
+        if self._check:
+            self._post_dispatch_checks(
+                [jax.tree_util.tree_map(lambda x, _r=r: x[_r], stats)
+                 for r in range(rounds)], snap,
+                context=f"StealRuntime.run_fused[{rounds} rounds]")
         if self.controller is not None and rounds > 0:
             self.controller.absorb(tele["proportion"][:rounds],
                                    float(p_final))

@@ -1,0 +1,134 @@
+"""The static lint pass (repro.analysis.lint): the live tree must lint
+clean, and each rule must catch its planted fixture — K1 (kernel
+package missing predicate/oracle/parity test), D1 (use-after-donate),
+U1 (use_kernel-era patterns)."""
+
+from pathlib import Path
+
+from repro.analysis import lint
+
+REPO = lint.REPO_ROOT
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+def test_tree_lints_clean():
+    findings = lint.lint_paths([REPO / d for d in lint.DEFAULT_PATHS])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_planted_use_after_donate_is_caught(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "def f(ops, q, batch, n):\n"
+        "    q2, pushed = ops.push(q, batch, n, donate=True)\n"
+        "    return q.size, pushed\n")
+    findings = lint.lint_file(bad)
+    assert _rules(findings) == ["D1"]
+    assert findings[0].line == 3 and "donated at line 2" in findings[0].message
+
+
+def test_planted_dotted_use_after_donate_is_caught(tmp_path):
+    bad = tmp_path / "bad_attr.py"
+    bad.write_text(
+        "def f(self, batch, n):\n"
+        "    out = self.ops.push(self.state, batch, n, donate=True)\n"
+        "    return self.state.size\n")
+    findings = lint.lint_file(bad)
+    assert _rules(findings) == ["D1"]
+    assert "self.state.size" in findings[0].message
+
+
+def test_same_statement_rebind_is_clean(tmp_path):
+    good = tmp_path / "good.py"
+    good.write_text(
+        "def f(ops, q, batch, n):\n"
+        "    q, pushed = ops.push(q, batch, n, donate=True)\n"
+        "    return q.size, pushed\n"
+        "def g(self, batch, n):\n"
+        "    self.state, pushed = self.ops.push(self.state, batch, n,\n"
+        "                                       donate=True)\n"
+        "    return self.state.size, pushed\n")
+    assert lint.lint_file(good) == []
+
+
+def test_donate_false_is_clean(tmp_path):
+    good = tmp_path / "pure.py"
+    good.write_text(
+        "def f(ops, q, batch, n):\n"
+        "    q2, pushed = ops.push(q, batch, n, donate=False)\n"
+        "    return q.size, pushed\n")
+    assert lint.lint_file(good) == []
+
+
+def test_use_kernel_era_patterns_are_caught(tmp_path):
+    bad = tmp_path / "legacy.py"
+    bad.write_text(
+        "def caller(q):\n"
+        "    return steal(q, use_kernel=True)\n"
+        "def push_inplace(q, batch, n):\n"
+        "    return q\n")
+    findings = lint.lint_file(bad)
+    assert _rules(findings) == ["U1"]
+    assert len(findings) == 2
+
+
+def test_docstring_mentions_are_exempt(tmp_path):
+    ok = tmp_path / "docs_only.py"
+    ok.write_text(
+        '"""The old use_kernel= flags and push_inplace variants are\n'
+        'gone (PR 3)."""\n'
+        "X = 1\n")
+    assert lint.lint_file(ok) == []
+
+
+def test_kernel_package_missing_predicate_is_caught(tmp_path):
+    """K1 on a synthetic repo root: a kernel package with no
+    *_supported predicate, no oracle, and no parity test yields all
+    three findings."""
+    pkg = tmp_path / "src" / "repro" / "kernels" / "fancy_op"
+    pkg.mkdir(parents=True)
+    (pkg / "kernel.py").write_text("def run(x):\n    return x\n")
+    (tmp_path / "tests").mkdir()
+    findings = lint.lint_paths([], root=tmp_path)
+    assert _rules(findings) == ["K1"]
+    msgs = "\n".join(f.message for f in findings)
+    assert "geometry predicate" in msgs
+    assert "oracle" in msgs
+    assert "parity test" in msgs
+
+
+def test_aliasing_kernel_without_donating_op_is_caught(tmp_path):
+    """K2 on a synthetic repo root: an input_output_aliases kernel whose
+    BulkOps op is not donate-jitted."""
+    pkg = tmp_path / "src" / "repro" / "kernels" / "queue_push"
+    pkg.mkdir(parents=True)
+    (pkg / "kernel.py").write_text(
+        "def ring_scatter_supported(c, b):\n    return True\n"
+        "def run(x):\n"
+        "    return pallas_call(k, input_output_aliases={4: 0})(x)\n")
+    (pkg / "ref.py").write_text("def ref(x):\n    return x\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_parity.py").write_text("import repro.kernels.queue_push\n")
+    core = tmp_path / "src" / "repro" / "core"
+    core.mkdir(parents=True)
+    (core / "ops.py").write_text(
+        "import types, jax\n"
+        "def _donating():\n"
+        "    return types.SimpleNamespace(push=jax.jit(_push))\n"
+        "class BulkOps:\n"
+        "    def push(self, q, batch, n):\n"
+        "        return q, n\n")
+    findings = lint.lint_paths([], root=tmp_path)
+    assert _rules(findings) == ["K2"]
+    msgs = "\n".join(f.message for f in findings)
+    assert "donate_argnums" in msgs
+    assert "donate= keyword" in msgs
+
+
+def test_cli_clean_tree(capsys):
+    assert lint.main([]) == 0
+    assert "clean" in capsys.readouterr().out

@@ -64,8 +64,11 @@ def test_steal_plan_clamps_out_of_range_proportions():
 
 def test_low_watermark_boundary_triggers_refill_exactly():
     pq = PagedQueue(8, SPEC, low_watermark=2)
-    # One host page of 3, ring holding 4.
+    # One host page of 3, ring holding 4.  (The direct injection also
+    # credits _net_in so the sanitizer's spill/refill audit stays
+    # balanced when the suite runs under REPRO_CHECK=1.)
     pq.pages.append((np.arange(100, 103, dtype=np.int32), 3))
+    pq._net_in += 3
     pq.push(_batch([1, 2, 3, 4]), 4)
     # size 4 > watermark 2: pop must NOT refill yet.
     item, valid = pq.pop()

@@ -1,0 +1,208 @@
+"""The runtime conservation sanitizer (repro.analysis.sanitize):
+check=True / REPRO_CHECK=1 wrap every BulkOps call with invariant
+checks.  Clean ops sail through; corrupted backends, broken counters
+and paging bugs are caught."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitize
+from repro.analysis.sanitize import CheckedBulkOps, SanitizerError
+from repro.core import ops as bulk_ops
+
+SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+@pytest.fixture(autouse=True)
+def _clean_slate():
+    sanitize.reset_violations()
+    yield
+    sanitize.reset_violations()
+
+
+def _seeded(values, cap=16, *, check=True):
+    ops = bulk_ops.make_ops("reference", check=check)
+    q = bulk_ops.make_queue(cap, SPEC)
+    buf = np.zeros((max(len(values), 1),), np.int32)
+    buf[: len(values)] = values
+    q, _ = ops.push(q, jnp.asarray(buf), len(values))
+    return ops, q
+
+
+# -- wiring -----------------------------------------------------------------
+
+
+def test_check_true_wraps_and_env_wraps(monkeypatch):
+    assert isinstance(bulk_ops.make_ops("reference", check=True),
+                      CheckedBulkOps)
+    assert not isinstance(bulk_ops.make_ops("reference", check=False),
+                          CheckedBulkOps)
+    monkeypatch.setenv(bulk_ops.CHECK_ENV_VAR, "1")
+    assert isinstance(bulk_ops.make_ops("reference"), CheckedBulkOps)
+    monkeypatch.delenv(bulk_ops.CHECK_ENV_VAR)
+    assert not isinstance(bulk_ops.make_ops("reference"), CheckedBulkOps)
+
+
+def test_wrapping_is_idempotent_and_delegates():
+    inner = bulk_ops.make_ops("relaxed", capacity=64, max_steal=16,
+                              check=False)
+    once = bulk_ops.make_ops(inner, check=True)
+    twice = bulk_ops.make_ops(once, check=True)
+    assert isinstance(once, CheckedBulkOps)
+    assert twice.inner is once.inner  # no double wrap
+    assert once.resolved == inner.resolved
+    assert once.multiplicity_bound(16) == inner.multiplicity_bound(16)
+
+
+def test_clean_ops_record_nothing():
+    ops, q = _seeded([1, 2, 3, 4, 5])
+    q, batch, n = ops.pop_bulk(q, 4, jnp.int32(2))
+    q, batch, n = ops.steal(q, 0.5, max_steal=8, queue_limit=0)
+    q, item, valid = ops.pop(q)
+    assert sanitize.violations() == ()
+    sanitize.assert_clean()
+
+
+# -- corrupted backends are caught ------------------------------------------
+
+
+class _LyingOps(bulk_ops.BulkOps):
+    """Reference backend that misreports the push count."""
+
+    def __init__(self):
+        super().__init__("reference")
+
+    def push(self, q, batch, n, *, donate=False):
+        q2, n_pushed = super().push(q, batch, n, donate=donate)
+        return q2, n_pushed + 1
+
+
+class _LeakyOps(bulk_ops.BulkOps):
+    """Reference backend whose steal drops the stolen rows' cursor bump
+    (items duplicated: still in the ring AND in the stolen batch)."""
+
+    def __init__(self):
+        super().__init__("reference")
+
+    def steal_exact(self, q, n, *, max_steal, donate=False):
+        _, batch, n_out = super().steal_exact(q, n, max_steal=max_steal,
+                                              donate=donate)
+        return q, batch, n_out  # "forgot" the lo += n linearization write
+
+
+def test_misreported_count_is_caught():
+    checked = CheckedBulkOps(_LyingOps())
+    q = bulk_ops.make_queue(8, SPEC)
+    with pytest.raises(SanitizerError, match="push"):
+        checked.push(q, jnp.arange(3, dtype=jnp.int32), jnp.int32(3))
+
+
+def test_missing_linearization_write_is_caught():
+    checked = CheckedBulkOps(_LeakyOps())
+    _, q = _seeded([1, 2, 3, 4])
+    with pytest.raises(SanitizerError, match="steal_exact"):
+        checked.steal_exact(q, jnp.int32(2), max_steal=4)
+
+
+# -- violation lifecycle ----------------------------------------------------
+
+
+def test_record_then_raise_pending_drains():
+    sanitize.record_violation("synthetic A")
+    sanitize.record_violation("synthetic B")
+    assert len(sanitize.violations()) == 2
+    with pytest.raises(SanitizerError, match="synthetic A"):
+        sanitize.raise_pending("test context")
+    assert sanitize.violations() == ()  # drained
+    sanitize.assert_clean()
+
+
+def test_eager_violation_raises_immediately():
+    with pytest.raises(SanitizerError, match="boom"):
+        sanitize.record_violation("boom", eager=True)
+
+
+# -- traced path: checks run inside jit via debug callbacks -----------------
+
+
+def test_traced_op_records_violation():
+    checked = CheckedBulkOps(_LyingOps())
+
+    @jax.jit
+    def step(q):
+        q, _ = checked.push(q, jnp.arange(3, dtype=jnp.int32), jnp.int32(3))
+        return q
+
+    q = step(bulk_ops.make_queue(8, SPEC))
+    jax.block_until_ready(q.size)
+    assert any("push" in v for v in sanitize.violations())
+    with pytest.raises(SanitizerError):
+        sanitize.raise_pending("traced push")
+
+
+def test_traced_superstep_conservation():
+    sizes = jnp.asarray([[3, 4], [5, 6]], jnp.int32)
+    ok = jnp.asarray([[7, 0], [2, 9]], jnp.int32)     # sums conserved
+    bad = jnp.asarray([[7, 1], [2, 9]], jnp.int32)    # one item appeared
+    sanitize.trace_check_superstep(sizes, ok, capacity=16)
+    jax.effects_barrier()
+    assert sanitize.violations() == ()
+    sanitize.trace_check_superstep(sizes, bad, capacity=16)
+    jax.effects_barrier()
+    assert any("conserv" in v for v in sanitize.violations())
+
+
+# -- multiset fingerprints --------------------------------------------------
+
+
+def _lanes(*value_lists):
+    """Stack single-lane queues into the (lanes, capacity) layout the
+    executor-level fingerprint expects."""
+    qs = [_seeded(v, check=False)[1] for v in value_lists]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *qs)
+
+
+def test_fingerprint_is_order_independent():
+    fa = sanitize.queues_fingerprint(_lanes([1, 2, 3], [4, 5]))
+    fb = sanitize.queues_fingerprint(_lanes([5, 4], [3, 1, 2]))
+    sanitize.check_conserved(fa, fb, context="permuted")
+    assert sanitize.violations() == ()
+
+
+def test_fingerprint_detects_lost_item():
+    fa = sanitize.queues_fingerprint(_lanes([1, 2, 3], [4]))
+    fb = sanitize.queues_fingerprint(_lanes([1, 2], [4]))
+    sanitize.check_conserved(fa, fb, context="lost")
+    assert any("lost" in v for v in sanitize.violations())
+
+
+# -- PagedQueue spill/refill accounting -------------------------------------
+
+
+def test_paged_queue_accounting_clean(monkeypatch):
+    monkeypatch.setenv(bulk_ops.CHECK_ENV_VAR, "1")
+    from repro.core.queue import PagedQueue
+
+    pq = PagedQueue(16, SPEC, backend="reference")
+    assert pq._check
+    for start in (0, 20, 40):   # overflow -> host pages
+        pq.push(jnp.arange(start, start + 12, dtype=jnp.int32), 12)
+    got = pq.steal(0.5)
+    assert sum(n for _, n in got) > 0
+    while pq.pop()[1]:
+        pass
+    assert pq.total_size() == 0
+    sanitize.assert_clean()
+
+
+def test_paged_queue_broken_accounting_is_caught(monkeypatch):
+    monkeypatch.setenv(bulk_ops.CHECK_ENV_VAR, "1")
+    from repro.core.queue import PagedQueue
+
+    pq = PagedQueue(16, SPEC, backend="reference")
+    pq.push(jnp.arange(8, dtype=jnp.int32), 8)
+    pq.pages.append((np.arange(4, dtype=np.int32), 4))  # smuggled items
+    with pytest.raises(SanitizerError, match="accounting"):
+        pq.pop()
