@@ -253,6 +253,7 @@ def superstep(
     axis_name: str,
     ops: bulk_ops.BulkOps | None = None,
     exchange: str | None = None,
+    plan: jnp.ndarray | None = None,
 ) -> Tuple[QueueState, RebalanceStats]:
     """One rebalancing round.  Must run inside ``shard_map`` (or
     ``vmap(axis_name=...)`` for host-side testing) over ``axis_name`` where
@@ -264,6 +265,15 @@ def superstep(
     time (``"auto"`` consults the kernel geometry predicates here, never
     per call).  ``exchange`` overrides ``policy.exchange``
     (``"compact"`` / ``"dense"`` — see the module docstring).
+
+    ``plan`` optionally substitutes the replicated transfer plan (int32
+    ``(W, 2)``, the :func:`~repro.core.policy.plan_transfers` layout) for
+    the one computed here.  The caller must have derived it from the SAME
+    replicated inputs every lane sees (the gathered size vector before
+    any cursor moved), so victim- and thief-side clamps still agree —
+    this is how the resilience layer routes recovery steals (a dead
+    lane's ring at proportion 1.0) through the existing exchange without
+    new collectives or kernels.
     """
     if ops is None:
         ops = _resolve_ops(policy, q)
@@ -279,7 +289,8 @@ def superstep(
     sizes = lax.all_gather(q.size, axis_name)  # (W,) identical on all lanes
 
     # (2) replicated plan.
-    plan = plan_transfers(sizes, policy)  # (W, 2): row t = (victim, n)
+    if plan is None:
+        plan = plan_transfers(sizes, policy)  # (W, 2): row t = (victim, n)
     src, amt = plan[:, 0], plan[:, 1]
 
     # (3) the block exchange.

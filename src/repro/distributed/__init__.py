@@ -15,7 +15,11 @@ ICI/DCN instead of vmap lanes.
             one factory, integrated with ``repro.launch.mesh``
   serve     :class:`RuntimeAdmissionMaster` — the serving cluster's
             admission/rebalance on executor lanes (request IDs on
-            device, payloads on host)
+            device, payloads on host), with planned eviction riding the
+            fault layer's recovery supersteps
+  elastic   :func:`evacuate` / :func:`shrink` / :func:`grow` — resize a
+            running executor's worker set; dead rings drain through the
+            ordinary exchange at proportion 1.0 before lanes are dropped
 
 Parity contract: for identical seeds and policies, the mesh executor's
 queues, stats and adaptive-proportion trajectory are bit-identical to
@@ -23,8 +27,10 @@ the vmapped executor's (asserted by ``tests/test_distributed.py`` on 8
 fake host devices; the telemetry reduction is shared, not duplicated).
 """
 
+from repro.distributed.elastic import evacuate, grow, shrink
 from repro.distributed.executor import MeshStealRuntime
 from repro.distributed.launch import launch_runtime
 from repro.distributed.serve import RuntimeAdmissionMaster
 
-__all__ = ["MeshStealRuntime", "launch_runtime", "RuntimeAdmissionMaster"]
+__all__ = ["MeshStealRuntime", "launch_runtime", "RuntimeAdmissionMaster",
+           "evacuate", "grow", "shrink"]

@@ -1,0 +1,154 @@
+"""Elastic shrink/grow: resize a running executor's worker set.
+
+The runtime's fault layer (:mod:`repro.runtime.resilience`) already
+drains a dead lane's ring into the survivors through the ordinary
+compact-exchange superstep.  This module turns that primitive into the
+fleet operations a production deployment needs:
+
+* :func:`evacuate` — planned eviction of live lanes: kill them, run
+  recovery rounds until their rings are empty (each round moves up to
+  ``max_steal`` items per dead lane into the least-loaded survivors —
+  proportion 1.0, zero new kernels or collectives).
+* :func:`shrink` — evacuate, then rebuild the runtime over the smaller
+  worker set, carrying the surviving rings, the adaptive proportion, the
+  telemetry stream and the global round counter.  Works for both
+  execution modes: the vmapped runtime just drops lanes, the mesh
+  runtime is rebuilt on a mesh of the remaining devices (queue rows
+  re-placed shard-by-shard).
+* :func:`grow` — the inverse: rebuild with extra (empty, alive) lanes;
+  the next rebalancing rounds feed them through the normal plan, so
+  re-admitted capacity starts pulling work immediately.
+
+Shrink and grow return a NEW runtime (lane count is a static shape —
+changing it recompiles by construction); everything host-visible
+(telemetry object, controller trajectory, ``rounds_run``) carries over
+so the stream reads as one continuous run with ``shrink``/``grow``
+events recorded in ``telemetry.fault_events``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.executor import StealRuntime
+from repro.runtime.resilience import FaultPlan
+
+__all__ = ["evacuate", "shrink", "grow"]
+
+_tmap = jax.tree_util.tree_map
+
+
+def evacuate(rt: StealRuntime, lanes: Sequence[int], *,
+             max_rounds: Optional[int] = None) -> int:
+    """Kill ``lanes`` and run recovery rounds until their rings are
+    empty.  Returns the number of rounds it took.  The runtime must have
+    its fault layer armed (``fault_plan=`` at construction; an empty
+    ``FaultPlan()`` suffices)."""
+    lanes = [int(w) for w in lanes]
+    if not lanes:
+        return 0
+    alive = rt.n_workers - int(rt.dead_lanes().sum()) - len(lanes)
+    if alive < 1:
+        raise ValueError("evacuating would leave no live lane to drain into")
+    for w in lanes:
+        rt.kill_lane(w)
+    # Worst case each round moves max_steal items off one dead ring and
+    # the thief-capacity clamp can slow the tail; 2x the naive bound.
+    if max_rounds is None:
+        per_round = max(int(rt.policy.max_steal), 1)
+        max_rounds = 2 * (rt.capacity * len(lanes) // per_round + 2)
+    rounds = 0
+    while rounds < max_rounds:
+        if int(rt.sizes()[lanes].sum()) == 0:
+            break
+        rt.round()
+        rounds += 1
+    left = int(rt.sizes()[lanes].sum())
+    if left:
+        raise RuntimeError(
+            f"evacuation of lanes {lanes} incomplete after {rounds} rounds "
+            f"({left} items stranded — survivors' rings full?)")
+    rt.telemetry.record_fault("evacuate", len(lanes))
+    return rounds
+
+
+def _host_rows(rt: StealRuntime):
+    """The stacked queue state as host numpy (one gather)."""
+    return _tmap(lambda x: np.asarray(jax.device_get(x)), rt.queues)
+
+
+def _rebuild(rt: StealRuntime, n_workers: int) -> StealRuntime:
+    """A fresh runtime of the same species with ``n_workers`` lanes,
+    same policy/backend/adaptive config, fault layer armed (schedules do
+    NOT carry over — lane indices just changed meaning)."""
+    kwargs: dict = dict(
+        policy=rt.policy,
+        adaptive=rt.controller is not None,
+        adaptive_config=rt.controller.config if rt.controller else None,
+        backend=rt.ops,  # the resolved instance: identical routing
+        fault_plan=FaultPlan(),
+    )
+    if type(rt) is StealRuntime:
+        return StealRuntime(n_workers, rt.capacity, rt.item_spec,
+                            axis_name=rt.axis_name, **kwargs)
+    from repro.distributed.executor import MeshStealRuntime
+    from repro.launch.mesh import make_worker_mesh
+
+    if not isinstance(rt, MeshStealRuntime):
+        raise TypeError(f"don't know how to resize {type(rt).__name__}")
+    mesh = make_worker_mesh(n_workers, axis_name=rt.axis_name)
+    return MeshStealRuntime(mesh, rt.capacity, rt.item_spec, **kwargs)
+
+
+def _carry_over(old: StealRuntime, new: StealRuntime, rows) -> StealRuntime:
+    new.queues = _tmap(
+        lambda tgt, arr: jax.device_put(jnp.asarray(arr), tgt.sharding),
+        new.queues, rows)
+    new.telemetry = old.telemetry
+    new.rounds_run = old.rounds_run
+    if new.controller is not None and old.controller is not None:
+        new.controller.proportion = old.controller.proportion
+        new.controller.history = list(old.controller.history)
+    return new
+
+
+def shrink(rt: StealRuntime, drop_lanes: Sequence[int]) -> StealRuntime:
+    """Evacuate ``drop_lanes`` and rebuild the runtime without them.
+    Lane ``i`` of the result is the i-th SURVIVING lane of the input (in
+    order); the total item multiset is exactly preserved (evacuation is
+    just steals).  Returns the new runtime."""
+    drop = sorted({int(w) for w in drop_lanes})
+    if not drop:
+        return rt
+    evacuate(rt, drop)
+    rows = _tmap(lambda x: np.delete(x, drop, axis=0), _host_rows(rt))
+    new = _rebuild(rt, rt.n_workers - len(drop))
+    new = _carry_over(rt, new, rows)
+    new.telemetry.record_fault("shrink", len(drop))
+    return new
+
+
+def grow(rt: StealRuntime, n_new: int) -> StealRuntime:
+    """Rebuild with ``n_new`` extra lanes, empty and alive.  Existing
+    lanes keep their rings and indices; the very next rebalancing rounds
+    route work into the newcomers through the normal idle-thief plan."""
+    n_new = int(n_new)
+    if n_new <= 0:
+        return rt
+    rows = _host_rows(rt)
+    new = _rebuild(rt, rt.n_workers + n_new)
+    fresh = _tmap(lambda x: np.asarray(jax.device_get(x)), new.queues)
+
+    def splice(old_arr, fresh_arr):
+        out = fresh_arr.copy()
+        out[: old_arr.shape[0]] = old_arr
+        return out
+
+    rows = _tmap(splice, rows, fresh)
+    new = _carry_over(rt, new, rows)
+    new.telemetry.record_fault("grow", n_new)
+    return new

@@ -51,6 +51,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import master as master_ops
 from repro.core import ops as bulk_ops
+from repro.runtime import resilience
 from repro.runtime.adaptive import adaptive_update
 from repro.runtime.executor import StealRuntime, WorkerFn, make_lane_step
 
@@ -123,21 +124,24 @@ class MeshStealRuntime(StealRuntime):
         return tuple(self.mesh.axis_names)
 
     def _make_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
-        """Un-jitted ``(qs, carry, proportion) -> (qs, carry, stats)``,
-        identical signature and output layout to the vmapped runtime's —
-        but each lane executes on its own device and the stats come back
-        gathered into the stacked ``(W, ...)`` lane order."""
+        """Un-jitted ``(qs, carry, proportion, ctx) -> (qs, carry,
+        stats)``, identical signature and output layout to the vmapped
+        runtime's — but each lane executes on its own device and the
+        stats come back gathered into the stacked ``(W, ...)`` lane
+        order.  The fault context is replicated (the schedule is the
+        virtual master's view, identical on every device)."""
         lane_fn = self._lane_step(worker_fn)
         lane = self._lane_spec
+        ctx_spec = resilience.ctx_specs(self.fault is not None)
 
-        def local_step(qs, carry, proportion):
+        def local_step(qs, carry, proportion, ctx):
             q, c = _strip_lane(qs), _strip_lane(carry)
-            q, c, stats = lane_fn(q, c, proportion)
+            q, c, stats = lane_fn(q, c, proportion, ctx)
             return _add_lane(q), _add_lane(c), _add_lane(stats)
 
         return shard_map(
             local_step, mesh=self.mesh,
-            in_specs=(lane, lane, P()),
+            in_specs=(lane, lane, P(), ctx_spec),
             out_specs=(lane, lane, lane),
             check_rep=False)
 
@@ -153,8 +157,8 @@ class MeshStealRuntime(StealRuntime):
         worker_axis = self.axis_name
         pod_axis = self.pod_axis if self.pod_size is not None else None
 
-        def one_round(q, carry, p):
-            q, carry, stats = lane_fn(q, carry, p)
+        def one_round(q, carry, p, ctx):
+            q, carry, stats = lane_fn(q, carry, p, ctx)
             # The master's bookkeeping, re-used twice: the TRUE global
             # size vector feeds the same float32 adaptive step the vmap
             # runtime scans (bit-identical trajectory), and its sum is
@@ -164,10 +168,14 @@ class MeshStealRuntime(StealRuntime):
             tele = {"stats": _add_lane(stats),
                     "sizes": q.size[None],
                     "proportion": p}
+            ctx = resilience.ctx_advance(ctx)
             if controller is not None:
-                p = adaptive_update(p, sizes_vec, policy=policy,
+                # Identical dead-lane masking to the vmap fused path, so
+                # faulted adaptive trajectories stay bit-identical too.
+                masked = resilience.mask_sizes(sizes_vec, ctx, policy)
+                p = adaptive_update(p, masked, policy=policy,
                                     config=config)
-            return q, carry, p, tele, jnp.sum(sizes_vec)
+            return q, carry, p, ctx, tele, jnp.sum(sizes_vec)
 
         return one_round
 
@@ -198,37 +206,39 @@ class MeshStealRuntime(StealRuntime):
         one_round = self._fused_round(worker_fn)
         lane, entry = self._lane_spec, self._lane_entry
         axes = self._axes_tuple()
+        ctx_spec = resilience.ctx_specs(self.fault is not None)
 
-        def local_fused(qs, carry, p0):
+        def local_fused(qs, carry, p0, ctx0):
             q, c = _strip_lane(qs), _strip_lane(carry)
 
             if not until_drained:
                 def body(state, _):
-                    q, c, p = state
-                    q, c, p, tele, _total = one_round(q, c, p)
-                    return (q, c, p), tele
+                    q, c, p, ctx = state
+                    q, c, p, ctx, tele, _total = one_round(q, c, p, ctx)
+                    return (q, c, p, ctx), tele
 
-                (q, c, p), tele = lax.scan(body, (q, c, p0), None, length=k)
+                (q, c, p, _ctx), tele = lax.scan(body, (q, c, p0, ctx0),
+                                                 None, length=k)
                 rounds = jnp.int32(k)
             else:
                 tele0 = self._tele_slots(k)
 
                 def cond(state):
-                    _q, _c, _p, r, _tele, total = state
+                    _q, _c, _p, _ctx, r, _tele, total = state
                     return (r < k) & (total > 0)
 
                 def body(state):
-                    q, c, p, r, tele, _ = state
-                    q, c, p, t, total = one_round(q, c, p)
+                    q, c, p, ctx, r, tele, _ = state
+                    q, c, p, ctx, t, total = one_round(q, c, p, ctx)
                     tele = _tmap(
                         lambda buf, v: lax.dynamic_update_index_in_dim(
                             buf, v, r, 0), tele, t)
-                    return (q, c, p, r + 1, tele, total)
+                    return (q, c, p, ctx, r + 1, tele, total)
 
                 total0 = lax.psum(q.size, axes)  # replicated global size
-                q, c, p, rounds, tele, _ = lax.while_loop(
+                q, c, p, _ctx, rounds, tele, _ = lax.while_loop(
                     cond, body,
-                    (q, c, p0, jnp.int32(0), tele0, total0))
+                    (q, c, p0, ctx0, jnp.int32(0), tele0, total0))
 
             return _add_lane(q), _add_lane(c), p, tele, rounds
 
@@ -236,7 +246,25 @@ class MeshStealRuntime(StealRuntime):
                      "proportion": P(None)}
         fused = shard_map(
             local_fused, mesh=self.mesh,
-            in_specs=(lane, lane, P()),
+            in_specs=(lane, lane, P(), ctx_spec),
             out_specs=(lane, lane, P(), tele_spec, P()),
             check_rep=False)
         return jax.jit(fused, donate_argnums=self._donate_argnums())
+
+    # -- resilience: elastic state shardings ---------------------------------
+
+    def _state_shardings(self, template):
+        """Elastic restore onto THIS mesh: queue lanes land sharded on
+        their owning devices (``self.sharding``), everything else —
+        proportion, round counter, fault schedule — replicated.  This is
+        what lets a snapshot written under one topology (8-device mesh)
+        restore onto another (1 device, or a reshaped mesh): the
+        checkpoint holds full host arrays and placement is decided here,
+        by the restoring runtime."""
+        rep = NamedSharding(self.mesh, P())
+        return {
+            key: (_tmap(lambda _: self.sharding, template["queues"])
+                  if key == "queues"
+                  else _tmap(lambda _: rep, template[key]))
+            for key in template
+        }

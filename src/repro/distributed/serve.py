@@ -32,6 +32,7 @@ import numpy as np
 from repro.core.policy import StealPolicy
 from repro.distributed.launch import launch_runtime
 from repro.runtime.adaptive import AdaptiveConfig
+from repro.runtime.resilience import FaultPlan
 
 __all__ = ["RuntimeAdmissionMaster", "DeviceReplicaLane"]
 
@@ -48,6 +49,7 @@ class DeviceReplicaLane:
         self.replica_id = replica_id
         self.in_flight = 0
         self.completed = 0
+        self.evicted = False
 
     def __len__(self) -> int:
         return int(self._master.runtime.sizes()[self.replica_id])
@@ -96,6 +98,11 @@ class RuntimeAdmissionMaster:
         :func:`repro.distributed.launch_runtime`).
       capacity: per-lane ring capacity (queued request IDs per replica).
       mesh: optional pinned mesh for ``execution="mesh"``.
+      elastic: arm the runtime's fault layer (an empty
+        :class:`~repro.runtime.resilience.FaultPlan`) so
+        :meth:`evict`/:meth:`readmit` can drain and mask lanes live —
+        the default; both execution modes arm it, so vmap/mesh parity
+        is preserved.
     """
 
     def __init__(self, n_replicas: int,
@@ -104,7 +111,8 @@ class RuntimeAdmissionMaster:
                  adaptive_config: Optional[AdaptiveConfig] = None, *,
                  execution: str = "vmap",
                  capacity: int = 512,
-                 mesh=None):
+                 mesh=None,
+                 elastic: bool = True):
         self.policy = policy or StealPolicy(proportion=0.5,
                                             low_watermark=1,
                                             high_watermark=8,
@@ -113,7 +121,8 @@ class RuntimeAdmissionMaster:
         self.runtime = launch_runtime(
             n_replicas, capacity, _SPEC, execution=execution, mesh=mesh,
             policy=self.policy, adaptive=adaptive,
-            adaptive_config=adaptive_config)
+            adaptive_config=adaptive_config,
+            fault_plan=FaultPlan() if elastic else None)
         self.replicas = [DeviceReplicaLane(self, i)
                          for i in range(n_replicas)]
         self._requests: Dict[int, object] = {}
@@ -145,12 +154,15 @@ class RuntimeAdmissionMaster:
         return self.runtime.proportion
 
     def submit(self, requests: Sequence) -> int:
-        """Bulk-admit to the least-loaded replica: ONE ring splice of the
-        request-id batch (constant latency in the batch size)."""
+        """Bulk-admit to the least-loaded live replica: ONE ring splice
+        of the request-id batch (constant latency in the batch size)."""
         requests = list(requests)
         if not requests:
             return -1
-        target = min(self.replicas, key=lambda r: r.load())
+        live = [r for r in self.replicas if not r.evicted]
+        if not live:
+            raise RuntimeError("every replica is evicted; nothing can admit")
+        target = min(live, key=lambda r: r.load())
         for r in requests:
             self._requests[r.rid] = r
         rids = jnp.asarray([r.rid for r in requests], jnp.int32)
@@ -161,6 +173,36 @@ class RuntimeAdmissionMaster:
                 f"pushed {pushed}/{len(requests)} (capacity "
                 f"{self.runtime.capacity})")
         return target.replica_id
+
+    # -- planned eviction ----------------------------------------------------
+
+    def evict(self, replica_id: int) -> int:
+        """Planned eviction on device: kill the lane in the runtime's
+        fault schedule, then run recovery rounds until its ring is empty
+        — each round is the ordinary exchange superstep executing the
+        proportion-1.0 dead-worker plan, so the drain costs zero new
+        kernels.  Returns the number of queued requests drained off the
+        lane.  Requires ``elastic=True`` (the default)."""
+        from repro.distributed.elastic import evacuate
+
+        lane = self.replicas[replica_id]
+        drained = int(len(lane))
+        evacuate(self.runtime, [replica_id])
+        lane.evicted = True
+        self.telemetry.record_fault("evict")
+        return drained
+
+    def readmit(self, replica_id: int) -> None:
+        """Re-admit an evicted lane: revive it in the fault schedule so
+        the next plans may route work back into it."""
+        self.runtime.revive_lane(replica_id)
+        self.replicas[replica_id].evicted = False
+        self.telemetry.record_fault("readmit")
+
+    def note_straggler(self, rounds: int = 4, factor: float = 1.5) -> None:
+        """A replica was flagged slow: delegates to the runtime (counter
+        + temporary steal-proportion boost)."""
+        self.runtime.note_straggler(rounds=rounds, factor=factor)
 
     def rebalance(self) -> int:
         """One REAL rebalance round through the executor (plan + exchange
@@ -188,6 +230,7 @@ class RuntimeAdmissionMaster:
             "loads": [r.load() for r in self.replicas],
             "queued": [len(r) for r in self.replicas],
             "completed": [r.completed for r in self.replicas],
+            "evicted": [r.replica_id for r in self.replicas if r.evicted],
             "stolen": self.stolen,
             "rounds": self.rounds,
             "proportion": self.proportion,

@@ -44,6 +44,16 @@ The round body itself is mode-agnostic
 and the identical fused loop — with one queue lane per device under
 ``shard_map``, bit-identical to the vmapped runtime here.
 
+Resilience (:mod:`~repro.runtime.resilience`): constructing either
+runtime with a :class:`~repro.runtime.resilience.FaultPlan` arms
+deterministic fault injection (kill/delay/drop schedules that replay
+bit-identically in both execution modes) plus the recovery layer — dead
+lanes are drained at proportion 1.0 through the ordinary exchange
+superstep, queue snapshots (``save_state``/``restore_state``/
+``attach_snapshots``) ride :mod:`repro.train.checkpoint` for elastic
+crash-resume, and ``kill_lane``/``revive_lane``/``note_straggler`` give
+hosts live control (planned eviction, shrink/grow, straggler response).
+
 How the paper's single-stealer invariant is preserved
 -----------------------------------------------------
 The paper requires one owner and (at most) one concurrent stealer per
@@ -67,12 +77,15 @@ before claiming the in-place splice numbers (see ROADMAP).
 
 from repro.runtime.adaptive import AdaptiveConfig, AdaptiveController
 from repro.runtime.executor import StealRuntime
+from repro.runtime.resilience import FaultPlan, FaultState
 from repro.runtime.telemetry import (RoundRecord, Telemetry, WaveRecord,
                                      item_nbytes)
 
 __all__ = [
     "AdaptiveConfig",
     "AdaptiveController",
+    "FaultPlan",
+    "FaultState",
     "StealRuntime",
     "RoundRecord",
     "WaveRecord",

@@ -102,6 +102,31 @@ class AdaptiveController:
         self.config = config or AdaptiveConfig()
         self.proportion = float(jnp.float32(policy.proportion))
         self.history: List[float] = [self.proportion]
+        # Straggler response (train.fault.StragglerMonitor wiring): while
+        # boosted, the proportion HANDED OUT is scaled up so the master
+        # steals harder against a flagged-straggler lane for a bounded
+        # number of rounds; the servo state itself is untouched, so the
+        # boost decays to the normal trajectory instead of destabilizing
+        # the feedback loop.
+        self._boost_rounds_left = 0
+        self._boost_factor = 1.0
+
+    def flag_straggler(self, rounds: int = 4, factor: float = 1.5) -> None:
+        """A straggler was flagged: boost the emitted steal proportion by
+        ``factor`` (clamped to the config max) for the next ``rounds``
+        controller updates."""
+        self._boost_rounds_left = max(self._boost_rounds_left, int(rounds))
+        self._boost_factor = float(factor)
+
+    @property
+    def effective_proportion(self) -> float:
+        """What the next round should actually use: the servo proportion,
+        temporarily scaled while a straggler boost is active."""
+        if self._boost_rounds_left > 0:
+            return float(jnp.float32(min(
+                self.proportion * self._boost_factor,
+                self.config.max_proportion)))
+        return self.proportion
 
     def update(self, sizes) -> float:
         """One feedback step from the post-round size vector."""
@@ -110,6 +135,8 @@ class AdaptiveController:
                                   policy=self.policy, config=self.config))
         self.proportion = p
         self.history.append(p)
+        if self._boost_rounds_left > 0:
+            self._boost_rounds_left -= 1
         return p
 
     def absorb(self, proportions_used, final_proportion) -> None:
@@ -120,3 +147,6 @@ class AdaptiveController:
         post = [float(x) for x in np.asarray(proportions_used)[1:]]
         self.proportion = float(final_proportion)
         self.history.extend(post + [self.proportion])
+        if self._boost_rounds_left > 0:
+            self._boost_rounds_left = max(
+                0, self._boost_rounds_left - len(post) - 1)

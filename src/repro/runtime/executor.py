@@ -53,8 +53,10 @@ from repro.core import master as master_ops
 from repro.core import ops as bulk_ops
 from repro.core.policy import StealPolicy
 from repro.core.sharded_queue import make_sharded_queues
+from repro.runtime import resilience
 from repro.runtime.adaptive import (AdaptiveConfig, AdaptiveController,
                                     adaptive_update)
+from repro.runtime.resilience import FaultPlan, FaultState
 from repro.runtime.telemetry import (Telemetry, item_nbytes,
                                      reduce_round_stats)
 
@@ -68,9 +70,10 @@ __all__ = ["StealRuntime", "make_lane_step"]
 def make_lane_step(policy: StealPolicy, ops: bulk_ops.BulkOps,
                    worker_fn: Optional[WorkerFn], *, axis_name: str,
                    pod_axis: Optional[str] = None,
-                   hierarchical: bool = False) -> Callable:
+                   hierarchical: bool = False,
+                   fault: bool = False) -> Callable:
     """The mode-agnostic round body for ONE lane:
-    ``(q, carry, proportion) -> (q, carry, stats)``.
+    ``(q, carry, proportion, ctx) -> (q, carry, stats)``.
 
     This is the single definition of what a round IS — optional worker
     body, then the rebalancing superstep (flat over ``axis_name``, or
@@ -83,9 +86,24 @@ def make_lane_step(policy: StealPolicy, ops: bulk_ops.BulkOps,
     collectives resolve through the axis names either way, the two modes
     execute the identical computation — the parity tests assert the
     results are bit-identical.
-    """
 
-    def lane(q, carry, proportion):
+    ``ctx`` is the fault context (see :mod:`repro.runtime.resilience`):
+    a bare int32 round index when ``fault=False`` (ignored by the lane
+    body, so the compiled round is unchanged), or the replicated fault
+    schedule dict when ``fault=True`` — then the returned lane is
+    :func:`~repro.runtime.resilience.make_resilient_lane`, which also
+    runs the dead-ring recovery superstep each round.  Fault injection
+    composes with flat supersteps only.
+    """
+    if fault:
+        if hierarchical:
+            raise ValueError("fault injection requires flat supersteps "
+                             "(pod_size=None)")
+        return resilience.make_resilient_lane(policy, ops, worker_fn,
+                                              axis_name=axis_name)
+
+    def lane(q, carry, proportion, ctx):
+        del ctx  # round index only; same signature as the fault lane
         if worker_fn is not None:
             q, carry = worker_fn(q, carry)
         pol = dataclasses.replace(policy, proportion=proportion)
@@ -129,6 +147,14 @@ class StealRuntime:
       pod_size: if set, lanes are grouped into pods of this size and each
         round runs :func:`master.hierarchical_superstep` (intra-pod, then
         cross-pod via lane-0 representatives).
+      fault_plan: arm the resilience layer with a deterministic
+        :class:`~repro.runtime.resilience.FaultPlan` (kill/delay/drop
+        schedule).  An EMPTY ``FaultPlan()`` schedules nothing but still
+        arms the machinery — live :meth:`kill_lane`/:meth:`revive_lane`
+        (planned eviction, shrink/grow) and the per-round recovery
+        superstep that drains dead rings at proportion 1.0.  ``None``
+        (default) leaves the compiled round byte-identical to the
+        fault-free executor.  Flat supersteps only (``pod_size=None``).
     """
 
     def __init__(self, n_workers: int, capacity: int, item_spec: Pytree, *,
@@ -140,10 +166,14 @@ class StealRuntime:
                  axis_name: str = "workers",
                  pod_size: Optional[int] = None,
                  pod_axis: str = "pods",
-                 queue_sharding=None):
+                 queue_sharding=None,
+                 fault_plan: Optional[FaultPlan] = None):
         if pod_size is not None and n_workers % pod_size != 0:
             raise ValueError(
                 f"n_workers={n_workers} not divisible by pod_size={pod_size}")
+        if fault_plan is not None and pod_size is not None:
+            raise ValueError("fault injection requires flat supersteps "
+                             "(pod_size=None)")
         self.n_workers = int(n_workers)
         self.capacity = int(capacity)
         self.item_spec = item_spec
@@ -176,13 +206,38 @@ class StealRuntime:
                                    capacity=capacity)
         self.rounds_run = 0
         self._compiled: Dict[Any, Callable] = {}
+        # Resilience: the host-side fault schedule (None = machinery off,
+        # zero trace-structure change) and the snapshot cadence.
+        if fault_plan is not None:
+            # The dead-lane sentinel (low_watermark + 1) must be neither
+            # idle-eligible nor a victim, or masked plans would route
+            # work into corpses.
+            lo = self.policy.low_watermark + 1
+            hi = max(self.policy.high_watermark, self.policy.queue_limit)
+            if not (self.policy.low_watermark < lo < hi):
+                raise ValueError(
+                    f"fault injection needs low_watermark + 1 ="
+                    f" {lo} strictly between low_watermark and"
+                    f" max(high_watermark, queue_limit) = {hi}")
+            self.fault: Optional[FaultState] = FaultState(fault_plan,
+                                                          self.n_workers)
+            if fault_plan.kills:
+                self.telemetry.record_fault("planned_kill",
+                                            len(fault_plan.kills))
+        else:
+            self.fault = None
+        self._snapshot_dir: Optional[str] = None
+        self._snapshot_every = 0
+        self._snapshot_keep = 3
+        self._last_snapshot_round = -1
 
     # -- state access --------------------------------------------------------
 
     @property
     def proportion(self) -> float:
-        """The steal proportion the NEXT round will use."""
-        return (self.controller.proportion if self.controller
+        """The steal proportion the NEXT round will use (including any
+        temporary straggler boost the controller is applying)."""
+        return (self.controller.effective_proportion if self.controller
                 else self.policy.proportion)
 
     def sizes(self) -> np.ndarray:
@@ -217,6 +272,152 @@ class StealRuntime:
                 lambda full, one: full.at[i].set(one), self.queues, qi)
         return out
 
+    # -- resilience: live faults, stragglers ---------------------------------
+
+    def _require_fault(self) -> FaultState:
+        if self.fault is None:
+            raise RuntimeError(
+                "fault layer not armed — construct the runtime with "
+                "fault_plan=FaultPlan() to enable kill/revive")
+        return self.fault
+
+    def kill_lane(self, lane: int, at_round: Optional[int] = None) -> None:
+        """Declare lane ``lane`` dead from round ``at_round`` (default:
+        the next round).  Its worker body stops producing, it leaves
+        every plan, and the recovery superstep drains its ring into the
+        survivors at proportion 1.0 over the following rounds.  Pure
+        host-side value mutation — no recompile."""
+        self._require_fault().kill(
+            lane, self.rounds_run if at_round is None else at_round)
+        self.telemetry.record_fault("kill")
+
+    def revive_lane(self, lane: int) -> None:
+        """Re-admit a killed lane (grow / end of eviction): it rejoins
+        plans from the next round with whatever its (drained) ring holds."""
+        self._require_fault().revive(lane)
+        self.telemetry.record_fault("revive")
+
+    def dead_lanes(self) -> np.ndarray:
+        """(W,) bool: lanes dead as of the next round to run."""
+        if self.fault is None:
+            return np.zeros((self.n_workers,), bool)
+        return self.fault.dead_at(self.rounds_run)
+
+    def note_straggler(self, rounds: int = 4, factor: float = 1.5) -> None:
+        """Record a detected straggler (``train.fault.StragglerMonitor``
+        wiring): counts into telemetry and temporarily boosts the
+        adaptive steal proportion so the master rebalances harder while
+        the slow lane lags."""
+        self.telemetry.record_fault("straggler")
+        if self.controller is not None:
+            self.controller.flag_straggler(rounds=rounds, factor=factor)
+
+    def _controller_sizes(self, sizes: np.ndarray) -> np.ndarray:
+        """The size vector the host controller servos on: dead lanes
+        masked to the sentinel (mirrors the on-device masking in the
+        fused path)."""
+        if self.fault is None:
+            return sizes
+        dead = self.fault.dead_at(self.rounds_run + 1)
+        return np.where(dead, np.int32(self.policy.low_watermark + 1),
+                        np.asarray(sizes, np.int32))
+
+    # -- resilience: queue snapshot / restore --------------------------------
+
+    def state_dict(self) -> Dict[str, Any]:
+        """The checkpointable runtime state: the stacked queues, the
+        servo proportion (un-boosted) and the global round counter —
+        plus the fault schedule when armed.  Snapshots are taken only at
+        round boundaries, which are exactly the consistency points where
+        conservation holds (no item is mid-exchange)."""
+        if self.controller is not None:
+            p = self.controller.proportion
+        else:
+            p = self.policy.proportion
+        out: Dict[str, Any] = {
+            "queues": self.queues,
+            "proportion": jnp.float32(p),
+            "rounds_run": jnp.int32(self.rounds_run),
+        }
+        if self.fault is not None:
+            out["fault"] = {k: jnp.asarray(v)
+                            for k, v in self.fault.state_dict().items()}
+        return out
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self.queues = jax.tree_util.tree_map(jnp.asarray, state["queues"])
+        p = float(np.asarray(state["proportion"]))
+        if self.controller is not None:
+            self.controller.proportion = p
+            self.controller.history.append(p)
+        self.rounds_run = int(np.asarray(state["rounds_run"]))
+        if self.fault is not None and "fault" in state:
+            self.fault.load_state({k: np.asarray(v)
+                                   for k, v in state["fault"].items()})
+
+    def _state_shardings(self, template: Dict[str, Any]):
+        """Shardings for elastic restore of :meth:`state_dict` — None in
+        the single-device runtime (plain host arrays); the mesh runtime
+        overrides this to place queue lanes on their owning devices."""
+        del template
+        return None
+
+    def save_state(self, ckpt_dir: str, *, keep: int = 3) -> int:
+        """Atomic queue snapshot at the current round boundary (written
+        via :mod:`repro.train.checkpoint`: tmp dir + rename, keep-k GC).
+        Returns the step (= ``rounds_run``) it was saved under."""
+        from repro.train import checkpoint
+
+        extra = {"n_workers": self.n_workers, "capacity": self.capacity,
+                 "fault_events": dict(self.telemetry.fault_events),
+                 "straggler_steps": self.telemetry.straggler_steps}
+        checkpoint.save(ckpt_dir, self.rounds_run, self.state_dict(),
+                        extra=extra, keep=keep)
+        return self.rounds_run
+
+    def restore_state(self, ckpt_dir: str, *, step: Optional[int] = None
+                      ) -> int:
+        """Restore queues/proportion/round-counter (and fault schedule)
+        from the latest (or given) snapshot.  Elastic: the checkpoint
+        holds full host arrays, and :meth:`_state_shardings` re-places
+        them onto THIS runtime's devices — a snapshot written under an
+        8-device mesh restores onto 1 device or a different mesh shape.
+        Returns the restored round index."""
+        from repro.train import checkpoint
+
+        template = self.state_dict()
+        state, _step, extra = checkpoint.restore(
+            ckpt_dir, template, step=step,
+            shardings=self._state_shardings(template))
+        self.load_state_dict(state)
+        for kind, n in (extra.get("fault_events") or {}).items():
+            self.telemetry.fault_events.setdefault(kind, 0)
+            self.telemetry.fault_events[kind] = max(
+                self.telemetry.fault_events[kind], int(n))
+        self.telemetry.straggler_steps = max(
+            self.telemetry.straggler_steps,
+            int(extra.get("straggler_steps", 0)))
+        self.telemetry.record_fault("restore")
+        self._last_snapshot_round = self.rounds_run
+        return self.rounds_run
+
+    def attach_snapshots(self, ckpt_dir: str, *, every: int = 8,
+                         keep: int = 3) -> None:
+        """Snapshot the queue state every ``every`` rounds (checked after
+        each :meth:`round` / :meth:`run_fused` dispatch — always at a
+        round boundary, never mid-exchange)."""
+        self._snapshot_dir = ckpt_dir
+        self._snapshot_every = max(int(every), 1)
+        self._snapshot_keep = keep
+        self._last_snapshot_round = self.rounds_run
+
+    def _maybe_snapshot(self) -> None:
+        if self._snapshot_dir is None:
+            return
+        if self.rounds_run - self._last_snapshot_round >= self._snapshot_every:
+            self.save_state(self._snapshot_dir, keep=self._snapshot_keep)
+            self._last_snapshot_round = self.rounds_run
+
     # -- the round -----------------------------------------------------------
 
     def _lane_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
@@ -224,30 +425,42 @@ class StealRuntime:
         return make_lane_step(self.policy, self.ops, worker_fn,
                               axis_name=self.axis_name,
                               pod_axis=self.pod_axis,
-                              hierarchical=self.pod_size is not None)
+                              hierarchical=self.pod_size is not None,
+                              fault=self.fault is not None)
+
+    def _ctx(self, round0: int):
+        """The fault context for a dispatch starting at global round
+        ``round0``: the replicated schedule dict when the fault layer is
+        armed, a bare int32 round index otherwise (both are traced, so
+        host-side schedule mutation never recompiles)."""
+        if self.fault is not None:
+            return self.fault.ctx(round0)
+        return jnp.int32(round0)
 
     def _make_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
-        """Un-jitted ``(qs, carry, proportion) -> (qs, carry, stats)``."""
+        """Un-jitted ``(qs, carry, proportion, ctx) -> (qs, carry, stats)``."""
         pod_size = self.pod_size
         axis_name, pod_axis = self.axis_name, self.pod_axis
         lane = self._lane_step(worker_fn)
 
         if pod_size is None:
             mapped = jax.vmap(lane, axis_name=axis_name,
-                              in_axes=(0, 0, None))
+                              in_axes=(0, 0, None, None))
 
-            def step(qs, carry, proportion):
-                return mapped(qs, carry, proportion)
+            def step(qs, carry, proportion, ctx):
+                return mapped(qs, carry, proportion, ctx)
         else:
             n_pods = self.n_workers // pod_size
-            inner = jax.vmap(lane, axis_name=axis_name, in_axes=(0, 0, None))
-            outer = jax.vmap(inner, axis_name=pod_axis, in_axes=(0, 0, None))
+            inner = jax.vmap(lane, axis_name=axis_name,
+                             in_axes=(0, 0, None, None))
+            outer = jax.vmap(inner, axis_name=pod_axis,
+                             in_axes=(0, 0, None, None))
 
-            def step(qs, carry, proportion):
+            def step(qs, carry, proportion, ctx):
                 split = jax.tree_util.tree_map(
                     lambda x: x.reshape((n_pods, pod_size) + x.shape[1:]),
                     (qs, carry))
-                qs2, carry2, stats = outer(*split, proportion)
+                qs2, carry2, stats = outer(*split, proportion, ctx)
                 merge = jax.tree_util.tree_map(
                     lambda x: x.reshape((self.n_workers,) + x.shape[2:]),
                     (qs2, carry2, stats))
@@ -277,46 +490,51 @@ class StealRuntime:
         policy, controller = self.policy, self.controller
         config = controller.config if controller else None
 
-        def one_round(qs, carry, p):
-            qs, carry, stats = step(qs, carry, p)
+        def one_round(qs, carry, p, ctx):
+            qs, carry, stats = step(qs, carry, p, ctx)
             tele = {"stats": stats, "sizes": qs.size, "proportion": p}
+            ctx = resilience.ctx_advance(ctx)
             if controller is not None:
-                p = adaptive_update(p, qs.size, policy=policy, config=config)
-            return qs, carry, p, tele
+                # Dead lanes advertise the sentinel, never counting as
+                # idle thieves (same masking the host controller applies).
+                sizes = resilience.mask_sizes(qs.size, ctx, policy)
+                p = adaptive_update(p, sizes, policy=policy, config=config)
+            return qs, carry, p, ctx, tele
 
         if not until_drained:
-            def fused(qs, carry, p0):
+            def fused(qs, carry, p0, ctx0):
                 def body(state, _):
-                    qs, carry, p = state
-                    qs, carry, p, tele = one_round(qs, carry, p)
-                    return (qs, carry, p), tele
+                    qs, carry, p, ctx = state
+                    qs, carry, p, ctx, tele = one_round(qs, carry, p, ctx)
+                    return (qs, carry, p, ctx), tele
 
-                (qs, carry, p), tele = lax.scan(body, (qs, carry, p0), None,
-                                                length=k)
+                (qs, carry, p, _ctx), tele = lax.scan(
+                    body, (qs, carry, p0, ctx0), None, length=k)
                 return qs, carry, p, tele, jnp.int32(k)
 
             return jax.jit(fused, donate_argnums=self._donate_argnums())
 
-        def fused(qs, carry, p0):
+        def fused(qs, carry, p0, ctx0):
             tele_sds = jax.eval_shape(
-                lambda a, b, c: one_round(a, b, c)[3], qs, carry, p0)
+                lambda a, b, c, d: one_round(a, b, c, d)[4], qs, carry, p0,
+                ctx0)
             tele0 = jax.tree_util.tree_map(
                 lambda s: jnp.zeros((k,) + tuple(s.shape), s.dtype), tele_sds)
 
             def cond(state):
-                qs, _carry, _p, r, _tele = state
+                qs, _carry, _p, _ctx, r, _tele = state
                 return (r < k) & (jnp.sum(qs.size) > 0)
 
             def body(state):
-                qs, carry, p, r, tele = state
-                qs, carry, p, t = one_round(qs, carry, p)
+                qs, carry, p, ctx, r, tele = state
+                qs, carry, p, ctx, t = one_round(qs, carry, p, ctx)
                 tele = jax.tree_util.tree_map(
                     lambda buf, v: lax.dynamic_update_index_in_dim(
                         buf, v, r, 0), tele, t)
-                return (qs, carry, p, r + 1, tele)
+                return (qs, carry, p, ctx, r + 1, tele)
 
-            qs, carry, p, r, tele = lax.while_loop(
-                cond, body, (qs, carry, p0, jnp.int32(0), tele0))
+            qs, carry, p, _ctx, r, tele = lax.while_loop(
+                cond, body, (qs, carry, p0, ctx0, jnp.int32(0), tele0))
             return qs, carry, p, tele, r
 
         return jax.jit(fused, donate_argnums=self._donate_argnums())
@@ -377,7 +595,8 @@ class StealRuntime:
         snap = self._pre_dispatch_snapshot(worker_fn)
         proportion = self.proportion
         self.queues, carry, stats = fn(self.queues, carry,
-                                       jnp.float32(proportion))
+                                       jnp.float32(proportion),
+                                       self._ctx(self.rounds_run))
         sizes = self.sizes()
         n_steals, n_transferred, bytes_moved = self._round_counts(stats)
         if self._check:
@@ -389,8 +608,9 @@ class StealRuntime:
                               proportion=proportion,
                               bytes_moved=bytes_moved)
         if self.controller is not None:
-            self.controller.update(sizes)
+            self.controller.update(self._controller_sizes(sizes))
         self.rounds_run += 1
+        self._maybe_snapshot()
         return carry, stats
 
     def run_fused(self, k: int, worker_fn: Optional[WorkerFn] = None,
@@ -432,7 +652,8 @@ class StealRuntime:
             carry = jnp.zeros((self.n_workers,), jnp.int32)
         snap = self._pre_dispatch_snapshot(worker_fn)
         p0 = jnp.float32(self.proportion)
-        self.queues, carry, p_final, tele, rounds = fn(self.queues, carry, p0)
+        self.queues, carry, p_final, tele, rounds = fn(
+            self.queues, carry, p0, self._ctx(self.rounds_run))
         rounds = int(rounds)
         # ONE host read-back for the whole fused run.
         tele = jax.tree_util.tree_map(np.asarray, tele)
@@ -454,6 +675,7 @@ class StealRuntime:
             self.controller.absorb(tele["proportion"][:rounds],
                                    float(p_final))
         self.rounds_run += rounds
+        self._maybe_snapshot()
         if until_drained:
             stats = jax.tree_util.tree_map(lambda x: x[:rounds], stats)
             return carry, stats, rounds

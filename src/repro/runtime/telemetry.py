@@ -97,6 +97,8 @@ class WaveRecord:
     served: int                # requests completed this wave
     tokens: int                # tokens generated this wave (0 if n/a)
     loads: Sequence[int]       # per-worker load after the wave
+    evicted: int = 0           # workers evicted (cumulative) at this wave
+    stragglers: int = 0        # straggler flags raised this wave
 
 
 class Telemetry:
@@ -109,6 +111,12 @@ class Telemetry:
         self.n_bins = n_bins
         self.rounds: List[RoundRecord] = []
         self.waves: List[WaveRecord] = []
+        # Resilience counters: kills / restarts / evictions / shrink /
+        # grow events and straggler flags, recorded by the runtime's
+        # fault layer next to the round + wave streams so one telemetry
+        # object tells the whole story of a faulted run.
+        self.fault_events: Dict[str, int] = {}
+        self.straggler_steps = 0
 
     def record(self, *, sizes, n_steals: int, n_transferred: int,
                proportion: float, bytes_moved: int = 0) -> RoundRecord:
@@ -130,17 +138,28 @@ class Telemetry:
         self.rounds.append(rec)
         return rec
 
-    def record_wave(self, *, loads, served: int,
-                    tokens: int = 0) -> WaveRecord:
+    def record_wave(self, *, loads, served: int, tokens: int = 0,
+                    evicted: int = 0, stragglers: int = 0) -> WaveRecord:
         """Append one workload wave (serving tick, solver epoch, ...)."""
         rec = WaveRecord(
             wave=len(self.waves),
             served=int(served),
             tokens=int(tokens),
             loads=tuple(int(x) for x in np.asarray(loads).reshape(-1)),
+            evicted=int(evicted),
+            stragglers=int(stragglers),
         )
         self.waves.append(rec)
         return rec
+
+    def record_fault(self, kind: str, n: int = 1) -> None:
+        """Count one resilience event (``"kill"`` / ``"restart"`` /
+        ``"evict"`` / ``"shrink"`` / ``"grow"`` / ``"straggler"`` / ...).
+        Straggler flags additionally feed :attr:`straggler_steps`, the
+        counter :meth:`summary` exports."""
+        self.fault_events[kind] = self.fault_events.get(kind, 0) + int(n)
+        if kind == "straggler":
+            self.straggler_steps += int(n)
 
     # -- aggregates ----------------------------------------------------------
 
@@ -187,4 +206,7 @@ class Telemetry:
             out["waves"] = len(self.waves)
             out["served"] = self.total_served
             out["tokens"] = self.total_tokens
+        out["straggler_steps"] = self.straggler_steps
+        if self.fault_events:
+            out["faults"] = dict(self.fault_events)
         return out

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.serve.kv_cache import pad_cache
 from repro.serve.scheduler import AdmissionMaster, Request
+from repro.train.fault import StragglerMonitor
 
 __all__ = ["Replica", "ServeCluster"]
 
@@ -97,7 +98,8 @@ class ServeCluster:
                  master: Optional[AdmissionMaster] = None,
                  rebalance_rounds: int = 1,
                  execution: str = "host",
-                 admission_capacity: int = 512):
+                 admission_capacity: int = 512,
+                 straggler_threshold: float = 2.0):
         self.replicas = replicas
         if master is None:
             if execution == "host":
@@ -111,6 +113,22 @@ class ServeCluster:
         self.master = master
         self.rebalance_rounds = int(rebalance_rounds)
         self.done: List[Request] = []
+        # One wall-clock straggler detector per replica; a flagged wave
+        # counts into telemetry and boosts the master's steal proportion
+        # (``note_straggler``) so work drains AWAY from the slow replica.
+        self.monitors = [StragglerMonitor(threshold=straggler_threshold)
+                         for _ in replicas]
+
+    def evict_replica(self, replica_id: int) -> int:
+        """Planned eviction: the master drains the replica's queued
+        requests onto the other lanes (device masters steal the whole
+        ring at proportion 1.0 through the recovery superstep); the
+        replica receives no further waves until :meth:`readmit_replica`.
+        Returns the number of requests drained."""
+        return self.master.evict(replica_id)
+
+    def readmit_replica(self, replica_id: int) -> None:
+        self.master.readmit(replica_id)
 
     @property
     def telemetry(self):
@@ -123,20 +141,31 @@ class ServeCluster:
 
     def step(self) -> int:
         served = 0
+        stragglers = 0
         tokens_before = sum(r.tokens_generated for r in self.replicas)
         for rid, rep in enumerate(self.replicas):
             rq = self.master.replicas[rid]
+            if getattr(rq, "evicted", False):
+                continue  # drained and masked out; no new waves
             # straggler simulation: slow replicas take smaller waves
             wave_n = max(1, int(rep.wave_size * rep.speed))
+            mon = self.monitors[rid]
+            mon.start()
             wave = rq.pop_wave(wave_n)
             finished = rep.run_wave(wave)
+            if mon.observe() and wave:
+                stragglers += 1
+                self.master.note_straggler()
             rq.finish_wave(len(finished))
             self.done.extend(finished)
             served += len(finished)
         tokens = sum(r.tokens_generated for r in self.replicas) - tokens_before
+        evicted = sum(1 for r in self.master.replicas
+                      if getattr(r, "evicted", False))
         self.telemetry.record_wave(
             loads=[r.load() for r in self.master.replicas],
-            served=served, tokens=tokens)
+            served=served, tokens=tokens,
+            evicted=evicted, stragglers=stragglers)
         self.master.rebalance_many(self.rebalance_rounds)
         return served
 

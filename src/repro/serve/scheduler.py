@@ -59,6 +59,7 @@ class ReplicaQueue:
         self.q: HostQueue = queue_factory()
         self.in_flight = 0
         self.completed = 0
+        self.evicted = False
 
     def load(self) -> int:
         return len(self.q) + self.in_flight
@@ -98,34 +99,83 @@ class AdmissionMaster:
 
     @property
     def proportion(self) -> float:
-        return (self.controller.proportion if self.controller
+        return (self.controller.effective_proportion if self.controller
                 else self.policy.proportion)
 
     # -- admission -----------------------------------------------------------
 
     def submit(self, requests: Sequence[Request]) -> int:
         """Bulk-admit to the least-loaded replica (ONE splice)."""
-        target = min(self.replicas, key=lambda r: r.load())
+        live = [r for r in self.replicas if not r.evicted]
+        if not live:
+            raise RuntimeError("every replica is evicted; nothing can admit")
+        target = min(live, key=lambda r: r.load())
         # push_bulk's deque convention (later = newer): the engine pops
         # the newest request first while the oldest sit at the tail —
         # exactly what the master's locality-preserving tail steal wants.
         target.q.push_bulk(list(requests))
         return target.replica_id
 
+    # -- planned eviction ----------------------------------------------------
+
+    def evict(self, replica_id: int) -> int:
+        """Planned eviction: drain replica ``replica_id``'s whole queue
+        onto the least-loaded live replica (the host analogue of the
+        executors' proportion-1.0 recovery plan), then mark it out of
+        admission and rebalancing.  The drain is OWNER-side (pop + one
+        bulk splice): a stealer-side proportion-1.0 cut skips zero nodes,
+        which the §IV interference guard always aborts — and eviction is
+        the master acting on a queue it owns, not a racing stealer.
+        In-flight requests finish where they are; the engine stops
+        handing the replica new waves.  Returns the number of requests
+        drained."""
+        victim = self.replicas[replica_id]
+        live = [r for r in self.replicas
+                if not r.evicted and r.replica_id != replica_id]
+        if not live:
+            raise RuntimeError("cannot evict the last live replica")
+        items = []
+        while True:
+            item = victim.q.pop_item()
+            if item is None:
+                break
+            items.append(item)
+        items.reverse()  # pops came newest-first; re-push oldest-first
+        if items:
+            target = min(live, key=lambda r: r.load())
+            target.q.push_bulk(items)
+        victim.evicted = True
+        self.telemetry.record_fault("evict")
+        return len(items)
+
+    def readmit(self, replica_id: int) -> None:
+        """Re-admit an evicted replica: it rejoins admission and the
+        idle side of rebalancing from the next round."""
+        self.replicas[replica_id].evicted = False
+        self.telemetry.record_fault("readmit")
+
+    def note_straggler(self, rounds: int = 4, factor: float = 1.5) -> None:
+        """A replica was flagged slow: count it and temporarily boost the
+        steal proportion (same response the device runtime applies)."""
+        self.telemetry.record_fault("straggler")
+        if self.controller is not None:
+            self.controller.flag_straggler(rounds=rounds, factor=factor)
+
     # -- rebalancing ---------------------------------------------------------
 
     def rebalance(self) -> int:
         """One master round: pair drained replicas with overloaded ones and
         bulk-steal the victim's tail.  At most one steal per victim per
-        round (single-stealer invariant)."""
+        round (single-stealer invariant).  Evicted replicas are neither
+        thieves nor victims."""
         self.rounds += 1
         pol = self.policy
         proportion = self.proportion
         idle = sorted((r for r in self.replicas
-                       if len(r.q) <= pol.low_watermark),
+                       if not r.evicted and len(r.q) <= pol.low_watermark),
                       key=lambda r: r.load())
         busy = sorted((r for r in self.replicas
-                       if len(r.q) >= pol.high_watermark),
+                       if not r.evicted and len(r.q) >= pol.high_watermark),
                       key=lambda r: -len(r.q))
         moved = 0
         n_steals = 0
@@ -163,6 +213,7 @@ class AdmissionMaster:
             "loads": [r.load() for r in self.replicas],
             "queued": [len(r.q) for r in self.replicas],
             "completed": [r.completed for r in self.replicas],
+            "evicted": [r.replica_id for r in self.replicas if r.evicted],
             "stolen": self.stolen,
             "rounds": self.rounds,
             "proportion": self.proportion,

@@ -30,12 +30,34 @@ Pytree = Any
 __all__ = ["save", "restore", "latest_step", "Checkpointer"]
 
 
+def _entry_name(p: Any) -> str:
+    """Stable name for one pytree-path entry.  DictKey carries ``.key``,
+    SequenceKey ``.idx``, GetAttrKey (NamedTuples/dataclasses, e.g.
+    ``QueueState``) ``.name`` — probe all three before falling back to
+    ``str(p)``, whose reprs (``.buf`` vs ``GetAttrKey(name='buf')``)
+    are not stable across jax versions."""
+    for attr in ("key", "idx", "name"):
+        v = getattr(p, attr, None)
+        if v is not None:
+            return str(v)
+    return str(p)
+
+
+def _path_key(path) -> str:
+    return "/".join(_entry_name(p) for p in path)
+
+
+def _legacy_path_key(path) -> str:
+    # The pre-fix key (no ``.name`` probe): read-compat for checkpoints
+    # written before GetAttrKey entries were named properly.
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
 def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        flat[key] = np.asarray(jax.device_get(leaf))
+        flat[_path_key(path)] = np.asarray(jax.device_get(leaf))
     return flat
 
 
@@ -43,9 +65,10 @@ def _unflatten(template: Pytree, flat: Dict[str, np.ndarray]) -> Pytree:
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path, leaf in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        arr = flat[key]
+        key = _path_key(path)
+        arr = flat.get(key)
+        if arr is None:
+            arr = flat[_legacy_path_key(path)]
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -94,7 +94,10 @@ def run_supervised(run: Callable[[Optional[int]], int],
     for attempt in range(max_restarts + 1):
         try:
             return run(resume)
-        except KeyboardInterrupt:
+        except (KeyboardInterrupt, SystemExit, GeneratorExit):
+            # Deliberate shutdown paths, not crashes: swallowing
+            # SystemExit would turn `sys.exit()` (e.g. a GracefulExit
+            # handler deciding to stop) into a restart loop.
             raise
         except BaseException as e:  # noqa: BLE001 — restart-on-anything
             if attempt == max_restarts:

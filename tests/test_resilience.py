@@ -1,0 +1,400 @@
+"""Fault injection, recovery, snapshots, elastic resize, eviction.
+
+Same dual execution shape as ``tests/test_distributed.py``: with >= 8
+devices (the CI ``chaos`` lane exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and
+``REPRO_CHECK=1`` before pytest starts) the checks run in-process;
+otherwise a subprocess sets both before jax initializes and runs the
+identical checks.
+
+The checks:
+
+* **Deterministic replay, kill mid-drain** — the Fig. 9 DAG workload
+  with a seeded ``FaultPlan`` killing a lane mid-drain: vmap and mesh
+  execute the identical failure and recovery (queues, telemetry,
+  adaptive trajectory bit-identical), every node is still explored
+  exactly once (the dead ring is redistributed through the
+  proportion-1.0 recovery superstep), and the sanitizer sees zero
+  violations.
+* **Snapshot -> crash -> resume** — a run snapshotting every k rounds is
+  killed; a fresh runtime restores the latest snapshot, resumes, and
+  lands on the bit-identical final queue state of the uninterrupted run.
+* **Elastic re-shard** — a snapshot written by the 8-device mesh runtime
+  restores bit-identically onto the single-device vmapped runtime and
+  onto a fresh mesh.
+* **Shrink / grow** — evacuation drains doomed lanes through recovery
+  steals; the rebuilt smaller/larger runtime preserves the exact item
+  multiset and carries telemetry + rounds.
+* **Planned eviction** — both admission masters drain an evicted
+  replica's queued requests onto survivors, stop admitting to it, and
+  re-admit it later.
+* **Straggler wiring** — ``note_straggler`` counts into telemetry and
+  temporarily boosts the emitted steal proportion.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+_HAVE_8 = jax.device_count() >= 8
+
+_CHECKS = textwrap.dedent("""
+    import tempfile
+
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax import lax
+
+    from repro.core.policy import StealPolicy
+    from repro.distributed import (MeshStealRuntime, evacuate, grow,
+                                   launch_runtime, shrink)
+    from repro.launch.mesh import make_worker_mesh
+    from repro.runtime import FaultPlan, StealRuntime
+    from repro.runtime.resilience import NEVER, FaultState, recovery_plan
+
+    SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+    DSPEC = {"x": SPEC}
+
+    def tree_eq(a, b):
+        jax.tree_util.tree_map(
+            lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                       np.asarray(y)), a, b)
+
+    def items_of(rt):
+        q = jax.tree_util.tree_map(np.asarray, rt.queues)
+        leaf = q.buf["x"] if isinstance(q.buf, dict) else q.buf
+        cap = leaf.shape[1]
+        out = []
+        for i in range(rt.n_workers):
+            lo, sz = int(q.lo[i]), int(q.size[i])
+            out += [int(leaf[i][(lo + j) % cap]) for j in range(sz)]
+        return sorted(out)
+
+    # -- deterministic replay: kill one lane mid-drain on the fig9 DAG ------
+
+    N_NODES, BATCH, FANOUT = 3000, 16, 4
+
+    def dag_body(ops):
+        def body(q, carry):
+            q, nodes, n_popped = ops.pop_bulk(q, BATCH, jnp.int32(BATCH))
+            valid = jnp.arange(BATCH, dtype=jnp.int32) < n_popped
+            kids = (nodes[:, None] * FANOUT + 1
+                    + jnp.arange(FANOUT, dtype=jnp.int32)[None, :])
+            live = valid[:, None] & (kids < N_NODES)
+            flat, flive = kids.reshape(-1), live.reshape(-1)
+            order = jnp.argsort(~flive, stable=True)
+            flat = jnp.where(flive[order], flat[order], 0)
+            q, _ = ops.push(q, flat, jnp.sum(flive.astype(jnp.int32)))
+            peak = lax.pmax(carry, "workers")
+            return q, carry + jnp.sum(valid.astype(jnp.int32)) + 0 * peak
+        return body
+
+    def replay_checks():
+        pol = StealPolicy(proportion=0.5, low_watermark=4,
+                          high_watermark=32, max_steal=64)
+        # Lane 3 dies at round 6 (mid-drain), lane 5 straggles, one
+        # exchange is dropped — all scheduled, all replayed identically.
+        plan = FaultPlan(kills=((3, 6),), delays=((5, 4, 2),), drops=(8,))
+        results = {}
+        for mode in ("vmap", "mesh"):
+            rt = launch_runtime(8, 1024, SPEC, execution=mode, policy=pol,
+                                max_pop=BATCH, fault_plan=plan)
+            rt.push(0, jnp.zeros((1,), jnp.int32), 1)
+            body = dag_body(rt.ops)
+            carry = jnp.zeros((8,), jnp.int32)
+            rounds = 0
+            while rt.total_size() > 0 and rounds < 500:
+                carry, _, r = rt.run_fused(16, body, carry,
+                                           until_drained=True)
+                rounds += r
+            assert (rt.sizes()[rt.dead_lanes()] == 0).all()
+            results[mode] = (int(jnp.sum(carry)),
+                             np.asarray(carry).tolist(), rounds,
+                             rt.telemetry.summary(),
+                             rt.controller.history,
+                             np.asarray(rt.sizes()).tolist())
+        # every node explored exactly once, despite the kill
+        assert results["vmap"][0] == results["mesh"][0] == N_NODES
+        # dead lane's carry froze at its kill round, identically
+        assert results["vmap"][1] == results["mesh"][1]
+        assert results["vmap"][2] == results["mesh"][2]  # rounds to drain
+        assert results["vmap"][3] == results["mesh"][3]  # telemetry summary
+        assert results["vmap"][4] == results["mesh"][4]  # proportions
+        assert results["vmap"][5] == results["mesh"][5]  # final sizes
+        print("REPLAY-OK", results["mesh"][2])
+
+    def replay_determinism_checks():
+        # The same seed gives the same plan; replaying the same plan on
+        # the same workload gives bit-identical queues.
+        assert (FaultPlan.random(8, seed=11, n_kills=2, n_delays=1)
+                == FaultPlan.random(8, seed=11, n_kills=2, n_delays=1))
+        assert (FaultPlan.random(8, seed=11, n_kills=2)
+                != FaultPlan.random(8, seed=12, n_kills=2))
+        plan = FaultPlan.random(8, seed=11, n_kills=2, n_drops=1)
+        outs = []
+        for _ in range(2):
+            rt = StealRuntime(8, 128, DSPEC,
+                              policy=StealPolicy(backend="reference"),
+                              fault_plan=plan)
+            rng = np.random.default_rng(3)
+            for w in range(8):
+                n = int(rng.integers(5, 40))
+                rt.push(w, {"x": jnp.arange(w * 100, w * 100 + n,
+                                            dtype=jnp.int32)}, n)
+            rt.run_fused(18)
+            outs.append(jax.tree_util.tree_map(np.asarray, rt.queues))
+        tree_eq(outs[0], outs[1])
+        print("REPLAY-DETERMINISM-OK")
+
+    # -- snapshot -> crash -> bit-identical resume ---------------------------
+
+    def snapshot_resume_checks():
+        pol = StealPolicy(backend="reference")
+        plan = FaultPlan(kills=((2, 5),))
+
+        def mk(mode):
+            rt = launch_runtime(8, 128, DSPEC, execution=mode, policy=pol,
+                                fault_plan=plan)
+            rng = np.random.default_rng(5)
+            for w in range(8):
+                n = int(rng.integers(5, 40))
+                rt.push(w, {"x": jnp.arange(w * 100, w * 100 + n,
+                                            dtype=jnp.int32)}, n)
+            return rt
+
+        for mode in ("vmap", "mesh"):
+            gold = mk(mode)
+            for _ in range(9):
+                gold.round()
+
+            d = tempfile.mkdtemp()
+            crashing = mk(mode)
+            crashing.attach_snapshots(d, every=3)
+            for _ in range(7):   # "crash" after round 7; snapshot at 6
+                crashing.round()
+            del crashing
+
+            resumed = mk(mode)
+            step = resumed.restore_state(d)
+            assert step == 6, step
+            while resumed.rounds_run < 9:
+                resumed.round()
+            tree_eq(jax.tree_util.tree_map(np.asarray, gold.queues),
+                    jax.tree_util.tree_map(np.asarray, resumed.queues))
+            assert resumed.rounds_run == gold.rounds_run
+            assert (resumed.controller.proportion
+                    == gold.controller.proportion)
+            assert resumed.telemetry.fault_events.get("restore") == 1
+        print("SNAPSHOT-RESUME-OK")
+
+    # -- elastic re-shard: mesh snapshot -> 1 device / fresh mesh ------------
+
+    def elastic_reshard_checks():
+        pol = StealPolicy(backend="reference")
+        plan = FaultPlan(kills=((2, 5),))
+        ms = MeshStealRuntime(make_worker_mesh(8), 128, DSPEC, policy=pol,
+                              fault_plan=plan)
+        rng = np.random.default_rng(5)
+        for w in range(8):
+            n = int(rng.integers(5, 40))
+            ms.push(w, {"x": jnp.arange(w * 100, w * 100 + n,
+                                        dtype=jnp.int32)}, n)
+        for _ in range(7):
+            ms.round()
+        d = tempfile.mkdtemp()
+        ms.save_state(d)
+
+        # onto ONE device (the vmapped runtime): bit-identical state
+        vm = StealRuntime(8, 128, DSPEC, policy=pol, fault_plan=plan)
+        vm.restore_state(d)
+        tree_eq(jax.tree_util.tree_map(np.asarray, ms.queues),
+                jax.tree_util.tree_map(np.asarray, vm.queues))
+        assert vm.rounds_run == ms.rounds_run
+        assert len(set(jax.tree_util.tree_leaves(vm.queues)[0].devices())) == 1
+
+        # onto a fresh mesh: bit-identical AND lane-sharded again
+        ms2 = MeshStealRuntime(make_worker_mesh(8), 128, DSPEC, policy=pol,
+                               fault_plan=plan)
+        ms2.restore_state(d)
+        tree_eq(jax.tree_util.tree_map(np.asarray, ms.queues),
+                jax.tree_util.tree_map(np.asarray, ms2.queues))
+        assert len(set(jax.tree_util.tree_leaves(
+            ms2.queues)[0].devices())) == 8
+
+        # and the re-sharded runtimes CONTINUE identically
+        ms.round(); vm.round(); ms2.round()
+        tree_eq(jax.tree_util.tree_map(np.asarray, ms.queues),
+                jax.tree_util.tree_map(np.asarray, vm.queues))
+        tree_eq(jax.tree_util.tree_map(np.asarray, ms.queues),
+                jax.tree_util.tree_map(np.asarray, ms2.queues))
+        print("ELASTIC-RESHARD-OK")
+
+    # -- shrink / grow -------------------------------------------------------
+
+    def shrink_grow_checks():
+        pol = StealPolicy(backend="reference")
+        for mode in ("vmap", "mesh"):
+            rt = launch_runtime(8, 128, DSPEC, execution=mode, policy=pol,
+                                fault_plan=FaultPlan())
+            rng = np.random.default_rng(0)
+            for w in range(8):
+                n = int(rng.integers(5, 40))
+                rt.push(w, {"x": jnp.arange(w * 100, w * 100 + n,
+                                            dtype=jnp.int32)}, n)
+            before = items_of(rt)
+            rt.round()
+            small = shrink(rt, [2, 5])
+            assert small.n_workers == 6
+            assert items_of(small) == before            # exact multiset
+            assert small.telemetry.fault_events["shrink"] == 2
+            big = grow(small, 2)
+            assert big.n_workers == 8
+            assert items_of(big) == before
+            assert (big.sizes()[-2:] == 0).all()        # newcomers empty
+            big.round(); big.round()
+            assert (big.sizes()[-2:] > 0).any()         # ...then fed
+            assert items_of(big) == before
+        # can't evacuate everything
+        rt = StealRuntime(2, 64, DSPEC, policy=pol, fault_plan=FaultPlan())
+        try:
+            evacuate(rt, [0, 1])
+        except ValueError as e:
+            assert "live lane" in str(e)
+        else:
+            raise AssertionError("evacuating every lane accepted")
+        print("SHRINK-GROW-OK")
+
+    # -- planned eviction (both admission masters) ---------------------------
+
+    def evict_checks():
+        from repro.distributed import RuntimeAdmissionMaster
+        from repro.serve.scheduler import AdmissionMaster, Request
+
+        def drive(master):
+            master.submit([Request(prompt=[1, 2, 3]) for _ in range(24)])
+            master.rebalance_many(8)
+            victim = int(np.argmax([len(r.q) if hasattr(r.q, "__len__")
+                                    else 0 for r in master.replicas]))
+            queued_before = sum(
+                len(r.q) for r in master.replicas)
+            drained = master.evict(victim)
+            assert drained > 0
+            assert sum(len(r.q) for r in master.replicas) == queued_before
+            assert len(master.replicas[victim].q) == 0
+            assert master.replicas[victim].evicted
+            # admission skips the evicted replica
+            target = master.submit([Request(prompt=[4])])
+            assert target != victim
+            st = master.stats()
+            assert st["evicted"] == [victim]
+            assert st["telemetry"]["faults"]["evict"] == 1
+            master.readmit(victim)
+            assert not master.replicas[victim].evicted
+            assert master.stats()["evicted"] == []
+
+        drive(AdmissionMaster(4))
+        for mode in ("vmap", "mesh"):
+            drive(RuntimeAdmissionMaster(8, execution=mode, capacity=64))
+        print("EVICT-OK")
+
+    # -- straggler wiring ----------------------------------------------------
+
+    def straggler_checks():
+        rt = StealRuntime(4, 64, DSPEC,
+                          policy=StealPolicy(backend="reference"),
+                          fault_plan=FaultPlan())
+        p0 = rt.proportion
+        rt.note_straggler(rounds=3, factor=2.0)
+        assert rt.proportion > p0
+        assert rt.telemetry.summary()["straggler_steps"] == 1
+        rt.push(0, {"x": jnp.arange(30, dtype=jnp.int32)}, 30)
+        for _ in range(4):
+            rt.round()
+        assert rt.proportion <= max(p0, rt.controller.proportion)  # decayed
+        assert rt.controller._boost_rounds_left == 0
+        print("STRAGGLER-OK")
+
+    def fault_state_checks():
+        # schedule compilation + mutation semantics
+        plan = FaultPlan(kills=((1, 4), (1, 2)), delays=((0, 3, 2),),
+                         drops=(5, 5, 7))
+        st = FaultState(plan, 4)
+        assert st.kill_round[1] == 2          # earliest kill wins
+        assert list(st.drop_rounds) == [5, 7]  # deduped, sorted
+        assert st.dead_at(3)[1] and not st.dead_at(1)[1]
+        st.revive(1)
+        assert st.kill_round[1] == NEVER
+        try:
+            FaultPlan(kills=((0, 1), (1, 1))).validate(2)
+        except ValueError as e:
+            assert "every lane" in str(e)
+        else:
+            raise AssertionError("total-kill plan accepted")
+        try:
+            StealRuntime(4, 64, DSPEC, pod_size=2, fault_plan=FaultPlan())
+        except ValueError as e:
+            assert "flat" in str(e)
+        else:
+            raise AssertionError("fault + hierarchical accepted")
+        # recovery_plan: dead fullest -> alive emptiest, capacity-clamped
+        sizes = jnp.asarray([10, 50, 7, 0], jnp.int32)
+        dead = jnp.asarray([False, True, False, True])
+        plan = np.asarray(recovery_plan(sizes, dead, max_steal=64,
+                                        capacity=64))
+        assert plan[2].tolist() == [1, 50]   # emptiest survivor robs lane 1
+        assert plan[1][1] == 0 and plan[0][1] == 0 and plan[3][1] == 0
+        plan = np.asarray(recovery_plan(sizes, dead, max_steal=16,
+                                        capacity=64))
+        assert plan[2].tolist() == [1, 16]   # window-bounded per round
+        plan = np.asarray(recovery_plan(sizes, dead, max_steal=64,
+                                        capacity=52))
+        assert plan[2].tolist() == [1, 45]   # free-space clamp (52 - 7)
+        sizes = jnp.asarray([50, 50, 7, 0], jnp.int32)
+        dead = jnp.asarray([False, True, False, False])
+        plan = np.asarray(recovery_plan(sizes, dead, max_steal=64,
+                                        capacity=52))
+        assert plan[3].tolist() == [1, 50]
+        assert int(plan[:, 1].sum()) == 50
+        print("FAULT-STATE-OK")
+
+    def run_checks():
+        assert jax.device_count() >= 8, jax.device_count()
+        fault_state_checks()
+        replay_determinism_checks()
+        replay_checks()
+        snapshot_resume_checks()
+        elastic_reshard_checks()
+        shrink_grow_checks()
+        evict_checks()
+        straggler_checks()
+        print("RESILIENCE-OK")
+""")
+
+
+@pytest.mark.skipif(not _HAVE_8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8 before jax init (CI chaos lane)")
+def test_resilience_inprocess():
+    ns = {}
+    exec(compile(_CHECKS, "<resilience-checks>", "exec"), ns)
+    ns["run_checks"]()
+
+
+@pytest.mark.skipif(_HAVE_8, reason="in-process variant runs instead")
+def test_resilience_subprocess():
+    script = ('import os\n'
+              'os.environ["XLA_FLAGS"] = '
+              '"--xla_force_host_platform_device_count=8"\n'
+              'os.environ["REPRO_CHECK"] = "1"\n'
+              + _CHECKS + "\nrun_checks()\n")
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "RESILIENCE-OK" in out.stdout, out.stderr[-3000:]

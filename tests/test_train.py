@@ -109,6 +109,48 @@ def test_run_supervised_restarts():
     assert calls == [None, -1, -1]
 
 
+def test_run_supervised_reraises_exits():
+    """SystemExit (GracefulExit's sys.exit) and GeneratorExit must
+    propagate, not be retried as crashes."""
+    for exc in (SystemExit, GeneratorExit, KeyboardInterrupt):
+        calls = []
+
+        def run(resume, _exc=exc, _calls=calls):
+            _calls.append(resume)
+            raise _exc()
+
+        with pytest.raises(exc):
+            run_supervised(run, max_restarts=3)
+        assert calls == [None]  # no restart attempts
+
+
+def test_checkpoint_queue_state_keys(tmp_path):
+    """NamedTuple leaves (QueueState) flatten to field-named keys, not
+    GetAttrKey reprs, and round-trip bit-identically."""
+    from repro.runtime import StealRuntime
+
+    rt = StealRuntime(2, 8, {"x": jax.ShapeDtypeStruct((), jnp.int32)})
+    rt.push(0, {"x": jnp.arange(5, dtype=jnp.int32)}, 5)
+    q = rt.queues
+    flat = ckpt._flatten(q)
+    assert set(flat) == {"buf/x", "lo", "size"}, set(flat)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, q)
+    q2, step, _ = ckpt.restore(d, q)
+    assert step == 3
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)), q, q2)
+    # read-compat: a checkpoint written under the legacy repr-style keys
+    # still restores through the fallback probe
+    legacy = {ckpt._legacy_path_key(p): np.asarray(leaf)
+              for p, leaf in jax.tree_util.tree_flatten_with_path(q)[0]}
+    q3 = ckpt._unflatten(q, legacy)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)), q, q3)
+
+
 def test_straggler_monitor_flags_slow_steps():
     import time
 
