@@ -8,6 +8,8 @@
       [--out BENCH_PR4.json]
   PYTHONPATH=src python -m benchmarks.run --mesh [--tiny] \
       [--out BENCH_PR5.json]
+  PYTHONPATH=src python -m benchmarks.run --serve [--tiny] \
+      [--out BENCH_PR8.json]
   PYTHONPATH=src python -m benchmarks.run --check
 
 ``--json`` runs the figures that seed the repo's perf trajectory (Fig. 6
@@ -138,6 +140,41 @@ def run_mesh(out: str, tiny: bool) -> int:
     return 0
 
 
+def run_serve(out: str, tiny: bool) -> int:
+    # Mesh parity cells need one fake host device per lane; claim them
+    # inline BEFORE jax initializes (the run_mesh discipline).
+    import os
+
+    from benchmarks import serve_decode
+
+    serve_decode.force_host_devices(max(serve_decode.WORKERS))
+
+    import jax
+
+    t0 = time.time()
+    table, data = serve_decode.run(tiny=tiny)
+    table.show()
+    results = {
+        "meta": {
+            "bench": "BENCH_PR8",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "tiny": tiny,
+            "repro_check": os.environ.get("REPRO_CHECK", ""),
+            "wall_s": time.time() - t0,
+        },
+        "serve_decode": data,
+    }
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"[benchmarks] wrote {out} "
+          f"(parity {data['parity']['modes']} ok, balanced beats rr: "
+          f"{data['balanced_beats_rr']}, "
+          f"{results['meta']['wall_s']:.1f}s)")
+    return 0
+
+
 def run_adaptive_sweep(out: str, tiny: bool) -> int:
     import jax
 
@@ -217,6 +254,10 @@ def main():
                     help="Fig. 11 vmap-lane vs shard_map executor "
                          "comparison (claims fake host devices; run as "
                          "its own process) -> BENCH_PR5.json")
+    ap.add_argument("--serve", action="store_true",
+                    help="continuous-batching decode serving: parity gate "
+                         "(host/vmap/mesh multisets) + steal-balanced vs "
+                         "static round-robin sweep -> BENCH_PR8.json")
     ap.add_argument("--check", action="store_true",
                     help="tiny Fig. 9 smoke under the conservation "
                          "sanitizer (REPRO_CHECK=1); fails on any "
@@ -228,6 +269,8 @@ def main():
 
     if args.check:
         return run_check()
+    if args.serve:
+        return run_serve(args.out or "BENCH_PR8.json", args.tiny)
     if args.mesh:
         return run_mesh(args.out or "BENCH_PR5.json", args.tiny)
     if args.scaling:

@@ -1,0 +1,188 @@
+"""Continuous-batching decode serving — steal-balanced vs static round-robin.
+
+The paper's closing claim is that bulk stealing wins hardest when
+per-item cost is irregular; LLM decode is the canonical such workload
+(mixed prompt lengths, geometric output lengths — no two requests cost
+the same).  This benchmark drains one seeded irregular request mix
+through :class:`repro.serve.decode.DecodeCluster` and reports, per cell:
+
+* ``tokens/s`` — generated-token throughput over the drain;
+* ``ttft_p99`` / ``latency_p99`` — SLO percentiles in LOGICAL rounds
+  (the deterministic clock, so the numbers are machine-independent);
+* ``load spread`` — mean over waves of (max - min) per-lane token load
+  normalized by the mean (0 = perfectly balanced);
+
+for W ∈ {4, 8} lanes under steal-balanced admission (least token-load
+routing + superstep rebalancing + the token-load proportion servo)
+versus static round-robin (even request COUNTS, no rebalancing — the
+scheduler every serving stack starts with), plus a ``migrate`` cell
+showing the expensive steal path (in-flight sequences move with their
+KV pages).
+
+Before any timing, the PARITY GATE: the same mix must drain on host,
+vmap and mesh execution with identical served-token multisets — the
+acceptance bar that decode results are execution-mode-invariant.  The
+mesh cells need one fake host device per lane (``run.py --serve`` sets
+``xla_force_host_platform_device_count`` before jax loads, as does
+running this module directly).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Tuple
+
+WORKERS = (4, 8)
+N_REQUESTS = 96
+TINY_REQUESTS = 28
+
+
+def force_host_devices(n: int) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+if __name__ == "__main__":  # direct run: claim devices before jax loads
+    force_host_devices(max(WORKERS))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import Table  # noqa: E402
+from repro import configs  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serve.decode import DecodeCluster, DecodePolicy  # noqa: E402
+from repro.serve.scheduler import Request  # noqa: E402
+
+MAX_PROMPT = 8
+MAX_NEW = 8
+
+
+def _request_mix(n: int, seed: int = 0) -> List[Tuple[List[int], int]]:
+    """Mixed prompt lengths (uniform) x geometric output lengths — the
+    irregular per-item cost profile."""
+    rng = np.random.default_rng(seed)
+    mix = []
+    for _ in range(n):
+        plen = int(rng.integers(1, MAX_PROMPT + 1))
+        out = int(min(1 + rng.geometric(0.35), MAX_NEW))
+        mix.append((list(rng.integers(1, 500, size=plen)), out))
+    return mix
+
+
+def _cluster(model, params, w: int, mode: str, execution: str = "vmap"
+             ) -> DecodeCluster:
+    steal = "migrate" if mode == "migrate" else "queue"
+    pol = DecodePolicy(n_slots=4, max_prompt=MAX_PROMPT, max_new=MAX_NEW,
+                       page_size=4, steal=steal)
+    balanced = mode in ("balanced", "migrate")
+    return DecodeCluster(
+        model, params, policy=pol, n_lanes=w, capacity=128,
+        execution=execution, balance=balanced,
+        admission="load" if balanced else "rr")
+
+
+def _drain(cluster: DecodeCluster, mix, arrival: int) -> Dict:
+    """Submit the mix in arrival-sized chunks (one per step) and drain;
+    returns the cell's metrics.  Wall excludes compile (one warm step
+    runs before the clock starts)."""
+    reqs = [Request(prompt=p, max_new=mn) for p, mn in mix]
+    cluster.submit(reqs[:arrival])
+    cluster.step()                      # compile warm-up, inside the run
+    t0 = time.time()
+    i = arrival
+    while i < len(reqs):
+        cluster.submit(reqs[i: i + arrival])
+        i += arrival
+        cluster.step()
+    cluster.run_until_drained(max_steps=5000)
+    wall = time.time() - t0
+    assert len(cluster.done) == len(reqs), (
+        f"drained {len(cluster.done)}/{len(reqs)}")
+    tele = cluster.telemetry
+    spreads = [(max(wv.loads) - min(wv.loads)) / max(np.mean(wv.loads), 1.0)
+               for wv in tele.waves if max(wv.loads) > 0]
+    summ = tele.summary()
+    return {
+        "tokens": summ["tokens"],
+        "tokens_per_s": summ["tokens"] / max(wall, 1e-9),
+        "ttft_p50": summ["ttft_p50"], "ttft_p99": summ["ttft_p99"],
+        "latency_p99": summ["latency_p99"],
+        "load_spread": float(np.mean(spreads)) if spreads else 0.0,
+        "rounds": cluster.rounds,
+        "stolen": cluster.stolen,
+        "migrated": cluster.migrated,
+        "stalls": cluster.stats()["stalls"],
+        "wall_s": wall,
+        "multiset": sorted(tuple(r.output) for r in cluster.done),
+    }
+
+
+def parity_gate(model, params, mix, w: int = 4) -> Dict:
+    """Drain the same mix on host / vmap / mesh; the served-token
+    multisets must be identical."""
+    out = {}
+    modes = ["host", "vmap"]
+    if jax.device_count() >= w:
+        modes.append("mesh")
+    for ex in modes:
+        c = _cluster(model, params, w, "balanced", execution=ex)
+        out[ex] = _drain(c, mix, arrival=len(mix))["multiset"]
+    ok = all(out[m] == out[modes[0]] for m in modes)
+    assert ok, f"served-token multisets diverge across {modes}"
+    return {"modes": modes, "parity_ok": ok}
+
+
+def run(tiny: bool = False) -> Tuple[Table, Dict]:
+    cfg = configs.reduced(configs.get("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = TINY_REQUESTS if tiny else N_REQUESTS
+    mix = _request_mix(n)
+
+    gate = parity_gate(model, params, mix[: max(n // 2, 8)])
+
+    tb = Table("serve.decode — steal-balanced vs static round-robin "
+               f"({n} requests, irregular mix)",
+               "W / scheduler",
+               ["tokens/s", "ttft p99 (rounds)", "latency p99",
+                "load spread", "stolen", "migrated"])
+    cells = []
+    wins = []
+    for w in WORKERS:
+        row = {}
+        for mode in ("rr", "balanced", "migrate"):
+            if mode == "migrate" and w != WORKERS[0]:
+                continue
+            arrival = max(n // 4, 1)
+            m = _drain(_cluster(model, params, w, mode), mix, arrival)
+            m.pop("multiset")
+            m.update(w=w, mode=mode)
+            cells.append(m)
+            row[mode] = m
+            label = {"rr": "static rr", "balanced": "steal-balanced",
+                     "migrate": "steal+migrate"}[mode]
+            tb.add(f"W={w} {label}",
+                   [f"{m['tokens_per_s']:.0f}", f"{m['ttft_p99']:.1f}",
+                    f"{m['latency_p99']:.1f}", f"{m['load_spread']:.2f}",
+                    m["stolen"], m["migrated"]])
+        wins.append(
+            row["balanced"]["ttft_p99"] < row["rr"]["ttft_p99"]
+            or row["balanced"]["load_spread"] < row["rr"]["load_spread"])
+    data = {
+        "parity": gate,
+        "cells": cells,
+        "balanced_beats_rr": bool(any(wins)),
+        "win_per_w": {str(w): bool(v) for w, v in zip(WORKERS, wins)},
+    }
+    return tb, data
+
+
+if __name__ == "__main__":
+    table, data = run(tiny=True)
+    table.show()
+    print("parity:", data["parity"], "balanced beats rr:",
+          data["balanced_beats_rr"])

@@ -98,6 +98,14 @@ class RuntimeAdmissionMaster:
         :func:`repro.distributed.launch_runtime`).
       capacity: per-lane ring capacity (queued request IDs per replica).
       mesh: optional pinned mesh for ``execution="mesh"``.
+      item_spec: per-item ring payload.  The default (a scalar int32)
+        is the id-keyed wave mode described above; the decode engine
+        (:mod:`repro.serve.decode`) passes the full request-item spec so
+        admitted prompts ride the rings and the superstep can steal
+        them — when overriding, admit through ``runtime.push`` with
+        batches of that spec rather than :meth:`submit`.
+      max_pop: owner-side bulk-pop geometry (defaults to the ring
+        capacity; the decode engine caps it at its slot count).
       elastic: arm the runtime's fault layer (an empty
         :class:`~repro.runtime.resilience.FaultPlan`) so
         :meth:`evict`/:meth:`readmit` can drain and mask lanes live —
@@ -112,17 +120,21 @@ class RuntimeAdmissionMaster:
                  execution: str = "vmap",
                  capacity: int = 512,
                  mesh=None,
+                 item_spec=None,
+                 max_pop: Optional[int] = None,
                  elastic: bool = True):
         self.policy = policy or StealPolicy(proportion=0.5,
                                             low_watermark=1,
                                             high_watermark=8,
                                             max_steal=min(256, capacity))
         self.execution = execution
+        self.item_spec = _SPEC if item_spec is None else item_spec
+        extra = {} if max_pop is None else {"max_pop": max_pop}
         self.runtime = launch_runtime(
-            n_replicas, capacity, _SPEC, execution=execution, mesh=mesh,
-            policy=self.policy, adaptive=adaptive,
+            n_replicas, capacity, self.item_spec, execution=execution,
+            mesh=mesh, policy=self.policy, adaptive=adaptive,
             adaptive_config=adaptive_config,
-            fault_plan=FaultPlan() if elastic else None)
+            fault_plan=FaultPlan() if elastic else None, **extra)
         self.replicas = [DeviceReplicaLane(self, i)
                          for i in range(n_replicas)]
         self._requests: Dict[int, object] = {}

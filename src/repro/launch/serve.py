@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --replicas 2 --requests 24
+
+``--decode`` switches from the wave engine to the continuous-batching
+decode subsystem (:mod:`repro.serve.decode`): per-round admission,
+paged KV, real ``decode_step`` execution inside the steal runtime.
+
+  PYTHONPATH=src python -m repro.launch.serve --decode \
+      --execution vmap --replicas 4 --requests 32 --steal queue
 """
 
 from __future__ import annotations
@@ -27,6 +34,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--straggle", action="store_true",
                     help="make replica 0 slow to show bulk-steal rebalancing")
+    ap.add_argument("--decode", action="store_true",
+                    help="continuous-batching decode engine instead of waves")
+    ap.add_argument("--execution", default="vmap",
+                    choices=["host", "vmap", "mesh"],
+                    help="(--decode) where the rebalancing master runs")
+    ap.add_argument("--steal", default="queue", choices=["queue", "migrate"],
+                    help="(--decode) steal only KV-free queued requests, or "
+                         "also migrate in-flight sequences with their pages")
     args = ap.parse_args(argv)
 
     cfg = configs.reduced(configs.get(args.arch))
@@ -35,13 +50,43 @@ def main(argv=None) -> int:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    rng = np.random.default_rng(0)
+    if args.decode:
+        from repro.serve.decode import DecodeCluster, DecodePolicy
+
+        pol = DecodePolicy(n_slots=4, max_prompt=8,
+                           max_new=max(args.max_new, 1), steal=args.steal)
+        cluster = DecodeCluster(model, params, policy=pol,
+                                n_lanes=args.replicas,
+                                execution=args.execution)
+        reqs = [Request(prompt=list(rng.integers(
+                            1, cfg.vocab_size,
+                            size=int(rng.integers(1, 9)))),
+                        max_new=int(rng.integers(1, args.max_new + 1)))
+                for _ in range(args.requests)]
+        t0 = time.time()
+        cluster.submit(reqs)
+        done = cluster.run_until_drained()
+        dt = time.time() - t0
+        st = cluster.stats()
+        toks = sum(len(r.output or []) for r in done)
+        tele = st["telemetry"]
+        print(f"[serve.decode] {len(done)}/{args.requests} requests, "
+              f"{toks} tokens in {dt:.1f}s ({args.execution}, "
+              f"steal={args.steal})")
+        print(f"[serve.decode] stolen={st['stolen']} "
+              f"migrated={st['migrated']} stalls={st['stalls']} "
+              f"ttft_p99={tele.get('ttft_p99', 0.0):.1f} "
+              f"latency_p99={tele.get('latency_p99', 0.0):.1f} rounds")
+        assert len(done) == args.requests
+        return 0
+
     reps = [Replica(model, params, wave_size=4, max_seq=64)
             for _ in range(args.replicas)]
     if args.straggle and reps:
         reps[0].speed = 0.25
     cluster = ServeCluster(reps, AdmissionMaster(args.replicas))
 
-    rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, size=8)),
                     max_new=args.max_new) for _ in range(args.requests)]
     t0 = time.time()

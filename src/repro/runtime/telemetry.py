@@ -21,7 +21,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 __all__ = ["item_nbytes", "reduce_round_stats", "RoundRecord", "WaveRecord",
-           "Telemetry"]
+           "RequestRecord", "Telemetry"]
 
 
 def item_nbytes(item_spec: Any) -> int:
@@ -91,14 +91,56 @@ class RoundRecord:
 @dataclasses.dataclass(frozen=True)
 class WaveRecord:
     """One workload wave (e.g. a serving engine tick), as observed by
-    whoever drives the rounds — same stream, coarser granularity."""
+    whoever drives the rounds — same stream, coarser granularity.
+
+    The SLO fields are percentiles over every :class:`RequestRecord`
+    completed up to and including this wave (in logical rounds — the
+    deterministic clock all execution modes share), filled in by
+    :meth:`Telemetry.record_wave` whenever request records exist."""
 
     wave: int
     served: int                # requests completed this wave
     tokens: int                # tokens generated this wave (0 if n/a)
     loads: Sequence[int]       # per-worker load after the wave
     evicted: int = 0           # workers evicted (cumulative) at this wave
-    stragglers: int = 0        # straggler flags raised this wave
+    stragglers: int = 0       # straggler flags raised this wave
+    migrated: int = 0          # in-flight requests migrated (KV and all)
+    ttft_p50: float = 0.0      # admit -> first-token percentiles (rounds)
+    ttft_p95: float = 0.0
+    ttft_p99: float = 0.0
+    latency_p50: float = 0.0   # admit -> finish percentiles (rounds)
+    latency_p95: float = 0.0
+    latency_p99: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """One served request's admit -> first-token -> finish timeline,
+    stamped in LOGICAL rounds (the per-lane round counter every
+    execution mode advances identically) so SLO telemetry is
+    deterministic and bit-comparable across host/vmap/mesh."""
+
+    rid: int
+    admit: int                 # round the request was admitted
+    first: int                 # round the first token was generated
+    finish: int                # round the last token was generated
+    tokens: int                # tokens actually generated
+
+    @property
+    def ttft(self) -> int:
+        """Time-to-first-token, in rounds."""
+        return self.first - self.admit
+
+    @property
+    def latency(self) -> int:
+        """Admit-to-finish latency, in rounds."""
+        return self.finish - self.admit
+
+
+def _percentiles(values) -> tuple:
+    """(p50, p95, p99) of a non-empty value sequence."""
+    arr = np.asarray(values, np.float64)
+    return tuple(float(np.percentile(arr, p)) for p in (50.0, 95.0, 99.0))
 
 
 class Telemetry:
@@ -111,6 +153,7 @@ class Telemetry:
         self.n_bins = n_bins
         self.rounds: List[RoundRecord] = []
         self.waves: List[WaveRecord] = []
+        self.requests: List[RequestRecord] = []
         # Resilience counters: kills / restarts / evictions / shrink /
         # grow events and straggler flags, recorded by the runtime's
         # fault layer next to the round + wave streams so one telemetry
@@ -139,8 +182,17 @@ class Telemetry:
         return rec
 
     def record_wave(self, *, loads, served: int, tokens: int = 0,
-                    evicted: int = 0, stragglers: int = 0) -> WaveRecord:
-        """Append one workload wave (serving tick, solver epoch, ...)."""
+                    evicted: int = 0, stragglers: int = 0,
+                    migrated: int = 0) -> WaveRecord:
+        """Append one workload wave (serving tick, solver epoch, ...).
+        When request records exist (:meth:`record_request`), the wave
+        carries the cumulative SLO percentiles at this point in time."""
+        slo = {}
+        if self.requests:
+            t50, t95, t99 = _percentiles([r.ttft for r in self.requests])
+            l50, l95, l99 = _percentiles([r.latency for r in self.requests])
+            slo = dict(ttft_p50=t50, ttft_p95=t95, ttft_p99=t99,
+                       latency_p50=l50, latency_p95=l95, latency_p99=l99)
         rec = WaveRecord(
             wave=len(self.waves),
             served=int(served),
@@ -148,8 +200,19 @@ class Telemetry:
             loads=tuple(int(x) for x in np.asarray(loads).reshape(-1)),
             evicted=int(evicted),
             stragglers=int(stragglers),
+            migrated=int(migrated),
+            **slo,
         )
         self.waves.append(rec)
+        return rec
+
+    def record_request(self, *, rid: int, admit: int, first: int,
+                       finish: int, tokens: int) -> RequestRecord:
+        """Append one served request's admit/first-token/finish stamps
+        (logical rounds)."""
+        rec = RequestRecord(rid=int(rid), admit=int(admit), first=int(first),
+                            finish=int(finish), tokens=int(tokens))
+        self.requests.append(rec)
         return rec
 
     def record_fault(self, kind: str, n: int = 1) -> None:
@@ -206,6 +269,17 @@ class Telemetry:
             out["waves"] = len(self.waves)
             out["served"] = self.total_served
             out["tokens"] = self.total_tokens
+            migrated = sum(w.migrated for w in self.waves)
+            if migrated:
+                out["migrated"] = migrated
+        if self.requests:
+            t50, t95, t99 = _percentiles([r.ttft for r in self.requests])
+            l50, l95, l99 = _percentiles([r.latency for r in self.requests])
+            out["requests"] = len(self.requests)
+            out["ttft_p50"], out["ttft_p95"], out["ttft_p99"] = t50, t95, t99
+            out["latency_p50"] = l50
+            out["latency_p95"] = l95
+            out["latency_p99"] = l99
         out["straggler_steps"] = self.straggler_steps
         if self.fault_events:
             out["faults"] = dict(self.fault_events)

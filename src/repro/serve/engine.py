@@ -99,7 +99,8 @@ class ServeCluster:
                  rebalance_rounds: int = 1,
                  execution: str = "host",
                  admission_capacity: int = 512,
-                 straggler_threshold: float = 2.0):
+                 straggler_threshold: float = 2.0,
+                 auto_evict_after: Optional[int] = None):
         self.replicas = replicas
         if master is None:
             if execution == "host":
@@ -118,6 +119,13 @@ class ServeCluster:
         # (``note_straggler``) so work drains AWAY from the slow replica.
         self.monitors = [StragglerMonitor(threshold=straggler_threshold)
                          for _ in replicas]
+        # Escalation: a replica flagged slow ``auto_evict_after`` waves
+        # IN A ROW is evicted outright (its ring drained onto the
+        # others) rather than boosted around forever — death is
+        # declared by the master, never inferred by peers.  ``None``
+        # (the default) keeps the boost-only behavior.
+        self.auto_evict_after = auto_evict_after
+        self._straggler_streak = [0] * len(replicas)
 
     def evict_replica(self, replica_id: int) -> int:
         """Planned eviction: the master drains the replica's queued
@@ -156,6 +164,19 @@ class ServeCluster:
             if mon.observe() and wave:
                 stragglers += 1
                 self.master.note_straggler()
+                self._straggler_streak[rid] += 1
+                if (self.auto_evict_after is not None
+                        and self._straggler_streak[rid]
+                        >= self.auto_evict_after):
+                    rq.finish_wave(len(finished))
+                    self.done.extend(finished)
+                    served += len(finished)
+                    self.evict_replica(rid)
+                    self.telemetry.record_fault("auto_evict")
+                    self._straggler_streak[rid] = 0
+                    continue
+            elif wave:
+                self._straggler_streak[rid] = 0
             rq.finish_wave(len(finished))
             self.done.extend(finished)
             served += len(finished)

@@ -1,0 +1,286 @@
+"""Paged KV-cache block manager for decode-step serving.
+
+vLLM-style paging adapted to the steal runtime's lane discipline: each
+queue LANE owns one fixed page pool per attention layer group
+(``(n_pages + 1, NG, page_size, K, hd)`` — the extra page is the trash
+page inactive slots point at), a page table ``(n_slots, pages_per_seq)``
+of page ids, and an owner vector ``(n_pages,)`` mapping each physical
+page back to the slot holding it (-1 = free).  Every operation here is
+pure jnp over those arrays, so the allocator runs INSIDE the decode
+worker body — under ``jax.vmap`` lanes or per-device under ``shard_map``
+— and page pressure becomes a real, traced scheduling signal: a slot
+whose next page cannot be allocated this round simply stalls.
+
+Lane ownership invariant: a page is referenced by at most one live slot
+of its own lane, pages never alias across lanes, and a finished slot's
+pages return to the free list in the SAME round its output record is
+pushed (continuous batching: freeing and admission happen in one round).
+A bulk steal of QUEUED requests moves no pages (queued items are
+KV-free prefill work); migrating an IN-FLIGHT request moves its pages
+with it (:func:`repro.serve.decode.DecodeCluster` implements both, see
+``DecodePolicy.steal``).
+
+The host-facing helpers build on ``serve/kv_cache.py``:
+:func:`cache_to_pages` uses :func:`~repro.serve.kv_cache.pad_cache` to
+round a prefill cache up to a page multiple before splitting it into
+pages, and :func:`pool_token_count` delegates its accounting convention
+to :func:`~repro.serve.kv_cache.cache_tokens`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.kv_cache import cache_tokens, pad_cache
+
+Pytree = Any
+
+__all__ = ["pages_for", "make_pool", "alloc_pages", "free_pages",
+           "gather_slot_caches", "scatter_slot_caches", "cache_to_pages",
+           "pages_to_cache", "pool_token_count", "PagedKVError"]
+
+_tmap = jax.tree_util.tree_map
+
+
+class PagedKVError(ValueError):
+    """Raised when a model/policy combination cannot be paged."""
+
+
+def pages_for(seq_len: int, page_size: int) -> int:
+    """Pages needed to hold ``seq_len`` KV rows."""
+    return -(-int(seq_len) // int(page_size))
+
+
+# ---------------------------------------------------------------------------
+# Pool construction
+# ---------------------------------------------------------------------------
+
+
+def make_pool(model, *, n_slots: int, n_pages: int, page_size: int,
+              pages_per_seq: int) -> Dict[str, Any]:
+    """One lane's paged-KV state (no lane axis; stack for W lanes).
+
+    Returns a dict with:
+      ``pages``: per layer-group ``{"k"/"v": (n_pages + 1, NG, page_size,
+        K, hd)}`` — page ``n_pages`` is the trash page unseated table
+        entries point at (its content is never read unmasked).
+      ``table``: ``(n_slots, pages_per_seq)`` int32 page ids.
+      ``owner``: ``(n_pages,)`` int32 owning slot per page, -1 = free.
+
+    Only linear (global-attention) caches page cleanly — a sliding-window
+    ring cache re-layouts slots as ``pos % C`` which breaks the
+    page-id -> position mapping — so windowed layer kinds are rejected.
+    """
+    probe = int(page_size) * max(int(pages_per_seq), 2)
+    for kind in model.layer_kinds:
+        if model.cache_len(kind, probe) != probe:
+            raise PagedKVError(
+                f"layer kind {kind!r} uses a ring (windowed) cache; paged "
+                f"decode requires linear caches — use a no-window config "
+                f"(e.g. configs.reduced drops the window)")
+    proto = model.make_cache(1, int(page_size))  # leaves (NG, 1, ps, K, hd)
+    pages = {
+        g: _tmap(lambda x: jnp.zeros(
+            (int(n_pages) + 1, x.shape[0]) + x.shape[2:], x.dtype), kv)
+        for g, kv in proto.items() if g != "pos"
+    }
+    return {
+        "pages": pages,
+        "table": jnp.full((int(n_slots), int(pages_per_seq)),
+                          jnp.int32(n_pages)),
+        "owner": jnp.full((int(n_pages),), jnp.int32(-1)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Traced allocator (runs inside the decode worker body)
+# ---------------------------------------------------------------------------
+
+
+def alloc_pages(table: jnp.ndarray, owner: jnp.ndarray,
+                n_alloc: jnp.ndarray, need: jnp.ndarray, page_idx: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Grant one page to each needing slot, free list permitting.
+
+    Args:
+      table: ``(n_slots, pages_per_seq)`` page ids.
+      owner: ``(n_pages,)`` owning slot per page (-1 free).
+      n_alloc: ``(n_slots,)`` pages currently held per slot.
+      need: ``(n_slots,)`` bool — slot wants one more page this round.
+      page_idx: ``(n_slots,)`` the table column the new page fills
+        (``pos // page_size``).
+
+    Pure jnp: the i-th needing slot (slot order) takes the i-th free
+    page (page order) — a deterministic rank-matching that every
+    execution mode computes identically.  Slots beyond the free-page
+    supply are simply not granted (their ``n_alloc`` is unchanged, so
+    the caller's ``advance`` mask stalls them — page-pressure
+    back-pressure, not an error).  Returns ``(table, owner, n_alloc)``.
+    """
+    n_slots = table.shape[0]
+    n_pages = owner.shape[0]
+    free = owner < 0
+    n_need = jnp.sum(need.astype(jnp.int32))
+    n_free = jnp.sum(free.astype(jnp.int32))
+    # i-th needing slot <-> i-th free page.
+    slot_order = jnp.argsort(~need)                    # needing slots first
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1  # rank among free
+    assign = free & (free_rank < n_need)
+    slot_of_page = slot_order[jnp.clip(free_rank, 0, n_slots - 1)]
+    owner = jnp.where(assign, slot_of_page, owner)
+    # Scatter granted page ids into the table; non-assigned rows are
+    # routed out of bounds and dropped (duplicate-index safe).
+    row = jnp.where(assign, slot_of_page, jnp.int32(n_slots))
+    col = page_idx[jnp.clip(slot_of_page, 0, n_slots - 1)]
+    table = table.at[row, col].set(jnp.arange(n_pages, dtype=jnp.int32),
+                                   mode="drop")
+    need_rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    granted = need & (need_rank < n_free)
+    n_alloc = n_alloc + granted.astype(jnp.int32)
+    return table, owner, n_alloc
+
+
+def free_pages(table: jnp.ndarray, owner: jnp.ndarray, n_alloc: jnp.ndarray,
+               retire: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Return every page owned by a retiring slot to the free list, in
+    the same round the slot's output record is pushed.  Returns
+    ``(table, owner, n_alloc)`` with retired rows pointing at trash."""
+    n_slots, _ = table.shape
+    n_pages = owner.shape[0]
+    retire_pad = jnp.concatenate(
+        [retire, jnp.zeros((1,), retire.dtype)])      # guard for owner = -1
+    freed = (owner >= 0) & retire_pad[jnp.clip(owner, 0, n_slots)]
+    owner = jnp.where(freed, jnp.int32(-1), owner)
+    table = jnp.where(retire[:, None], jnp.int32(n_pages), table)
+    n_alloc = jnp.where(retire, jnp.int32(0), n_alloc)
+    return table, owner, n_alloc
+
+
+# ---------------------------------------------------------------------------
+# Traced gather / scatter between the pool and per-slot caches
+# ---------------------------------------------------------------------------
+
+
+def gather_slot_caches(pages: Dict[str, Any], table: jnp.ndarray,
+                       pos: jnp.ndarray) -> Dict[str, Any]:
+    """Assemble every slot's contiguous batch-1 cache from its pages.
+
+    Returns ``{"pos": (S,), "g*": {"k"/"v": (S, NG, 1, C, K, hd)}}`` —
+    the per-slot cache pytree ``jax.vmap(model.decode_step)`` consumes.
+    Rows at positions >= ``pos`` are zeroed: they are either unwritten
+    or trash-page garbage, and zeroing them makes the gathered cache a
+    deterministic function of the decode history alone (bit-identical
+    across execution modes, immune to trash-page write order).
+    """
+    S, PP = table.shape
+    out: Dict[str, Any] = {"pos": pos}
+
+    def one(leaf):  # (n_pages + 1, NG, ps, K, hd)
+        ps = leaf.shape[2]
+        x = leaf[table]                        # (S, PP, NG, ps, K, hd)
+        x = jnp.moveaxis(x, 2, 1)              # (S, NG, PP, ps, K, hd)
+        x = x.reshape(x.shape[0], x.shape[1], PP * ps, *x.shape[4:])
+        rows = jnp.arange(PP * ps, dtype=jnp.int32)
+        valid = rows[None, :] < pos[:, None]   # (S, C)
+        x = jnp.where(valid[:, None, :, None, None], x, 0)
+        return x[:, :, None]                   # (S, NG, 1, C, K, hd)
+
+    for g, kv in pages.items():
+        out[g] = _tmap(one, kv)
+    return out
+
+
+def scatter_slot_caches(pages: Dict[str, Any], table: jnp.ndarray,
+                        old: Dict[str, Any], new: Dict[str, Any],
+                        select: jnp.ndarray) -> Dict[str, Any]:
+    """Write every slot's (possibly updated) cache back into its pages.
+
+    ``old``/``new`` are gather-layout caches (``(S, NG, 1, C, K, hd)``
+    leaves); slot s writes ``new`` where ``select[s]`` else ``old``.
+    Live slots own disjoint pages so the scatter is order-free there;
+    duplicate writes only ever land on the trash page, whose content is
+    never read unmasked (see :func:`gather_slot_caches`).
+    """
+    S, PP = table.shape
+    idx = table.reshape(-1)
+
+    def one(pool_leaf, old_leaf, new_leaf):
+        ps = pool_leaf.shape[2]
+        sel = select.reshape((S,) + (1,) * (old_leaf.ndim - 1))
+        x = jnp.where(sel, new_leaf, old_leaf)   # (S, NG, 1, C, K, hd)
+        x = x[:, :, 0]                           # (S, NG, C, K, hd)
+        x = x.reshape(x.shape[0], x.shape[1], PP, ps, *x.shape[3:])
+        x = jnp.moveaxis(x, 1, 2)                # (S, PP, NG, ps, K, hd)
+        x = x.reshape((S * PP,) + x.shape[2:])
+        return pool_leaf.at[idx].set(x)
+
+    return {
+        g: jax.tree_util.tree_map(
+            lambda p, o, n: one(p, o, n), kv, old[g], new[g])
+        for g, kv in pages.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Host-facing conversions (the kv_cache.py helpers, used for real)
+# ---------------------------------------------------------------------------
+
+
+def cache_to_pages(cache: Pytree, page_size: int) -> Pytree:
+    """Split a batch-1 model cache into page-major arrays.
+
+    Pads the sequence axis up to a page multiple first (via
+    :func:`~repro.serve.kv_cache.pad_cache` — zero rows are masked by
+    position on read), then reshapes each ``(NG, 1, C, K, hd)`` leaf to
+    ``(P, NG, page_size, K, hd)``.  Inverse of :func:`pages_to_cache`.
+    """
+    leaves = [x for g, kv in cache.items() if g != "pos"
+              for x in jax.tree_util.tree_leaves(kv)]
+    if not leaves:
+        raise PagedKVError("cache has no k/v leaves to page")
+    C = leaves[0].shape[2]
+    target = pages_for(C, page_size) * int(page_size)
+    # pad_cache grows 5-d (NG, B, C, K, hd) leaves on axis 2; here the
+    # batch axis is the slot's B=1.
+    padded = pad_cache(cache, target)
+
+    def split(x):  # (NG, 1, C', K, hd) -> (P, NG, page_size, K, hd)
+        ng = x.shape[0]
+        y = x[:, 0]
+        y = y.reshape(ng, -1, int(page_size), *y.shape[2:])
+        return jnp.moveaxis(y, 1, 0)
+
+    return {g: _tmap(split, kv)
+            for g, kv in padded.items() if g != "pos"}
+
+
+def pages_to_cache(paged: Pytree, pos) -> Pytree:
+    """Reassemble a batch-1 model cache from page-major arrays."""
+
+    def join(x):  # (P, NG, page_size, K, hd) -> (NG, 1, C, K, hd)
+        y = jnp.moveaxis(x, 0, 1)
+        y = y.reshape(y.shape[0], y.shape[1] * y.shape[2], *y.shape[3:])
+        return y[:, None]
+
+    out = {g: _tmap(join, kv) for g, kv in paged.items()}
+    out["pos"] = jnp.asarray(pos, jnp.int32)
+    return out
+
+
+def pool_token_count(pages: Dict[str, Any], owner: jnp.ndarray,
+                     page_size: int) -> int:
+    """KV token slots currently HELD by live pages of one lane's pool,
+    in :func:`~repro.serve.kv_cache.cache_tokens`' accounting convention
+    (k and v counted once).  ``cache_tokens`` supplies the per-(batch,
+    row) convention on a probe cache so the two counters can't drift."""
+    import numpy as np
+
+    per_page = cache_tokens(pages_to_cache(
+        _tmap(lambda x: x[:1], pages), 0))  # one page, batch 1
+    held = int(np.sum(np.asarray(owner) >= 0))
+    del page_size  # the probe cache already encodes rows-per-page
+    return held * per_page

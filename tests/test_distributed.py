@@ -219,6 +219,42 @@ _CHECKS = textwrap.dedent("""
         assert st["telemetry"]["rounds"] == master.rounds
         print("SERVE-OK")
 
+    def decode_parity_checks():
+        # The continuous-batching decode engine is bit-identical between
+        # vmap lanes and the per-device mesh: same served tokens per
+        # request AND the same admit/first/finish round stamps.
+        from repro import configs
+        from repro.models import build_model
+        from repro.serve.decode import DecodeCluster, DecodePolicy
+        from repro.serve.scheduler import Request
+
+        cfg = configs.reduced(configs.get("llama3.2-1b"))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(7)
+        data = [(list(rng.integers(1, 100, size=int(rng.integers(1, 7)))),
+                 int(rng.integers(1, 5))) for _ in range(10)]
+        out = {}
+        for mode in ("vmap", "mesh"):
+            cl = DecodeCluster(
+                model, params, n_lanes=8, capacity=32, execution=mode,
+                policy=DecodePolicy(n_slots=2, max_prompt=8, max_new=4,
+                                    page_size=4))
+            reqs = [Request(prompt=p, max_new=mn) for p, mn in data]
+            cl.submit(reqs[:6]); cl.step(); cl.submit(reqs[6:])
+            done = cl.run_until_drained(max_steps=100)
+            assert len(done) == len(data), (mode, len(done))
+            # rid auto-increments globally across clusters; compare by
+            # submission index
+            idx = {r.rid: i for i, r in enumerate(reqs)}
+            out[mode] = (
+                sorted((idx[r.rid], tuple(r.output)) for r in done),
+                sorted((idx[r.rid], r.admit, r.first, r.finish, r.tokens)
+                       for r in cl.telemetry.requests))
+        assert out["vmap"][0] == out["mesh"][0]   # served tokens
+        assert out["vmap"][1] == out["mesh"][1]   # SLO round stamps
+        print("DECODE-PARITY-OK")
+
     def run_checks():
         assert jax.device_count() >= 8, jax.device_count()
         parity_checks()
@@ -226,6 +262,7 @@ _CHECKS = textwrap.dedent("""
         launch_checks()
         solver_checks()
         serve_checks()
+        decode_parity_checks()
         print("DISTRIBUTED-OK")
 """)
 

@@ -1,0 +1,217 @@
+"""serve.paged_kv + the serve.kv_cache helpers it builds on.
+
+Covers the previously-untested ``pad_cache`` / ``cache_tokens`` helpers
+directly (growable-path detection, padding round-trip, token
+accounting) and the paged pool's own invariants: allocation rank-
+matching, back-pressure instead of over-allocation, same-call
+free-then-reuse conservation, and the gather/scatter round-trip that
+decode_step sits between.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import paged_kv
+from repro.serve.kv_cache import cache_tokens, pad_cache
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(configs.reduced(configs.get("llama3.2-1b")))
+
+
+# -- kv_cache helpers (the dead-code satellite) -----------------------------
+
+
+def test_pad_cache_grows_only_growable_leaves(model):
+    cache = model.make_cache(2, 8)
+    padded = pad_cache(cache, 12)
+    assert int(padded["pos"]) == int(cache["pos"])
+    for g in cache:
+        if g == "pos":
+            continue
+        for kv in ("k", "v"):
+            assert padded[g][kv].shape[2] == 12
+            assert cache[g][kv].shape[2] == 8
+
+
+def test_pad_cache_skips_cross_attention_paths():
+    x = jnp.ones((1, 2, 4, 2, 3))
+    cache = {"pos": jnp.int32(0),
+             "g0": {"k": x, "v": x},
+             "cross": {"k": x, "v": x}}
+    padded = pad_cache(cache, 6)
+    assert padded["g0"]["k"].shape[2] == 6
+    assert padded["cross"]["k"].shape[2] == 4  # not growable
+
+
+def test_pad_cache_round_trip_preserves_contents(model):
+    _, cache = model.prefill(
+        model.init(jax.random.PRNGKey(0)),
+        jnp.arange(1, 5, dtype=jnp.int32)[None, :])   # cache C = 4
+    padded = pad_cache(cache, 16)
+    for g in cache:
+        if g == "pos":
+            continue
+        for kv in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(padded[g][kv])[:, :, :4], np.asarray(cache[g][kv]))
+            assert not np.asarray(padded[g][kv])[:, :, 4:].any()
+
+
+def test_cache_tokens_accounting(model):
+    c8 = model.make_cache(2, 8)
+    c16 = model.make_cache(2, 16)
+    assert cache_tokens(c16) == 2 * cache_tokens(c8)
+    assert cache_tokens(c8) > 0
+    # per definition: sum of batch*seq_len over growable leaves, /2 (k+v)
+    n_groups = len([g for g in c8 if g != "pos"])
+    assert cache_tokens(c8) == n_groups * 2 * 8
+
+
+# -- the paged pool ----------------------------------------------------------
+
+
+def test_pages_for():
+    assert paged_kv.pages_for(1, 4) == 1
+    assert paged_kv.pages_for(4, 4) == 1
+    assert paged_kv.pages_for(5, 4) == 2
+
+
+def test_make_pool_shapes(model):
+    pool = paged_kv.make_pool(model, n_slots=3, n_pages=6, page_size=4,
+                              pages_per_seq=2)
+    assert pool["table"].shape == (3, 2)
+    assert (np.asarray(pool["table"]) == 6).all()      # all rows -> trash
+    assert (np.asarray(pool["owner"]) == -1).all()     # all pages free
+    for g, kv in pool["pages"].items():
+        for leaf in kv.values():
+            assert leaf.shape[0] == 6 + 1              # +1 trash page
+            assert leaf.shape[2] == 4                  # page_size rows
+
+
+def test_alloc_grants_and_back_pressures(model):
+    pool = paged_kv.make_pool(model, n_slots=3, n_pages=2, page_size=4,
+                              pages_per_seq=2)
+    table, owner, n_alloc = pool["table"], pool["owner"], jnp.zeros(
+        (3,), jnp.int32)
+    need = jnp.array([True, True, True])
+    page_idx = jnp.zeros((3,), jnp.int32)
+    table, owner, n_alloc = paged_kv.alloc_pages(table, owner, n_alloc,
+                                                 need, page_idx)
+    # only 2 pages: exactly 2 slots granted, 1 back-pressured
+    assert int(n_alloc.sum()) == 2
+    assert int((np.asarray(owner) >= 0).sum()) == 2
+    granted = np.where(np.asarray(n_alloc) == 1)[0]
+    for s in granted:
+        p = int(np.asarray(table)[s, 0])
+        assert p < 2 and int(np.asarray(owner)[p]) == s
+
+
+def test_free_then_realloc_conserves(model):
+    pool = paged_kv.make_pool(model, n_slots=2, n_pages=2, page_size=4,
+                              pages_per_seq=1)
+    table, owner = pool["table"], pool["owner"]
+    n_alloc = jnp.zeros((2,), jnp.int32)
+    both = jnp.array([True, True])
+    table, owner, n_alloc = paged_kv.alloc_pages(
+        table, owner, n_alloc, both, jnp.zeros((2,), jnp.int32))
+    assert int(n_alloc.sum()) == 2
+    table, owner, n_alloc = paged_kv.free_pages(
+        table, owner, n_alloc, jnp.array([True, False]))
+    assert int(n_alloc[0]) == 0 and int(n_alloc[1]) == 1
+    assert int((np.asarray(owner) >= 0).sum()) == 1
+    assert (np.asarray(table)[0] == 2).all()           # slot 0 -> trash
+    # the freed page is immediately re-allocatable
+    table, owner, n_alloc = paged_kv.alloc_pages(
+        table, owner, n_alloc, jnp.array([True, False]),
+        jnp.zeros((2,), jnp.int32))
+    assert int(n_alloc.sum()) == 2
+    assert int((np.asarray(owner) >= 0).sum()) == 2
+
+
+def test_gather_scatter_round_trip(model):
+    """cache -> pages -> gather == original (rows below pos), and a
+    scatter of modified caches lands back in the right pages."""
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.arange(1, 7, dtype=jnp.int32)[None, :]
+    _, cache = model.prefill(params, prompt)           # pos = 6
+    paged = paged_kv.cache_to_pages(cache, page_size=4)
+
+    pool = paged_kv.make_pool(model, n_slots=2, n_pages=4, page_size=4,
+                              pages_per_seq=2)
+    table, owner, n_alloc = pool["table"], pool["owner"], jnp.zeros(
+        (2,), jnp.int32)
+    for pi in range(2):                                 # 8 rows = 2 pages
+        need = jnp.array([True, False])
+        table, owner, n_alloc = paged_kv.alloc_pages(
+            table, owner, n_alloc, need, jnp.full((2,), pi, jnp.int32))
+    pages = pool["pages"]
+    for g in paged:
+        for kv in ("k", "v"):
+            for j in range(2):
+                pages[g][kv] = pages[g][kv].at[
+                    np.asarray(table)[0, j]].set(paged[g][kv][j])
+
+    got = paged_kv.gather_slot_caches(pages, table,
+                                      jnp.array([6, 0], jnp.int32))
+    assert int(got["pos"][0]) == 6
+    padded_ref = pad_cache(cache, 8)                   # (NG, 1, 8, K, hd)
+    for g in cache:
+        if g == "pos":
+            continue
+        for kv in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(got[g][kv])[0],
+                                          np.asarray(padded_ref[g][kv]))
+    # slot 1 holds no pages: its gathered cache must be all zeros
+    for g in got:
+        if g == "pos":
+            continue
+        assert not np.asarray(got[g]["k"])[1].any()
+
+    # scatter a recognizable update back and re-gather it
+    marked = {g: jax.tree_util.tree_map(lambda x: x + 1.0, got[g])
+              for g in got if g != "pos"}
+    pages2 = paged_kv.scatter_slot_caches(
+        pages, table, {g: got[g] for g in marked}, marked,
+        jnp.array([True, False]))
+    got2 = paged_kv.gather_slot_caches(pages2, table,
+                                       jnp.array([6, 0], jnp.int32))
+    for g in marked:
+        np.testing.assert_array_equal(
+            np.asarray(got2[g]["k"], np.float32)[0, :, :, :6],
+            np.asarray(marked[g]["k"], np.float32)[0, :, :, :6])
+
+
+def test_pool_token_count(model):
+    pool = paged_kv.make_pool(model, n_slots=2, n_pages=4, page_size=4,
+                              pages_per_seq=2)
+    assert paged_kv.pool_token_count(pool["pages"],
+                                     np.asarray(pool["owner"]), 4) == 0
+    table, owner, n_alloc = paged_kv.alloc_pages(
+        pool["table"], pool["owner"], jnp.zeros((2,), jnp.int32),
+        jnp.array([True, True]), jnp.zeros((2,), jnp.int32))
+    held = paged_kv.pool_token_count(pool["pages"], np.asarray(owner), 4)
+    # 2 pages x 4 rows, counted once per group (cache_tokens semantics)
+    n_groups = len(pool["pages"])
+    assert held == 2 * 4 * n_groups
+
+
+def test_windowed_models_rejected():
+    cfg = configs.reduced(configs.get("gemma2-9b"))    # sliding window 16
+    model = build_model(cfg)
+    if all(k == "full" for k in getattr(model, "layer_kinds", ["full"])):
+        pytest.skip("reduced config has no windowed layers")
+    # sequences shorter than the window never wrap the ring: pageable
+    pool = paged_kv.make_pool(model, n_slots=2, n_pages=4, page_size=4,
+                              pages_per_seq=2)         # 8 rows <= window
+    assert pool["table"].shape == (2, 2)
+    # sequences longer than the window would wrap: rejected
+    with pytest.raises(paged_kv.PagedKVError):
+        paged_kv.make_pool(model, n_slots=2, n_pages=16, page_size=4,
+                           pages_per_seq=8)            # 32 rows > window
+
