@@ -1,0 +1,228 @@
+"""Chaos benchmark: fault-recovery overhead, drain cost, detection, resize.
+
+All cells run on vmap lanes only, so the whole sweep fits the 1-device
+CPU CI container (the mesh side of every path is pinned bit-identical by
+tests/test_hierarchical_fault.py; re-timing it here would only measure
+shard_map dispatch, which ``--mesh`` already covers).
+
+Four sections, one table:
+
+* **armed idle overhead** — the Fig. 9 DAG with the fault layer OFF
+  (plain superstep) vs ARMED with an empty :class:`FaultPlan` (masked
+  plans + recovery plan compiled in, nothing ever dies) vs armed
+  HIERARCHICAL (2x4 pods: 4-plan resilient round).  The gap is the
+  steady-state price of resilience when nothing fails.
+* **chaos drain** — seeded :meth:`FaultPlan.random` schedules (kills +
+  delays + drops) at W=8 flat and 2x4 hierarchical: rounds to drain the
+  DAG, items moved (normal + recovery steals), node conservation.
+* **detector conversion** — an injected delay schedule converted by
+  :class:`FailureDetector` into real kills (``auto_kill`` fault events),
+  with the item multiset preserved across the kills.
+* **live resize** — ``padded_runtime`` at ``W_max``: grow + shrink +
+  redispatch with ZERO new compiles (jit cache population before ==
+  after).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table
+from benchmarks.fig9_dag import _device_body
+from repro.core.policy import StealPolicy
+from repro.distributed import elastic
+from repro.runtime import DetectorPolicy, FaultPlan, StealRuntime
+
+WORKERS = 8
+POD_SIZE = 4
+BATCH = 64
+CAPACITY = 4096
+SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def _policy() -> StealPolicy:
+    return StealPolicy(proportion=0.5, low_watermark=BATCH // 2,
+                       high_watermark=4 * BATCH, max_steal=1024)
+
+
+def _runtime(fault_plan=None, pod_size=None) -> StealRuntime:
+    return StealRuntime(WORKERS, CAPACITY, SPEC, policy=_policy(),
+                        max_pop=BATCH, fault_plan=fault_plan,
+                        pod_size=pod_size)
+
+
+def _drain(rt: StealRuntime, n_nodes: int, k: int = 8,
+           max_rounds: int = 500) -> Tuple[int, int, float]:
+    """Drive the DAG to empty; returns (explored, rounds, wall_s)."""
+    body = _device_body(n_nodes, BATCH, rt.ops)
+    rt.push(0, jnp.zeros((1,), jnp.int32), 1)
+    carry = jnp.zeros((WORKERS,), jnp.int32)
+    rounds = 0
+    t0 = time.perf_counter()
+    while int(rt.total_size()) > 0 and rounds < max_rounds:
+        carry, _, r = rt.run_fused(k, body, carry, until_drained=True)
+        rounds += r
+    jax.block_until_ready(rt.queues.size)
+    return int(jnp.sum(carry)), rounds, time.perf_counter() - t0
+
+
+def _items(rt: StealRuntime):
+    q = jax.tree_util.tree_map(np.asarray, rt.queues)
+    cap = q.buf.shape[1]
+    out = []
+    for i in range(rt.n_workers):
+        lo, sz = int(q.lo[i]), int(q.size[i])
+        out += [int(q.buf[i][(lo + j) % cap]) for j in range(sz)]
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# Section 1: armed-idle overhead
+# ---------------------------------------------------------------------------
+
+
+def armed_overhead(t: Table, tiny: bool) -> Dict:
+    n_nodes = 20_000 if tiny else 100_000
+    repeats = 2 if tiny else 5
+    rows = [("unarmed", None, None),
+            ("armed flat", FaultPlan(), None),
+            ("armed 2x4", FaultPlan(), POD_SIZE)]
+    out: Dict = {"n_nodes": n_nodes}
+    walls = {}
+    for label, plan, ps in rows:
+        best = float("inf")
+        explored = rounds = 0
+        for _ in range(repeats):
+            rt = _runtime(fault_plan=plan, pod_size=ps)
+            explored, rounds, wall = _drain(rt, n_nodes)
+            best = min(best, wall)
+        assert explored == n_nodes, (label, explored)
+        walls[label] = best
+        over = best / max(walls["unarmed"], 1e-12)
+        t.add(f"idle overhead: {label}",
+              [f"{best * 1e3:.0f} ms", rounds, explored, f"{over:.2f}x"])
+        out[label] = {"wall_s": best, "rounds": rounds,
+                      "overhead": over}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Section 2: chaos drain under seeded random schedules
+# ---------------------------------------------------------------------------
+
+
+def chaos_drain(t: Table, tiny: bool) -> Dict:
+    n_nodes = 20_000 if tiny else 100_000
+    seeds = (0, 1) if tiny else (0, 1, 2, 3)
+    out: Dict = {"n_nodes": n_nodes, "runs": []}
+    for pod_size, topo in ((None, "flat"), (POD_SIZE, "2x4")):
+        for seed in seeds:
+            plan = FaultPlan.random(WORKERS, seed=seed, n_kills=2,
+                                    n_delays=2, n_drops=1, max_round=12)
+            rt = _runtime(fault_plan=plan, pod_size=pod_size)
+            explored, rounds, wall = _drain(rt, n_nodes)
+            assert explored == n_nodes, (topo, seed, explored)
+            assert (rt.sizes()[rt.dead_lanes()] == 0).all()
+            moved = rt.telemetry.total_transferred
+            t.add(f"chaos {topo} seed={seed}",
+                  [f"{wall * 1e3:.0f} ms", rounds, explored,
+                   f"{moved:,} moved"])
+            out["runs"].append({
+                "topology": topo, "seed": seed, "rounds": rounds,
+                "wall_s": wall, "items_moved": int(moved),
+                "kills": len(plan.kills), "conserved": True})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Section 3: detector delay -> kill conversion
+# ---------------------------------------------------------------------------
+
+
+def detector_conversion(t: Table, tiny: bool) -> Dict:
+    plan = FaultPlan(delays=((2, 1, 64), (6, 3, 64)))
+    rt = StealRuntime(WORKERS, 256, SPEC,
+                      policy=StealPolicy(backend="reference",
+                                         low_watermark=4,
+                                         high_watermark=16, max_steal=64),
+                      fault_plan=plan)
+    det = rt.attach_detector(DetectorPolicy(suspect_after=2, dead_after=4))
+    rng = np.random.default_rng(42)
+    for w in range(WORKERS):
+        n = int(rng.integers(10, 40))
+        rt.push(w, jnp.arange(w * 100, w * 100 + n, dtype=jnp.int32), n)
+    before = _items(rt)
+    t0 = time.perf_counter()
+    rounds = 0
+    while rt.telemetry.fault_events.get("auto_kill", 0) < 2 and rounds < 32:
+        rt.round()
+        rounds += 1
+    wall = time.perf_counter() - t0
+    kills = rt.telemetry.fault_events.get("auto_kill", 0)
+    conserved = _items(rt) == before
+    assert kills == 2 and conserved, (kills, conserved)
+    assert det.state(2) == "dead" and det.state(6) == "dead"
+    t.add("detector: 2 delayed lanes",
+          [f"{wall * 1e3:.0f} ms", rounds, f"{kills} auto-kills",
+           "conserved" if conserved else "LOST ITEMS"])
+    return {"rounds_to_kill": rounds, "auto_kills": int(kills),
+            "conserved": conserved,
+            "dead_lanes": np.flatnonzero(np.asarray(rt.dead_lanes()))
+            .tolist()}
+
+
+# ---------------------------------------------------------------------------
+# Section 4: live resize at fixed W_max — zero recompiles
+# ---------------------------------------------------------------------------
+
+
+def live_resize(t: Table, tiny: bool) -> Dict:
+    rt = elastic.padded_runtime(
+        4, 256, SPEC, w_max=WORKERS,
+        policy=StealPolicy(backend="reference", low_watermark=2,
+                           high_watermark=8, max_steal=64))
+    rt.push(0, jnp.arange(96, dtype=jnp.int32), 96)
+    before = _items(rt)
+    # Warm BOTH dispatch shapes (per-round and fused) at the padded
+    # width; every later resize must reuse these compiled entries.
+    for _ in range(3):
+        rt.round()
+    rt.run_fused(4)
+    c0 = elastic.compile_count(rt)
+    t0 = time.perf_counter()
+    grown = elastic.live_grow(rt, 3)
+    for _ in range(3):
+        rt.round()
+    shrink_rounds = elastic.live_shrink(rt, grown[:1])
+    rt.run_fused(4)
+    elastic.live_grow(rt, 1)
+    rt.round()
+    wall = time.perf_counter() - t0
+    delta = elastic.compile_count(rt) - c0
+    conserved = _items(rt) == before
+    assert delta == 0, delta
+    assert conserved
+    t.add(f"live resize 4->7->6->7 lanes (W_max={WORKERS})",
+          [f"{wall * 1e3:.0f} ms", shrink_rounds,
+           f"recompiles: {delta}", "conserved"])
+    return {"w_max": WORKERS, "warmup_compiles": int(c0),
+            "recompiles_during_resize": int(delta),
+            "shrink_rounds": int(shrink_rounds), "conserved": conserved}
+
+
+def run(tiny: bool = False) -> Tuple[Table, Dict]:
+    t = Table(f"Chaos: fault recovery on {WORKERS} lanes "
+              f"(flat and {WORKERS // POD_SIZE}x{POD_SIZE} pods, vmap)",
+              "scenario", ["wall", "rounds", "outcome", "notes"])
+    data = {
+        "armed_overhead": armed_overhead(t, tiny),
+        "chaos_drain": chaos_drain(t, tiny),
+        "detector": detector_conversion(t, tiny),
+        "live_resize": live_resize(t, tiny),
+    }
+    return t, data

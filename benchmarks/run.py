@@ -10,6 +10,8 @@
       [--out BENCH_PR5.json]
   PYTHONPATH=src python -m benchmarks.run --serve [--tiny] \
       [--out BENCH_PR8.json]
+  PYTHONPATH=src python -m benchmarks.run --chaos [--tiny] \
+      [--out BENCH_PR9.json]
   PYTHONPATH=src python -m benchmarks.run --check
 
 ``--json`` runs the figures that seed the repo's perf trajectory (Fig. 6
@@ -175,6 +177,41 @@ def run_serve(out: str, tiny: bool) -> int:
     return 0
 
 
+def run_chaos(out: str, tiny: bool) -> int:
+    import os
+
+    import jax
+
+    from benchmarks import chaos_recovery
+
+    t0 = time.time()
+    table, data = chaos_recovery.run(tiny=tiny)
+    table.show()
+    results = {
+        "meta": {
+            "bench": "BENCH_PR9",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "tiny": tiny,
+            "repro_check": os.environ.get("REPRO_CHECK", ""),
+            "wall_s": time.time() - t0,
+        },
+        "chaos_recovery": data,
+    }
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    recompiles = data["live_resize"]["recompiles_during_resize"]
+    print(f"[benchmarks] wrote {out} "
+          f"(armed-idle overhead flat "
+          f"{data['armed_overhead']['armed flat']['overhead']:.2f}x / 2x4 "
+          f"{data['armed_overhead']['armed 2x4']['overhead']:.2f}x, "
+          f"auto-kills {data['detector']['auto_kills']}, "
+          f"resize recompiles {recompiles}, "
+          f"{results['meta']['wall_s']:.1f}s)")
+    return 0
+
+
 def run_adaptive_sweep(out: str, tiny: bool) -> int:
     import jax
 
@@ -258,6 +295,11 @@ def main():
                     help="continuous-batching decode serving: parity gate "
                          "(host/vmap/mesh multisets) + steal-balanced vs "
                          "static round-robin sweep -> BENCH_PR8.json")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-recovery chaos sweep: armed-idle overhead, "
+                         "seeded kill/delay/drop drains (flat and 2x4 "
+                         "pods), detector delay->kill conversion, live "
+                         "no-rebuild resize -> BENCH_PR9.json")
     ap.add_argument("--check", action="store_true",
                     help="tiny Fig. 9 smoke under the conservation "
                          "sanitizer (REPRO_CHECK=1); fails on any "
@@ -269,6 +311,8 @@ def main():
 
     if args.check:
         return run_check()
+    if args.chaos:
+        return run_chaos(args.out or "BENCH_PR9.json", args.tiny)
     if args.serve:
         return run_serve(args.out or "BENCH_PR8.json", args.tiny)
     if args.mesh:

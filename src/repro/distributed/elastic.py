@@ -24,6 +24,23 @@ changing it recompiles by construction); everything host-visible
 (telemetry object, controller trajectory, ``rounds_run``) carries over
 so the stream reads as one continuous run with ``shrink``/``grow``
 events recorded in ``telemetry.fault_events``.
+
+Live resize (no rebuild)
+------------------------
+The rebuild round-trip re-jits every compiled step — seconds of
+compile latency exactly when the fleet is already disrupted.  The live
+variant trades a bounded amount of padding memory for ZERO recompiles:
+
+* :func:`padded_runtime` — construct the runtime at a fixed lane
+  capacity ``w_max`` with only ``n_active`` lanes alive; the padding
+  lanes are born dead (killed at round 0), so they hold no work, leave
+  every plan, and cost only their (empty) ring buffers.
+* :func:`live_shrink` / :func:`live_grow` — move the live-lane count
+  within ``[1, w_max]`` by evacuating into survivors or reviving
+  padding lanes.  The compiled step never changes: lane count is the
+  SAME static shape, death is a traced schedule value, so resize is a
+  host-side array write.  :func:`compile_count` exposes the jit cache
+  population so tests can assert the no-retrace invariant.
 """
 
 from __future__ import annotations
@@ -37,7 +54,8 @@ import numpy as np
 from repro.runtime.executor import StealRuntime
 from repro.runtime.resilience import FaultPlan
 
-__all__ = ["evacuate", "shrink", "grow"]
+__all__ = ["evacuate", "shrink", "grow", "padded_runtime", "live_shrink",
+           "live_grow", "n_live", "compile_count"]
 
 _tmap = jax.tree_util.tree_map
 
@@ -152,3 +170,93 @@ def grow(rt: StealRuntime, n_new: int) -> StealRuntime:
     new = _carry_over(rt, new, rows)
     new.telemetry.record_fault("grow", n_new)
     return new
+
+
+# ---------------------------------------------------------------------------
+# Live resize: fixed W_max, dead-masked padding lanes, zero recompiles
+
+
+def padded_runtime(n_active: int, capacity: int, item_spec: Any, *,
+                   w_max: int, execution: str = "vmap",
+                   fault_plan: Optional[FaultPlan] = None,
+                   **kwargs) -> StealRuntime:
+    """A runtime built at lane capacity ``w_max`` with ``n_active`` live
+    lanes: lanes ``[n_active, w_max)`` are PADDING — killed at round 0,
+    empty, masked out of every plan.  Because the compiled step's shapes
+    are fixed by ``w_max`` and liveness is a traced schedule value,
+    later :func:`live_shrink`/:func:`live_grow` calls move the live
+    count without a single recompile (the rebuild path re-jits; this
+    path writes one host array).
+
+    ``fault_plan`` schedules ADDITIONAL failures on the active lanes
+    (indices below ``n_active``); padding kills are merged in.  All
+    other ``kwargs`` (policy, backend, pod_size, ...) pass through to
+    :func:`repro.distributed.launch.launch_runtime`."""
+    n_active, w_max = int(n_active), int(w_max)
+    if not (1 <= n_active <= w_max):
+        raise ValueError(
+            f"n_active={n_active} must be in [1, w_max={w_max}]")
+    base = fault_plan or FaultPlan()
+    for w, _ in base.kills:
+        if w >= n_active:
+            raise ValueError(
+                f"fault_plan kills lane {w}, which is a padding lane "
+                f"(>= n_active={n_active})")
+    pad_kills = tuple((w, 0) for w in range(n_active, w_max))
+    plan = FaultPlan(kills=base.kills + pad_kills, delays=base.delays,
+                     drops=base.drops)
+    from repro.distributed.launch import launch_runtime
+
+    rt = launch_runtime(w_max, capacity, item_spec, execution=execution,
+                        fault_plan=plan, **kwargs)
+    rt.telemetry.record_fault("padded_launch", w_max - n_active)
+    return rt
+
+
+def n_live(rt: StealRuntime) -> int:
+    """Live lanes as of the next round (W minus the dead mask)."""
+    return rt.n_workers - int(rt.dead_lanes().sum())
+
+
+def live_shrink(rt: StealRuntime, drop_lanes: Sequence[int]) -> int:
+    """Shrink IN PLACE: evacuate ``drop_lanes`` into the survivors and
+    leave them dead-masked (they become padding).  The compiled step is
+    untouched — same runtime, same jit cache.  Returns the number of
+    recovery rounds the evacuation took."""
+    rounds = evacuate(rt, drop_lanes)
+    rt.telemetry.record_fault("shrink_live", len(list(drop_lanes)))
+    return rounds
+
+
+def live_grow(rt: StealRuntime, n_new: int) -> List[int]:
+    """Grow IN PLACE: revive ``n_new`` dead (padding) lanes, empty and
+    alive — the next rounds feed them through the normal idle-thief
+    plan.  Raises if fewer than ``n_new`` dead lanes exist (the ``w_max``
+    headroom is spent — a bigger fleet needs :func:`grow`'s rebuild).
+    Returns the lane indices revived (lowest-index-first)."""
+    n_new = int(n_new)
+    if n_new <= 0:
+        return []
+    dead = np.flatnonzero(rt.dead_lanes())
+    if len(dead) < n_new:
+        raise ValueError(
+            f"live_grow({n_new}) needs {n_new} dead lanes but only "
+            f"{len(dead)} exist — w_max headroom exhausted; use grow()")
+    lanes = [int(w) for w in dead[:n_new]]
+    for w in lanes:
+        rt.revive_lane(w)
+    rt.telemetry.record_fault("grow_live", n_new)
+    return lanes
+
+
+def compile_count(rt: StealRuntime) -> int:
+    """Total jit-cache population across the runtime's compiled steps —
+    the no-retrace assertion primitive: capture before a live resize,
+    compare after (equal = zero recompiles)."""
+    total = 0
+    for fn in rt._compiled.values():
+        try:
+            total += int(fn._cache_size())
+        except AttributeError:  # non-jit callable (test stub)
+            total += 1
+    return total

@@ -139,6 +139,11 @@ class RuntimeAdmissionMaster:
                          for i in range(n_replicas)]
         self._requests: Dict[int, object] = {}
         self.stolen = 0
+        # Automatic failure detection (attach_detector): None = off.
+        # Deliberately SEPARATE from any runtime-level detector — this
+        # one is fed wall-clock wave observations by the cluster, not
+        # the replayed fault schedule.
+        self.detector = None
 
     # -- request table -------------------------------------------------------
 
@@ -206,15 +211,50 @@ class RuntimeAdmissionMaster:
 
     def readmit(self, replica_id: int) -> None:
         """Re-admit an evicted lane: revive it in the fault schedule so
-        the next plans may route work back into it."""
+        the next plans may route work back into it.  Detector state and
+        straggler penalty for the lane clear (``revive_lane`` clears the
+        runtime controller's attribution; the master's own detector is
+        revived here)."""
         self.runtime.revive_lane(replica_id)
+        if self.detector is not None:
+            self.detector.revive(replica_id)
         self.replicas[replica_id].evicted = False
         self.telemetry.record_fault("readmit")
 
-    def note_straggler(self, rounds: int = 4, factor: float = 1.5) -> None:
+    def note_straggler(self, rounds: int = 4, factor: float = 1.5,
+                       lane: Optional[int] = None) -> None:
         """A replica was flagged slow: delegates to the runtime (counter
-        + temporary steal-proportion boost)."""
-        self.runtime.note_straggler(rounds=rounds, factor=factor)
+        + temporary steal-proportion boost, attributed to ``lane``)."""
+        self.runtime.note_straggler(rounds=rounds, factor=factor, lane=lane)
+
+    def attach_detector(self, policy=None):
+        """Arm the shared :class:`repro.runtime.detector.FailureDetector`
+        escalation policy: SUSPECTED -> straggler boost, DEAD -> real
+        on-device :meth:`evict` (lane killed, ring drained by recovery
+        supersteps; recorded as ``auto_evict``).  The owner feeds
+        observations; :meth:`readmit` revives.  Returns the detector."""
+        from repro.runtime.detector import DetectorPolicy, FailureDetector
+
+        pol = policy or DetectorPolicy()
+
+        def on_suspect(rid: int) -> None:
+            self.note_straggler(rounds=pol.boost_rounds,
+                                factor=pol.boost_factor, lane=rid)
+
+        def on_dead(rid: int) -> None:
+            if not self.replicas[rid].evicted:
+                self.evict(rid)
+                self.telemetry.record_fault("auto_evict")
+
+        def on_revive(rid: int) -> None:
+            if self.controller is not None:
+                self.controller.clear_straggler(rid)
+
+        self.detector = FailureDetector(len(self.replicas), pol,
+                                        on_suspect=on_suspect,
+                                        on_dead=on_dead,
+                                        on_revive=on_revive)
+        return self.detector
 
     def rebalance(self) -> int:
         """One REAL rebalance round through the executor (plan + exchange

@@ -53,6 +53,12 @@ superstep, queue snapshots (``save_state``/``restore_state``/
 ``attach_snapshots``) ride :mod:`repro.train.checkpoint` for elastic
 crash-resume, and ``kill_lane``/``revive_lane``/``note_straggler`` give
 hosts live control (planned eviction, shrink/grow, straggler response).
+Failure detection (:mod:`~repro.runtime.detector`):
+``runtime.attach_detector(DetectorPolicy(...))`` arms the shared
+healthy → suspected → dead state machine that converts slow-round
+streaks into proportion boosts and, past ``dead_after``, real
+``kill_lane`` escalations — the same policy object the serve admission
+masters use for ``auto_evict_after``.
 
 How the paper's single-stealer invariant is preserved
 -----------------------------------------------------
@@ -76,6 +82,7 @@ before claiming the in-place splice numbers (see ROADMAP).
 """
 
 from repro.runtime.adaptive import AdaptiveConfig, AdaptiveController
+from repro.runtime.detector import DetectorPolicy, FailureDetector
 from repro.runtime.executor import StealRuntime
 from repro.runtime.resilience import FaultPlan, FaultState
 from repro.runtime.telemetry import (RoundRecord, Telemetry, WaveRecord,
@@ -84,6 +91,8 @@ from repro.runtime.telemetry import (RoundRecord, Telemetry, WaveRecord,
 __all__ = [
     "AdaptiveConfig",
     "AdaptiveController",
+    "DetectorPolicy",
+    "FailureDetector",
     "FaultPlan",
     "FaultState",
     "StealRuntime",

@@ -110,13 +110,37 @@ class AdaptiveController:
         # the feedback loop.
         self._boost_rounds_left = 0
         self._boost_factor = 1.0
+        # Which lanes the active boost is attributed to, so reviving a
+        # lane clears exactly its penalty (a lane-less flag attributes
+        # to nobody and only ever decays by rounds).
+        self._boost_lanes: set = set()
 
-    def flag_straggler(self, rounds: int = 4, factor: float = 1.5) -> None:
+    def flag_straggler(self, rounds: int = 4, factor: float = 1.5,
+                       lane: Optional[int] = None) -> None:
         """A straggler was flagged: boost the emitted steal proportion by
         ``factor`` (clamped to the config max) for the next ``rounds``
-        controller updates."""
+        controller updates.  ``lane`` attributes the boost so
+        :meth:`clear_straggler` (revival) can cancel it."""
         self._boost_rounds_left = max(self._boost_rounds_left, int(rounds))
         self._boost_factor = float(factor)
+        if lane is not None:
+            self._boost_lanes.add(int(lane))
+
+    def clear_straggler(self, lane: Optional[int] = None) -> None:
+        """Cancel straggler penalty: for ``lane`` (a revived lane must
+        not come back pre-penalized), or all of it when ``lane`` is
+        None.  The boost only drops when no attributed lane remains —
+        clearing one of two flagged lanes keeps the other's boost."""
+        if lane is None:
+            self._boost_lanes.clear()
+            self._boost_rounds_left = 0
+            self._boost_factor = 1.0
+            return
+        if int(lane) in self._boost_lanes:
+            self._boost_lanes.discard(int(lane))
+            if not self._boost_lanes:
+                self._boost_rounds_left = 0
+                self._boost_factor = 1.0
 
     @property
     def effective_proportion(self) -> float:
@@ -137,6 +161,8 @@ class AdaptiveController:
         self.history.append(p)
         if self._boost_rounds_left > 0:
             self._boost_rounds_left -= 1
+            if self._boost_rounds_left == 0:
+                self._boost_lanes.clear()
         return p
 
     def absorb(self, proportions_used, final_proportion) -> None:
@@ -150,3 +176,5 @@ class AdaptiveController:
         if self._boost_rounds_left > 0:
             self._boost_rounds_left = max(
                 0, self._boost_rounds_left - len(post) - 1)
+            if self._boost_rounds_left == 0:
+                self._boost_lanes.clear()

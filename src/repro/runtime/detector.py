@@ -1,0 +1,179 @@
+"""Automatic failure detection: healthy -> suspected -> dead, revivable.
+
+PR 7 made death *declared*: somebody calls ``kill_lane`` and the
+recovery superstep drains the corpse.  Production failures are not
+declared — a lane just stops answering, or answers late.  This module is
+the policy that INFERS death from behaviour, shared by every executor
+mode and both serve admission masters, so "how many slow rounds before
+we give up on a worker" is configured once instead of ad-hoc per layer
+(it replaces the old streak counter inside ``serve/engine.py``).
+
+The detector is deliberately host-side and observation-driven: it never
+touches device state itself.  Callers feed it one boolean observation
+per (lane, round) — ``slow=True`` when the lane missed its deadline
+(a :class:`repro.train.fault.StragglerMonitor` timeout, a replayed
+delay-schedule window, a wall-clock wave straggler) — and the detector
+answers with the lane's state, firing the escalation callbacks its owner
+registered:
+
+* ``on_suspect(lane)`` — the lane crossed ``suspect_after`` consecutive
+  slow observations.  Fired on EVERY slow observation at or past the
+  threshold (not just the crossing), so the owner can keep a temporary
+  proportion boost alive for as long as the lane keeps lagging; the
+  runtime wires this to :meth:`StealRuntime.note_straggler`.
+* ``on_dead(lane)`` — the streak reached ``dead_after``: the lane is
+  declared dead.  The runtime wires this to a real
+  :meth:`StealRuntime.kill_lane`, so the very next round masks the lane
+  out of every plan and the recovery superstep starts draining its ring.
+  A dead lane's subsequent observations are ignored until
+  :meth:`FailureDetector.revive`.
+* ``on_revive(lane)`` — an explicit revival (grow, re-admission): all
+  streak state clears, the lane restarts healthy.
+
+Determinism: the detector itself is a pure function of its observation
+sequence.  When the observations come from the replayed fault schedule
+(``StealRuntime._feed_detector``), the same :class:`FaultPlan` produces
+the same suspect/kill sequence under vmap and mesh execution — detector
+escalation preserves bit-identical replay parity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+__all__ = ["DetectorPolicy", "FailureDetector",
+           "HEALTHY", "SUSPECTED", "DEAD"]
+
+HEALTHY = "healthy"
+SUSPECTED = "suspected"
+DEAD = "dead"
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorPolicy:
+    """The one escalation policy every layer shares.
+
+    Attributes:
+      suspect_after: consecutive slow observations before a lane is
+        SUSPECTED (straggler boost territory).
+      dead_after: consecutive slow observations before a lane is
+        declared DEAD (a real ``kill_lane``).  ``None`` disables the
+        death escalation entirely — the detector then only ever
+        suspects, which is how a boost-only owner (no fault layer)
+        runs it.
+      healthy_after: consecutive on-time observations before a
+        SUSPECTED lane is cleared back to HEALTHY.
+      boost_rounds / boost_factor: the ``note_straggler`` proportion
+        boost parameters the owner applies per ``on_suspect`` firing.
+    """
+
+    suspect_after: int = 2
+    dead_after: Optional[int] = 6
+    healthy_after: int = 2
+    boost_rounds: int = 4
+    boost_factor: float = 1.5
+
+    def __post_init__(self):
+        if self.suspect_after < 1:
+            raise ValueError(f"suspect_after must be >= 1, "
+                             f"got {self.suspect_after}")
+        if self.healthy_after < 1:
+            raise ValueError(f"healthy_after must be >= 1, "
+                             f"got {self.healthy_after}")
+        if self.dead_after is not None and self.dead_after < self.suspect_after:
+            raise ValueError(
+                f"dead_after={self.dead_after} must be >= "
+                f"suspect_after={self.suspect_after} (suspicion precedes "
+                f"death) or None to disable the kill escalation")
+
+
+class FailureDetector:
+    """Per-lane healthy/suspected/dead state machine (host-side).
+
+    Args:
+      n_lanes: number of lanes (replicas) tracked.
+      policy: the shared :class:`DetectorPolicy` (default-constructed
+        when omitted).
+      on_suspect / on_dead / on_revive: escalation callbacks, each
+        ``(lane: int) -> None``; see the module docstring for when they
+        fire.  All optional — an unwired detector is a pure classifier.
+    """
+
+    def __init__(self, n_lanes: int, policy: Optional[DetectorPolicy] = None,
+                 *, on_suspect: Optional[Callable[[int], None]] = None,
+                 on_dead: Optional[Callable[[int], None]] = None,
+                 on_revive: Optional[Callable[[int], None]] = None):
+        if n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+        self.n_lanes = int(n_lanes)
+        self.policy = policy or DetectorPolicy()
+        self.on_suspect = on_suspect
+        self.on_dead = on_dead
+        self.on_revive = on_revive
+        self._state: List[str] = [HEALTHY] * self.n_lanes
+        self._slow_streak = [0] * self.n_lanes
+        self._fast_streak = [0] * self.n_lanes
+
+    # -- observations --------------------------------------------------------
+
+    def observe(self, lane: int, slow: bool) -> str:
+        """Feed one observation for ``lane``; returns its (new) state.
+
+        A DEAD lane short-circuits: corpses produce no meaningful
+        heartbeats, and their state only changes through
+        :meth:`revive`."""
+        self._check_lane(lane)
+        if self._state[lane] == DEAD:
+            return DEAD
+        pol = self.policy
+        if slow:
+            self._slow_streak[lane] += 1
+            self._fast_streak[lane] = 0
+            streak = self._slow_streak[lane]
+            if pol.dead_after is not None and streak >= pol.dead_after:
+                self._state[lane] = DEAD
+                if self.on_dead is not None:
+                    self.on_dead(lane)
+            elif streak >= pol.suspect_after:
+                self._state[lane] = SUSPECTED
+                # Re-fired on every slow observation past the threshold,
+                # so the owner's temporary boost tracks the lag window.
+                if self.on_suspect is not None:
+                    self.on_suspect(lane)
+        else:
+            self._fast_streak[lane] += 1
+            self._slow_streak[lane] = 0
+            if (self._state[lane] == SUSPECTED
+                    and self._fast_streak[lane] >= pol.healthy_after):
+                self._state[lane] = HEALTHY
+        return self._state[lane]
+
+    def revive(self, lane: int) -> None:
+        """Clear ``lane`` back to HEALTHY with zeroed streaks (grow,
+        re-admission, or the runtime's ``revive_lane``)."""
+        self._check_lane(lane)
+        was_dead = self._state[lane] == DEAD
+        self._state[lane] = HEALTHY
+        self._slow_streak[lane] = 0
+        self._fast_streak[lane] = 0
+        if was_dead and self.on_revive is not None:
+            self.on_revive(lane)
+
+    # -- inspection ----------------------------------------------------------
+
+    def state(self, lane: int) -> str:
+        self._check_lane(lane)
+        return self._state[lane]
+
+    def states(self) -> List[str]:
+        return list(self._state)
+
+    def streak(self, lane: int) -> int:
+        """The lane's current consecutive-slow count."""
+        self._check_lane(lane)
+        return self._slow_streak[lane]
+
+    def _check_lane(self, lane: int) -> None:
+        if not (0 <= lane < self.n_lanes):
+            raise ValueError(f"lane {lane} out of range [0, {self.n_lanes})")

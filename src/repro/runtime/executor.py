@@ -92,15 +92,14 @@ def make_lane_step(policy: StealPolicy, ops: bulk_ops.BulkOps,
     body, so the compiled round is unchanged), or the replicated fault
     schedule dict when ``fault=True`` — then the returned lane is
     :func:`~repro.runtime.resilience.make_resilient_lane`, which also
-    runs the dead-ring recovery superstep each round.  Fault injection
-    composes with flat supersteps only.
+    runs the dead-ring recovery superstep each round (intra-pod recovery
+    plus the cross-pod dead-POD escalation when ``hierarchical=True``).
     """
     if fault:
-        if hierarchical:
-            raise ValueError("fault injection requires flat supersteps "
-                             "(pod_size=None)")
         return resilience.make_resilient_lane(policy, ops, worker_fn,
-                                              axis_name=axis_name)
+                                              axis_name=axis_name,
+                                              pod_axis=pod_axis,
+                                              hierarchical=hierarchical)
 
     def lane(q, carry, proportion, ctx):
         del ctx  # round index only; same signature as the fault lane
@@ -154,7 +153,9 @@ class StealRuntime:
         (planned eviction, shrink/grow) and the per-round recovery
         superstep that drains dead rings at proportion 1.0.  ``None``
         (default) leaves the compiled round byte-identical to the
-        fault-free executor.  Flat supersteps only (``pod_size=None``).
+        fault-free executor.  Composes with ``pod_size``: on the
+        hierarchical grid a dead LANE drains intra-pod, an entirely
+        dead POD escalates to a cross-pod recovery plan.
     """
 
     def __init__(self, n_workers: int, capacity: int, item_spec: Pytree, *,
@@ -171,9 +172,6 @@ class StealRuntime:
         if pod_size is not None and n_workers % pod_size != 0:
             raise ValueError(
                 f"n_workers={n_workers} not divisible by pod_size={pod_size}")
-        if fault_plan is not None and pod_size is not None:
-            raise ValueError("fault injection requires flat supersteps "
-                             "(pod_size=None)")
         self.n_workers = int(n_workers)
         self.capacity = int(capacity)
         self.item_spec = item_spec
@@ -226,6 +224,8 @@ class StealRuntime:
                                             len(fault_plan.kills))
         else:
             self.fault = None
+        # Automatic failure detection (attach_detector): None = off.
+        self.detector = None
         self._snapshot_dir: Optional[str] = None
         self._snapshot_every = 0
         self._snapshot_keep = 3
@@ -286,15 +286,31 @@ class StealRuntime:
         the next round).  Its worker body stops producing, it leaves
         every plan, and the recovery superstep drains its ring into the
         survivors at proportion 1.0 over the following rounds.  Pure
-        host-side value mutation — no recompile."""
-        self._require_fault().kill(
-            lane, self.rounds_run if at_round is None else at_round)
+        host-side value mutation — no recompile.
+
+        Killing an already-dead lane raises: silently rescheduling a
+        corpse's kill round would rewrite replay history (the schedule is
+        the determinism contract) and mask double-kill bugs in callers."""
+        fault = self._require_fault()
+        at = self.rounds_run if at_round is None else at_round
+        if bool(fault.dead_at(max(at, self.rounds_run))[lane]):
+            raise ValueError(
+                f"lane {lane} is already dead (kill_round="
+                f"{int(fault.kill_round[lane])}); revive_lane first")
+        fault.kill(lane, at)
         self.telemetry.record_fault("kill")
 
     def revive_lane(self, lane: int) -> None:
         """Re-admit a killed lane (grow / end of eviction): it rejoins
-        plans from the next round with whatever its (drained) ring holds."""
+        plans from the next round with whatever its (drained) ring holds.
+        Any accumulated straggler penalty for the lane is cleared — a
+        revived lane starts with a clean bill of health, not
+        pre-penalized by its past life."""
         self._require_fault().revive(lane)
+        if self.controller is not None:
+            self.controller.clear_straggler(lane)
+        if self.detector is not None:
+            self.detector.revive(lane)
         self.telemetry.record_fault("revive")
 
     def dead_lanes(self) -> np.ndarray:
@@ -303,14 +319,72 @@ class StealRuntime:
             return np.zeros((self.n_workers,), bool)
         return self.fault.dead_at(self.rounds_run)
 
-    def note_straggler(self, rounds: int = 4, factor: float = 1.5) -> None:
+    def note_straggler(self, rounds: int = 4, factor: float = 1.5,
+                       lane: Optional[int] = None) -> None:
         """Record a detected straggler (``train.fault.StragglerMonitor``
         wiring): counts into telemetry and temporarily boosts the
         adaptive steal proportion so the master rebalances harder while
-        the slow lane lags."""
+        the slow lane lags.  ``lane`` attributes the boost so a later
+        :meth:`revive_lane` can clear exactly that lane's penalty."""
         self.telemetry.record_fault("straggler")
         if self.controller is not None:
-            self.controller.flag_straggler(rounds=rounds, factor=factor)
+            self.controller.flag_straggler(rounds=rounds, factor=factor,
+                                           lane=lane)
+
+    # -- resilience: automatic failure detection ------------------------------
+
+    def attach_detector(self, policy=None) -> "FailureDetector":
+        """Arm the automatic failure detector: per-lane delay streaks from
+        the fault schedule (or any external observer calling
+        ``detector.observe``) escalate suspected -> dead through ONE
+        policy — a suspected lane gets a :meth:`note_straggler`
+        proportion boost, a lane past ``dead_after`` consecutive slow
+        rounds gets a real :meth:`kill_lane` and its ring drains through
+        the recovery superstep.  Requires the fault layer
+        (``fault_plan=``).  Returns the detector (also at
+        :attr:`detector`)."""
+        from repro.runtime.detector import DetectorPolicy, FailureDetector
+
+        self._require_fault()
+        pol = policy or DetectorPolicy()
+
+        def on_suspect(lane: int) -> None:
+            self.note_straggler(rounds=pol.boost_rounds,
+                                factor=pol.boost_factor, lane=lane)
+
+        def on_dead(lane: int) -> None:
+            # The user (or an overlapping schedule) may have killed the
+            # lane already — the detector's verdict is then moot.
+            if not bool(self.dead_lanes()[lane]):
+                self.kill_lane(lane)
+                self.telemetry.record_fault("auto_kill")
+
+        def on_revive(lane: int) -> None:
+            if self.controller is not None:
+                self.controller.clear_straggler(lane)
+
+        self.detector = FailureDetector(self.n_workers, pol,
+                                        on_suspect=on_suspect,
+                                        on_dead=on_dead,
+                                        on_revive=on_revive)
+        return self.detector
+
+    def _feed_detector(self, round0: int, n_rounds: int) -> None:
+        """Feed the armed detector one observation per (round, live lane)
+        from the replayed delay schedule.  Host-side replay of the same
+        replicated schedule the lanes traced — deterministic, so vmap
+        and mesh runs convert the same delay windows into the same
+        kills at the same rounds (replay parity is preserved)."""
+        if self.detector is None or self.fault is None:
+            return
+        f = self.fault
+        for r in range(round0, round0 + n_rounds):
+            dead = f.dead_at(r)
+            slow = (f.delay_from <= r) & (r < f.delay_until)
+            for w in range(self.n_workers):
+                if dead[w]:
+                    continue  # corpses emit no heartbeats at all
+                self.detector.observe(w, bool(slow[w]))
 
     def _controller_sizes(self, sizes: np.ndarray) -> np.ndarray:
         """The size vector the host controller servos on: dead lanes
@@ -609,7 +683,9 @@ class StealRuntime:
                               bytes_moved=bytes_moved)
         if self.controller is not None:
             self.controller.update(self._controller_sizes(sizes))
+        r0 = self.rounds_run
         self.rounds_run += 1
+        self._feed_detector(r0, 1)
         self._maybe_snapshot()
         return carry, stats
 
@@ -674,7 +750,9 @@ class StealRuntime:
         if self.controller is not None and rounds > 0:
             self.controller.absorb(tele["proportion"][:rounds],
                                    float(p_final))
+        r0 = self.rounds_run
         self.rounds_run += rounds
+        self._feed_detector(r0, rounds)
         self._maybe_snapshot()
         if until_drained:
             stats = jax.tree_util.tree_map(lambda x: x[:rounds], stats)

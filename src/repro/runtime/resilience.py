@@ -275,18 +275,24 @@ def masked_plan(sizes: jnp.ndarray, dead: jnp.ndarray,
 
 
 def recovery_plan(sizes: jnp.ndarray, dead: jnp.ndarray, *,
-                  max_steal: int, capacity: int) -> jnp.ndarray:
+                  max_steal: int, capacity: int,
+                  thief_ok: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """The dead-worker-as-victim plan: rank dead lanes that still hold
     work by size (fullest first) and surviving lanes by load (emptiest
     first), pair them, and steal ``min(size, max_steal, thief free
     space)`` — proportion 1.0, bounded per round by the exchange window,
     so a ring larger than ``max_steal`` drains over successive rounds.
     Same ``(W, 2)`` layout as :func:`~repro.core.policy.plan_transfers`;
-    executed by the unmodified compact (or dense) exchange."""
+    executed by the unmodified compact (or dense) exchange.
+
+    ``thief_ok`` optionally restricts who may receive: the cross-pod
+    recovery rows of the hierarchical lane pass the per-row liveness
+    mask here, because a LIVE pod's lane in some row may itself be a
+    dead lane — it must not be handed a dead pod's ring."""
     n = sizes.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32)
     victim = dead & (sizes > 0)
-    thief = ~dead
+    thief = ~dead if thief_ok is None else (thief_ok & ~dead)
 
     victim_order = jnp.argsort(jnp.where(victim, -sizes, jnp.int32(2**30)))
     thief_order = jnp.argsort(jnp.where(thief, sizes, jnp.int32(2**30)))
@@ -320,11 +326,12 @@ def _select(keep_old: jnp.ndarray, old: Pytree, new: Pytree) -> Pytree:
 
 
 def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
-                        axis_name: str):
+                        axis_name: str, pod_axis: Optional[str] = None,
+                        hierarchical: bool = False):
     """The fault-injecting round body for ONE lane:
     ``(q, carry, proportion, ctx) -> (q, carry, stats)`` — what
     :func:`repro.runtime.executor.make_lane_step` returns when the
-    runtime was built with a :class:`FaultPlan` (flat supersteps only).
+    runtime was built with a :class:`FaultPlan`.
 
     Per round, in order: (1) the worker body runs on EVERY lane (worker
     collectives stay collective) but its effects are discarded on dead
@@ -334,9 +341,32 @@ def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
     while nobody is dead).  Dropped-exchange rounds force both plans
     empty.  The merged stats keep the round's full transfer accounting
     (``sizes_before`` from before any exchange, ``sizes_after`` from
-    after recovery, counters summed)."""
+    after recovery, counters summed).
 
-    def lane(q, carry, proportion, ctx):
+    With ``hierarchical=True`` (a 2-D ``(pod_axis, axis_name)`` lane
+    grid) the round composes FOUR plans, all derived from the replicated
+    schedule so every lane/mode agrees bit-for-bit:
+
+    * the intra-pod normal plan with the pod's dead lanes masked;
+    * the cross-pod normal plan over lane-0 representatives, where a pod
+      whose representative is dead abstains (sentinel) until revival —
+      its work still flows intra-pod, and its dead rep's ring drains
+      intra-pod (a dead LANE is a pod-local event);
+    * the intra-pod recovery plan (dead-fullest -> alive-emptiest within
+      the pod);
+    * the cross-pod recovery plan for ENTIRELY dead pods: each ring row
+      ``w`` drains dead pods' lane-``w`` rings into the emptiest live
+      pod's lane-``w``, with ``thief_ok`` excluding rows whose own lane
+      is dead in an otherwise-live pod.
+
+    Cross-pod recovery counts are folded onto lane-0 representatives
+    (``psum`` over the worker axis), preserving the
+    :func:`repro.runtime.telemetry.reduce_round_stats` accounting
+    convention: xpod counters nonzero only at lane ``(p, 0)``."""
+    if hierarchical and pod_axis is None:
+        raise ValueError("hierarchical resilient lane needs a pod_axis")
+
+    def flat_lane(q, carry, proportion, ctx):
         r = ctx_round(ctx)
         me = lax.axis_index(axis_name)
         i_am_dead = r >= ctx["kill_round"][me]
@@ -377,4 +407,101 @@ def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
         )
         return q, carry, stats
 
-    return lane
+    def hier_lane(q, carry, proportion, ctx):
+        from repro.core.ops import QueueState
+
+        r = ctx_round(ctx)
+        # psum of a literal folds to the static axis size at trace time,
+        # so these drive static reshapes/plan widths.
+        pod_size = lax.psum(1, axis_name)
+        n_pods = lax.psum(1, pod_axis)
+        w_idx = lax.axis_index(axis_name)
+        p_idx = lax.axis_index(pod_axis)
+        me = p_idx * pod_size + w_idx  # flat lane order: pod-major
+
+        # The schedule is replicated, so every liveness view derives
+        # from ctx with no collectives: the flat mask, my pod's slice,
+        # and the entirely-dead-pod vector.
+        dead_flat = dead_mask(ctx)                     # (W,)
+        dead2d = dead_flat.reshape(n_pods, pod_size)   # (n_pods, pod_size)
+        dead_intra = dead2d[p_idx]                     # (pod_size,)
+        pod_dead = jnp.all(dead2d, axis=1)             # (n_pods,)
+        i_am_dead = dead_flat[me]
+        i_am_delayed = (r >= ctx["delay_from"][me]) & (r < ctx["delay_until"][me])
+
+        if worker_fn is not None:
+            q_new, carry_new = worker_fn(q, carry)
+            skip = i_am_dead | i_am_delayed
+            q = _select(skip, q, q_new)
+            carry = _select(skip, carry, carry_new)
+
+        pol = dataclasses.replace(policy, proportion=proportion)
+        cap = jax.tree_util.tree_leaves(q.buf)[0].shape[0]
+        drop = jnp.any(ctx["drop_rounds"] == r)
+
+        # (1) Intra-pod normal superstep, the pod's dead lanes masked.
+        sizes_pod = master_ops.gather_sizes(q, worker_axis=axis_name)
+        plan = masked_plan(sizes_pod, dead_intra, pol)
+        plan = jnp.where(drop, _noop_plan(pod_size), plan)
+        q, intra = master_ops.superstep(q, pol, axis_name=axis_name,
+                                        ops=ops, plan=plan)
+
+        # (2) Cross-pod normal superstep via lane-0 representatives —
+        # the hierarchical_superstep sentinel trick, with a dead rep's
+        # pod abstaining entirely (its work still flows intra-pod).
+        sentinel = jnp.int32(pol.low_watermark + 1)
+        rep_dead = dead2d[p_idx, 0]
+        eff_size = jnp.where((w_idx == 0) & ~rep_dead, q.size, sentinel)
+        q_eff = QueueState(buf=q.buf, lo=q.lo, size=eff_size)
+        sizes_x = lax.all_gather(eff_size, pod_axis)   # (n_pods,) per row
+        pod_plan = plan_transfers(sizes_x, pol)
+        pod_plan = jnp.where(drop, _noop_plan(n_pods), pod_plan)
+        q_eff, pod_stats = master_ops.superstep(q_eff, pol,
+                                                axis_name=pod_axis,
+                                                ops=ops, plan=pod_plan)
+        delta = q_eff.size - eff_size
+        q = QueueState(buf=q_eff.buf, lo=q_eff.lo, size=q.size + delta)
+
+        # (3) Intra-pod recovery: a dead LANE's ring drains into its
+        # pod-mates (dead-fullest -> alive-emptiest, proportion 1.0).
+        # No-op in an entirely dead pod — no live thief exists there.
+        sizes2 = master_ops.gather_sizes(q, worker_axis=axis_name)
+        rplan = recovery_plan(sizes2, dead_intra, max_steal=pol.max_steal,
+                              capacity=cap)
+        rplan = jnp.where(drop, _noop_plan(pod_size), rplan)
+        q, irec = master_ops.superstep(q, pol, axis_name=axis_name,
+                                       ops=ops, plan=rplan)
+
+        # (4) Cross-pod recovery: a dead POD escalates — each ring row w
+        # drains the dead pods' lane-w rings into the emptiest live
+        # pod's lane-w, riding the same exchange over the pod axis.
+        dead_row = dead2d[:, w_idx]                    # (n_pods,) my row
+        sizes_row = lax.all_gather(q.size, pod_axis)
+        xplan = recovery_plan(sizes_row, pod_dead, max_steal=pol.max_steal,
+                              capacity=cap, thief_ok=~dead_row)
+        xplan = jnp.where(drop, _noop_plan(n_pods), xplan)
+        q, xrec = master_ops.superstep(q, pol, axis_name=pod_axis,
+                                       ops=ops, plan=xplan)
+
+        # Accounting, reduce_round_stats-exact: intra recovery adds to
+        # the per-pod intra counters; per-row cross-pod recovery counts
+        # are summed over the rows of a pod (replicated across pods) and
+        # folded onto lane-0 so the xpod fields stay nonzero only on
+        # representatives.  bytes stay PER-LANE (physical injection).
+        is_rep = w_idx == 0
+        xrec_nt = lax.psum(xrec.n_transferred, axis_name)
+        xrec_ns = lax.psum(xrec.n_steals, axis_name)
+        stats = intra._replace(
+            sizes_after=xrec.sizes_after,
+            n_transferred=intra.n_transferred + irec.n_transferred,
+            n_steals=intra.n_steals + irec.n_steals,
+            bytes_moved=intra.bytes_moved + irec.bytes_moved,
+            n_transferred_xpod=(pod_stats.n_transferred
+                                + jnp.where(is_rep, xrec_nt, 0)),
+            n_steals_xpod=(pod_stats.n_steals
+                           + jnp.where(is_rep, xrec_ns, 0)),
+            bytes_moved_xpod=pod_stats.bytes_moved + xrec.bytes_moved,
+        )
+        return q, carry, stats
+
+    return hier_lane if hierarchical else flat_lane

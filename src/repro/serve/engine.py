@@ -114,18 +114,35 @@ class ServeCluster:
         self.master = master
         self.rebalance_rounds = int(rebalance_rounds)
         self.done: List[Request] = []
-        # One wall-clock straggler detector per replica; a flagged wave
-        # counts into telemetry and boosts the master's steal proportion
-        # (``note_straggler``) so work drains AWAY from the slow replica.
+        # One wall-clock straggler monitor per replica; its timeout
+        # observations feed the shared FailureDetector below.
         self.monitors = [StragglerMonitor(threshold=straggler_threshold)
                          for _ in replicas]
-        # Escalation: a replica flagged slow ``auto_evict_after`` waves
-        # IN A ROW is evicted outright (its ring drained onto the
-        # others) rather than boosted around forever — death is
-        # declared by the master, never inferred by peers.  ``None``
-        # (the default) keeps the boost-only behavior.
+        # Escalation policy, ONE place (runtime/detector.py) instead of
+        # an ad-hoc streak counter here: every slow wave SUSPECTS the
+        # replica (straggler boost via ``note_straggler``); a replica
+        # slow ``auto_evict_after`` waves IN A ROW is declared DEAD —
+        # evicted outright, its ring drained onto the others.  ``None``
+        # keeps the boost-only behavior (no death escalation).  The
+        # detector lives on the master (host AND device masters expose
+        # ``attach_detector``), so host/vmap/mesh share one policy.
         self.auto_evict_after = auto_evict_after
-        self._straggler_streak = [0] * len(replicas)
+        from repro.runtime.detector import DetectorPolicy, FailureDetector
+
+        pol = DetectorPolicy(suspect_after=1, dead_after=auto_evict_after,
+                             healthy_after=1)
+        attach = getattr(self.master, "attach_detector", None)
+        if attach is not None:
+            self.detector = attach(pol)
+        else:  # duck-typed custom master: boost-only wiring
+            self.detector = FailureDetector(
+                len(replicas), pol,
+                on_suspect=lambda rid: self.master.note_straggler(),
+                on_dead=self._auto_evict)
+
+    def _auto_evict(self, replica_id: int) -> None:
+        self.evict_replica(replica_id)
+        self.telemetry.record_fault("auto_evict")
 
     def evict_replica(self, replica_id: int) -> int:
         """Planned eviction: the master drains the replica's queued
@@ -137,6 +154,10 @@ class ServeCluster:
 
     def readmit_replica(self, replica_id: int) -> None:
         self.master.readmit(replica_id)
+        # Masters with an attached detector revive it in readmit();
+        # revive the engine-owned fallback detector ourselves.
+        if getattr(self.master, "detector", None) is not self.detector:
+            self.detector.revive(replica_id)
 
     @property
     def telemetry(self):
@@ -161,25 +182,16 @@ class ServeCluster:
             mon.start()
             wave = rq.pop_wave(wave_n)
             finished = rep.run_wave(wave)
-            if mon.observe() and wave:
+            slow = bool(mon.observe()) and bool(wave)
+            if slow:
                 stragglers += 1
-                self.master.note_straggler()
-                self._straggler_streak[rid] += 1
-                if (self.auto_evict_after is not None
-                        and self._straggler_streak[rid]
-                        >= self.auto_evict_after):
-                    rq.finish_wave(len(finished))
-                    self.done.extend(finished)
-                    served += len(finished)
-                    self.evict_replica(rid)
-                    self.telemetry.record_fault("auto_evict")
-                    self._straggler_streak[rid] = 0
-                    continue
-            elif wave:
-                self._straggler_streak[rid] = 0
+            # The wave's requests are accounted BEFORE the detector may
+            # escalate to eviction — nothing in flight is lost.
             rq.finish_wave(len(finished))
             self.done.extend(finished)
             served += len(finished)
+            if wave:  # empty waves say nothing about replica health
+                self.detector.observe(rid, slow)
         tokens = sum(r.tokens_generated for r in self.replicas) - tokens_before
         evicted = sum(1 for r in self.master.replicas
                       if getattr(r, "evicted", False))

@@ -96,6 +96,8 @@ class AdmissionMaster:
         self.telemetry = Telemetry()  # item_bytes unknown host-side: counts
         self.stolen = 0
         self.rounds = 0
+        # Automatic failure detection (attach_detector): None = off.
+        self.detector = None
 
     @property
     def proportion(self) -> float:
@@ -150,16 +152,54 @@ class AdmissionMaster:
 
     def readmit(self, replica_id: int) -> None:
         """Re-admit an evicted replica: it rejoins admission and the
-        idle side of rebalancing from the next round."""
+        idle side of rebalancing from the next round, with any detector
+        state and straggler penalty cleared (clean bill of health)."""
         self.replicas[replica_id].evicted = False
+        if self.detector is not None:
+            self.detector.revive(replica_id)
+        if self.controller is not None:
+            self.controller.clear_straggler(replica_id)
         self.telemetry.record_fault("readmit")
 
-    def note_straggler(self, rounds: int = 4, factor: float = 1.5) -> None:
+    def note_straggler(self, rounds: int = 4, factor: float = 1.5,
+                       lane: Optional[int] = None) -> None:
         """A replica was flagged slow: count it and temporarily boost the
-        steal proportion (same response the device runtime applies)."""
+        steal proportion (same response the device runtime applies).
+        ``lane`` attributes the boost so :meth:`readmit` can clear it."""
         self.telemetry.record_fault("straggler")
         if self.controller is not None:
-            self.controller.flag_straggler(rounds=rounds, factor=factor)
+            self.controller.flag_straggler(rounds=rounds, factor=factor,
+                                           lane=lane)
+
+    def attach_detector(self, policy=None):
+        """Arm the shared :class:`repro.runtime.detector.FailureDetector`
+        escalation policy on this master: a SUSPECTED replica gets the
+        straggler proportion boost, a DEAD one a real :meth:`evict`
+        (recorded as ``auto_evict``).  The owner feeds observations
+        (``master.detector.observe(rid, slow)``); :meth:`readmit`
+        revives.  Returns the detector (also at :attr:`detector`)."""
+        from repro.runtime.detector import DetectorPolicy, FailureDetector
+
+        pol = policy or DetectorPolicy()
+
+        def on_suspect(rid: int) -> None:
+            self.note_straggler(rounds=pol.boost_rounds,
+                                factor=pol.boost_factor, lane=rid)
+
+        def on_dead(rid: int) -> None:
+            if not self.replicas[rid].evicted:
+                self.evict(rid)
+                self.telemetry.record_fault("auto_evict")
+
+        def on_revive(rid: int) -> None:
+            if self.controller is not None:
+                self.controller.clear_straggler(rid)
+
+        self.detector = FailureDetector(len(self.replicas), pol,
+                                        on_suspect=on_suspect,
+                                        on_dead=on_dead,
+                                        on_revive=on_revive)
+        return self.detector
 
     # -- rebalancing ---------------------------------------------------------
 

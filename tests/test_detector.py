@@ -1,0 +1,126 @@
+"""FailureDetector state machine unit tests (host-only, no devices).
+
+The detector is the ONE escalation policy every layer shares
+(``runtime.attach_detector``, both admission masters,
+``ServeCluster.auto_evict_after``); these tests pin its transition
+semantics so the integration suites (tests/test_hierarchical_fault.py,
+tests/test_decode.py) can rely on them.
+"""
+
+import pytest
+
+from repro.runtime.detector import (DEAD, HEALTHY, SUSPECTED,
+                                    DetectorPolicy, FailureDetector)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="suspect_after"):
+        DetectorPolicy(suspect_after=0)
+    with pytest.raises(ValueError, match="healthy_after"):
+        DetectorPolicy(healthy_after=0)
+    with pytest.raises(ValueError, match="dead_after"):
+        DetectorPolicy(suspect_after=3, dead_after=2)
+    DetectorPolicy(dead_after=None)          # death escalation disabled
+    DetectorPolicy(suspect_after=3, dead_after=3)
+
+
+def test_happy_path_stays_healthy():
+    det = FailureDetector(2)
+    for _ in range(20):
+        assert det.observe(0, slow=False) == HEALTHY
+    assert det.states() == [HEALTHY, HEALTHY]
+    assert det.streak(0) == 0
+
+
+def test_suspect_then_recover():
+    det = FailureDetector(1, DetectorPolicy(suspect_after=2, dead_after=None,
+                                            healthy_after=2))
+    assert det.observe(0, slow=True) == HEALTHY      # streak 1 < 2
+    assert det.observe(0, slow=True) == SUSPECTED    # streak 2
+    assert det.observe(0, slow=False) == SUSPECTED   # 1 fast < healthy_after
+    assert det.observe(0, slow=False) == HEALTHY     # 2 fast
+    assert det.streak(0) == 0
+
+
+def test_fast_resets_slow_streak():
+    det = FailureDetector(1, DetectorPolicy(suspect_after=3, dead_after=4))
+    det.observe(0, True)
+    det.observe(0, True)
+    det.observe(0, False)                            # streak resets
+    det.observe(0, True)
+    det.observe(0, True)
+    assert det.state(0) == HEALTHY                   # never reached 3
+    det.observe(0, True)
+    assert det.state(0) == SUSPECTED
+
+
+def test_dead_escalation_and_callbacks():
+    events = []
+    det = FailureDetector(
+        2, DetectorPolicy(suspect_after=2, dead_after=4),
+        on_suspect=lambda w: events.append(("suspect", w)),
+        on_dead=lambda w: events.append(("dead", w)),
+        on_revive=lambda w: events.append(("revive", w)))
+    for _ in range(4):
+        det.observe(1, slow=True)
+    assert det.state(1) == DEAD
+    # on_suspect fires on EVERY slow observation at/past the threshold
+    # (rounds 2 and 3), then on_dead once at round 4's observation.
+    assert events == [("suspect", 1), ("suspect", 1), ("dead", 1)]
+    # corpses short-circuit: further observations are ignored
+    assert det.observe(1, slow=False) == DEAD
+    assert det.observe(1, slow=True) == DEAD
+    assert events[-1] == ("dead", 1)
+    # revive clears everything and fires on_revive
+    det.revive(1)
+    assert det.state(1) == HEALTHY and det.streak(1) == 0
+    assert events[-1] == ("revive", 1)
+    # reviving a non-dead lane resets streaks but fires no callback
+    det.observe(0, slow=True)
+    det.revive(0)
+    assert det.streak(0) == 0
+    assert events[-1] == ("revive", 1)
+
+
+def test_dead_after_none_never_kills():
+    det = FailureDetector(1, DetectorPolicy(suspect_after=1, dead_after=None))
+    for _ in range(50):
+        det.observe(0, slow=True)
+    assert det.state(0) == SUSPECTED
+
+
+def test_per_lane_isolation():
+    det = FailureDetector(3, DetectorPolicy(suspect_after=2, dead_after=3))
+    for _ in range(3):
+        det.observe(2, slow=True)
+        det.observe(0, slow=False)
+    assert det.states() == [HEALTHY, HEALTHY, DEAD]
+
+
+def test_lane_range_checked():
+    det = FailureDetector(2)
+    with pytest.raises(ValueError, match="out of range"):
+        det.observe(2, slow=True)
+    with pytest.raises(ValueError, match="out of range"):
+        det.revive(-1)
+    with pytest.raises(ValueError, match="n_lanes"):
+        FailureDetector(0)
+
+
+def test_serve_cluster_policy_equivalence():
+    """The policy ServeCluster maps auto_evict_after onto: every slow
+    wave suspects (boost), ``dead_after`` consecutive slow waves kill,
+    one fast wave resets — exactly the old ad-hoc streak counter."""
+    boosts, deaths = [], []
+    det = FailureDetector(
+        1, DetectorPolicy(suspect_after=1, dead_after=3, healthy_after=1),
+        on_suspect=lambda w: boosts.append(w),
+        on_dead=lambda w: deaths.append(w))
+    det.observe(0, True)
+    det.observe(0, True)
+    det.observe(0, False)     # streak broken at 2: no death
+    assert deaths == [] and len(boosts) == 2
+    det.observe(0, True)
+    det.observe(0, True)
+    det.observe(0, True)      # 3 in a row -> dead
+    assert deaths == [0] and len(boosts) == 4

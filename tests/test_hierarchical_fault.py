@@ -1,0 +1,286 @@
+"""Hierarchical fault recovery, failure detection, live no-rebuild resize.
+
+Same dual execution shape as ``tests/test_resilience.py``: with >= 8
+devices (the CI ``chaos`` lane) the checks run in-process; otherwise a
+subprocess sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+and ``REPRO_CHECK=1`` before jax initializes and runs the identical
+checks.
+
+The checks:
+
+* **Hierarchical replay parity, kill mid-drain** — the Fig. 9 DAG on a
+  2x4 ``(pod, worker)`` grid under a seeded ``FaultPlan``: vmap and mesh
+  execute the identical failure and recovery bit-for-bit, every node is
+  explored exactly once, for BOTH a dead-lane plan (intra-pod recovery)
+  and a dead-pod plan (cross-pod escalation).
+* **Detector conversion** — an injected delay schedule is converted by
+  the ``FailureDetector`` into real kills at the same rounds in both
+  execution modes, with zero item loss (the conservation sanitizer is
+  armed in the chaos lane).
+* **Live resize** — ``padded_runtime`` at ``W_max`` with live
+  shrink/grow performs ZERO recompiles (asserted via the jit cache
+  population) while preserving the exact item multiset.
+* **Cross-topology restore with faults** — an 8-lane FLAT checkpoint
+  taken mid-fault-plan restores bit-identically into a 2x4 hierarchical
+  mesh, which then finishes the drain with the exact item multiset.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+_HAVE_8 = jax.device_count() >= 8
+
+_CHECKS = textwrap.dedent("""
+    import tempfile
+
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax import lax
+
+    from repro.core.policy import StealPolicy
+    from repro.distributed import MeshStealRuntime, launch_runtime
+    from repro.distributed import elastic
+    from repro.launch.mesh import make_worker_mesh
+    from repro.runtime import DetectorPolicy, FaultPlan, StealRuntime
+
+    SPEC = jax.ShapeDtypeStruct((), jnp.int32)
+    DSPEC = {"x": SPEC}
+
+    def tree_eq(a, b):
+        jax.tree_util.tree_map(
+            lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                       np.asarray(y)), a, b)
+
+    def items_of(rt):
+        q = jax.tree_util.tree_map(np.asarray, rt.queues)
+        leaf = q.buf["x"] if isinstance(q.buf, dict) else q.buf
+        cap = leaf.shape[1]
+        out = []
+        for i in range(rt.n_workers):
+            lo, sz = int(q.lo[i]), int(q.size[i])
+            out += [int(leaf[i][(lo + j) % cap]) for j in range(sz)]
+        return sorted(out)
+
+    # -- hierarchical replay parity: fig9 DAG, 2x4 grid, kill mid-drain -----
+
+    N_NODES, BATCH, FANOUT = 2000, 16, 4
+
+    def dag_body(ops):
+        def body(q, carry):
+            q, nodes, n_popped = ops.pop_bulk(q, BATCH, jnp.int32(BATCH))
+            valid = jnp.arange(BATCH, dtype=jnp.int32) < n_popped
+            kids = (nodes[:, None] * FANOUT + 1
+                    + jnp.arange(FANOUT, dtype=jnp.int32)[None, :])
+            live = valid[:, None] & (kids < N_NODES)
+            flat, flive = kids.reshape(-1), live.reshape(-1)
+            order = jnp.argsort(~flive, stable=True)
+            flat = jnp.where(flive[order], flat[order], 0)
+            q, _ = ops.push(q, flat, jnp.sum(flive.astype(jnp.int32)))
+            peak = lax.pmax(carry, "workers")
+            return q, carry + jnp.sum(valid.astype(jnp.int32)) + 0 * peak
+        return body
+
+    def hier_replay_checks():
+        pol = StealPolicy(proportion=0.5, low_watermark=4,
+                          high_watermark=32, max_steal=64)
+        plans = {
+            # lane 3 (pod 0) dies mid-drain -> intra-pod recovery; lane 5
+            # straggles; one exchange dropped.
+            "dead-lane": FaultPlan(kills=((3, 6),), delays=((5, 4, 2),),
+                                   drops=(8,)),
+            # ALL of pod 1 (lanes 4..7) dies -> cross-pod escalation.
+            "dead-pod": FaultPlan(kills=((4, 5), (5, 5), (6, 6), (7, 6)),
+                                  delays=((1, 3, 2),), drops=(9,)),
+        }
+        for name, plan in plans.items():
+            results = {}
+            for mode in ("vmap", "mesh"):
+                rt = launch_runtime(8, 1024, SPEC, execution=mode,
+                                    policy=pol, pod_size=4, max_pop=BATCH,
+                                    fault_plan=plan)
+                rt.push(0, jnp.zeros((1,), jnp.int32), 1)
+                body = dag_body(rt.ops)
+                carry = jnp.zeros((8,), jnp.int32)
+                rounds = 0
+                while rt.total_size() > 0 and rounds < 500:
+                    carry, _, r = rt.run_fused(16, body, carry,
+                                               until_drained=True)
+                    rounds += r
+                assert (rt.sizes()[rt.dead_lanes()] == 0).all()
+                results[mode] = (int(jnp.sum(carry)),
+                                 np.asarray(carry).tolist(), rounds,
+                                 rt.telemetry.summary(),
+                                 rt.controller.history,
+                                 np.asarray(rt.sizes()).tolist())
+            v, m = results["vmap"], results["mesh"]
+            # every node explored exactly once, despite the kills
+            assert v[0] == m[0] == N_NODES, (name, v[0], m[0])
+            assert v[1] == m[1], name   # per-lane carries bit-identical
+            assert v[2] == m[2], name   # rounds to drain
+            assert v[3] == m[3], name   # telemetry summary
+            assert v[4] == m[4], name   # adaptive trajectory
+            assert v[5] == m[5], name   # final sizes
+        print("HIER-REPLAY-OK")
+
+    # -- detector: delay schedule -> suspicion -> real kills, no loss -------
+
+    def detector_conversion_checks():
+        pol = StealPolicy(backend="reference", low_watermark=4,
+                          high_watermark=16, max_steal=64)
+        dpol = DetectorPolicy(suspect_after=2, dead_after=4)
+        results = {}
+        for mode in ("vmap", "mesh"):
+            for pod_size in (None, 4):
+                rt = launch_runtime(8, 256, DSPEC, execution=mode,
+                                    policy=pol, pod_size=pod_size,
+                                    fault_plan=FaultPlan(
+                                        delays=((2, 1, 10), (6, 3, 10))))
+                det = rt.attach_detector(dpol)
+                rng = np.random.default_rng(7)
+                for w in range(8):
+                    n = int(rng.integers(10, 40))
+                    rt.push(w, {"x": jnp.arange(w * 100, w * 100 + n,
+                                                dtype=jnp.int32)}, n)
+                before = items_of(rt)
+                for _ in range(14):
+                    rt.round()
+                # both delayed lanes crossed dead_after and were killed
+                assert det.state(2) == "dead" and det.state(6) == "dead"
+                assert rt.dead_lanes()[2] and rt.dead_lanes()[6]
+                assert rt.telemetry.fault_events["auto_kill"] == 2
+                # their rings drained through recovery; nothing lost
+                assert rt.sizes()[2] == 0 and rt.sizes()[6] == 0
+                assert items_of(rt) == before
+                results[(mode, pod_size)] = (
+                    np.asarray(rt.fault.kill_round).tolist(),
+                    det.states())
+        # same schedule -> same kill rounds in every mode/topology
+        assert len(set(map(str, results.values()))) == 1, results
+        print("DETECTOR-CONVERSION-OK")
+
+    # -- live resize: fixed W_max, zero recompiles ---------------------------
+
+    def live_resize_checks():
+        pol = StealPolicy(backend="reference", low_watermark=2,
+                          high_watermark=8, max_steal=64)
+        for mode in ("vmap", "mesh"):
+            rt = elastic.padded_runtime(4, 128, DSPEC, w_max=8,
+                                        execution=mode, policy=pol)
+            assert elastic.n_live(rt) == 4
+            assert (rt.sizes() == 0).all()
+            rt.push(0, {"x": jnp.arange(96, dtype=jnp.int32)}, 96)
+            before = items_of(rt)
+            for _ in range(3):
+                rt.round()
+            c0 = elastic.compile_count(rt)
+            assert c0 >= 1
+
+            lanes = elastic.live_grow(rt, 3)
+            assert lanes == [4, 5, 6] and elastic.n_live(rt) == 7
+            for _ in range(4):
+                rt.round()
+            assert rt.sizes()[lanes].sum() > 0     # newcomers fed
+            assert items_of(rt) == before
+
+            rounds = elastic.live_shrink(rt, [0, 4])
+            assert rounds >= 1 and elastic.n_live(rt) == 5
+            assert rt.sizes()[[0, 4]].sum() == 0
+            assert items_of(rt) == before
+
+            # headroom exhausted -> explicit error, not a rebuild
+            try:
+                elastic.live_grow(rt, 4)
+            except ValueError as e:
+                assert "headroom" in str(e)
+            else:
+                raise AssertionError("over-grow accepted")
+
+            # the whole resize dance compiled NOTHING new
+            assert elastic.compile_count(rt) == c0
+            # fused dispatch after resize reuses its own single entry
+            rt.run_fused(4)
+            c1 = elastic.compile_count(rt)
+            elastic.live_grow(rt, 1)
+            elastic.live_shrink(rt, [1])
+            rt.run_fused(4)
+            assert elastic.compile_count(rt) == c1
+            assert items_of(rt) == before
+        print("LIVE-RESIZE-OK")
+
+    # -- flat checkpoint -> 2x4 hierarchical mesh, mid-fault-plan ------------
+
+    def flat_to_hier_restore_checks():
+        pol = StealPolicy(backend="reference", low_watermark=4,
+                          high_watermark=16, max_steal=64)
+        plan = FaultPlan(kills=((3, 6), (5, 7)), delays=((1, 2, 3),))
+        flat = StealRuntime(8, 128, DSPEC, policy=pol, fault_plan=plan)
+        rng = np.random.default_rng(13)
+        for w in range(8):
+            n = int(rng.integers(10, 40))
+            flat.push(w, {"x": jnp.arange(w * 100, w * 100 + n,
+                                          dtype=jnp.int32)}, n)
+        before = items_of(flat)
+        for _ in range(4):      # mid-plan: kills at 6/7 still pending
+            flat.round()
+        d = tempfile.mkdtemp()
+        flat.save_state(d)
+
+        hier = MeshStealRuntime(make_worker_mesh(8, pod_size=4), 128,
+                                DSPEC, policy=pol, fault_plan=FaultPlan())
+        step = hier.restore_state(d)
+        assert step == 4
+        # bit-identical restore: queues AND the pending fault schedule
+        tree_eq(jax.tree_util.tree_map(np.asarray, flat.queues),
+                jax.tree_util.tree_map(np.asarray, hier.queues))
+        assert np.asarray(hier.fault.kill_round).tolist() == \\
+               np.asarray(flat.fault.kill_round).tolist()
+        assert items_of(hier) == before
+
+        # the hierarchical mesh executes the pending kills and finishes
+        # the drain: dead rings empty, exact multiset preserved.
+        for _ in range(10):
+            hier.round()
+        assert hier.dead_lanes()[3] and hier.dead_lanes()[5]
+        assert hier.sizes()[3] == 0 and hier.sizes()[5] == 0
+        assert items_of(hier) == before
+        print("FLAT-TO-HIER-OK")
+
+    def run_checks():
+        assert jax.device_count() >= 8, jax.device_count()
+        hier_replay_checks()
+        detector_conversion_checks()
+        live_resize_checks()
+        flat_to_hier_restore_checks()
+        print("HIER-FAULT-OK")
+""")
+
+
+@pytest.mark.skipif(not _HAVE_8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8 before jax init (CI chaos lane)")
+def test_hierarchical_fault_inprocess():
+    ns = {}
+    exec(compile(_CHECKS, "<hier-fault-checks>", "exec"), ns)
+    ns["run_checks"]()
+
+
+@pytest.mark.skipif(_HAVE_8, reason="in-process variant runs instead")
+def test_hierarchical_fault_subprocess():
+    script = ('import os\n'
+              'os.environ["XLA_FLAGS"] = '
+              '"--xla_force_host_platform_device_count=8"\n'
+              'os.environ["REPRO_CHECK"] = "1"\n'
+              + _CHECKS + "\nrun_checks()\n")
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "HIER-FAULT-OK" in out.stdout, \
+        out.stdout[-2000:] + "\n" + out.stderr[-3000:]

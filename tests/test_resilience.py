@@ -334,12 +334,29 @@ _CHECKS = textwrap.dedent("""
             assert "every lane" in str(e)
         else:
             raise AssertionError("total-kill plan accepted")
+        # fault + hierarchical compose now (PR 9); construction accepts
+        # and kill-on-already-dead raises instead of rescheduling.
+        hrt = StealRuntime(4, 64, DSPEC, pod_size=2, fault_plan=FaultPlan())
+        hrt.kill_lane(1)
         try:
-            StealRuntime(4, 64, DSPEC, pod_size=2, fault_plan=FaultPlan())
+            hrt.kill_lane(1)
         except ValueError as e:
-            assert "flat" in str(e)
+            assert "already dead" in str(e)
         else:
-            raise AssertionError("fault + hierarchical accepted")
+            raise AssertionError("double kill accepted")
+        hrt.revive_lane(1)
+        hrt.kill_lane(1)  # legal again after revive
+        # revive clears the lane's straggler attribution/boost
+        srt = StealRuntime(4, 64, DSPEC,
+                           policy=StealPolicy(backend="reference"),
+                           fault_plan=FaultPlan())
+        p0 = srt.proportion
+        srt.note_straggler(rounds=50, factor=2.0, lane=2)
+        assert srt.proportion > p0
+        srt.kill_lane(2)
+        srt.revive_lane(2)
+        assert srt.proportion == p0   # boost cleared, not pre-penalized
+        assert srt.controller._boost_rounds_left == 0
         # recovery_plan: dead fullest -> alive emptiest, capacity-clamped
         sizes = jnp.asarray([10, 50, 7, 0], jnp.int32)
         dead = jnp.asarray([False, True, False, True])
