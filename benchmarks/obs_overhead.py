@@ -1,0 +1,258 @@
+"""Observability overhead gates on the Fig. 9 device drain.
+
+The phase probe's contract (DESIGN.md §11) has three measurable edges,
+and this benchmark measures all three on the same tiny Fig. 9 DAG
+workload the fused-speedup gate uses:
+
+* **Overhead** — a probed fused drain must cost < 5 % extra wall over
+  the identical unprobed drain (best-of-repeats both sides; the probe's
+  steady-state cost is two clock reads per block plus four amortized
+  calibration dispatches per ``calibrate_every`` rounds).
+* **Bit-identity** — the probed drain's final queue state and carry are
+  leaf-for-leaf identical to the unprobed drain's (prefix programs are
+  pure and never donate, so they cannot perturb the committed rounds).
+* **Compile-identity when off** — a runtime with the probe attached but
+  DISABLED compiles exactly the same programs as a never-probed runtime
+  (``elastic.compile_count`` equal, zero probe-cache entries) and
+  produces the identical result: disarmed observability is free.
+
+``run()`` returns the gate table + the dict ``benchmarks/run.py --obs``
+writes into ``BENCH_PR10.json``; :func:`phase_breakdown` adds the
+host-round / vmap-fused / mesh-fused per-phase splits.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import fig9_dag
+from benchmarks.common import Table
+from repro.distributed.elastic import compile_count
+
+OVERHEAD_LIMIT = 1.05
+
+
+def _fingerprint(rt, carry) -> List[np.ndarray]:
+    leaves = jax.tree_util.tree_leaves((rt.queues, carry))
+    return [np.asarray(x) for x in leaves]
+
+
+def _same(a: List[np.ndarray], b: List[np.ndarray]) -> bool:
+    return (len(a) == len(b)
+            and all(np.array_equal(x, y) for x, y in zip(a, b)))
+
+
+def _prepare_case(probe: str, *, tiny: bool, blocks: int, k: int) -> Dict:
+    """Build one configuration's drain: ``probe`` in
+    ``{"none", "on", "off"}``.  Returns the runtime plus a ``timed()``
+    closure that replays the identical seeded drain and returns its
+    wall; the caller interleaves ``timed()`` calls across configs so
+    machine drift lands on all of them equally."""
+    n_nodes = 20_000 if tiny else 200_000
+    rt = fig9_dag._make_runtime()
+    if probe == "on":
+        rt.attach_phase_probe(calibrate_every=512)
+    elif probe == "off":
+        rt.attach_phase_probe().enabled = False
+    body = fig9_dag._device_body(n_nodes, fig9_dag.DEVICE_BATCH, rt.ops)
+    rt.push(0, jnp.zeros((1,), jnp.int32), 1)
+    carry0 = jnp.zeros((fig9_dag.DEVICE_WORKERS,), jnp.int32)
+    for _ in range(6):
+        carry0, _ = rt.round(body, carry0)
+    seeded = jax.tree_util.tree_map(lambda x: x.copy(), rt.queues)
+    p_seeded = rt.proportion
+    # Warm outside timing: compiles the fused block, and (probe on) runs
+    # the one-time calibration + prefix-program compilation.
+    rt.run_fused(k, body, carry0)
+
+    case: Dict = {"rt": rt, "fingerprint": None, "wall_s": float("inf")}
+    state: Dict = {}
+
+    def start() -> None:
+        rt.queues = jax.tree_util.tree_map(lambda x: x.copy(), seeded)
+        rt.controller.proportion = p_seeded
+        state.update(carry=carry0, acc=0.0)
+
+    def step() -> None:
+        # Time ONE fused block; the caller rotates step() across configs
+        # so every config samples the same machine phases (reps are paid
+        # as a sum of individually-fenced blocks — run_fused syncs on
+        # its telemetry read-back anyway, so the fence adds nothing).
+        t0 = time.perf_counter()
+        carry, _ = rt.run_fused(k, body, state["carry"])
+        jax.block_until_ready((rt.queues.size, carry))
+        state["acc"] += time.perf_counter() - t0
+        state["carry"] = carry
+
+    def finish() -> float:
+        case["fingerprint"] = _fingerprint(rt, state["carry"])
+        return state["acc"]
+
+    case.update(start=start, step=step, finish=finish)
+    return case
+
+
+def run(tiny: bool = True) -> Tuple[Table, Dict]:
+    # A long timed region (blocks x k rounds) keeps host-clock noise well
+    # under the 5 % budget the gate adjudicates; the interleaving below
+    # handles slow drift between repeats.
+    blocks = 12
+    k = fig9_dag.FUSED_K
+    repeats = 16 if tiny else 24
+    cases = {probe: _prepare_case(probe, tiny=tiny, blocks=blocks, k=k)
+             for probe in ("none", "on", "off")}
+    # Interleave at BLOCK granularity so slow machine phases (thermal,
+    # noisy CI neighbors) hit every config equally within a repeat —
+    # rep-level rotation still lets one config monopolize a fast window.
+    # The gated overhead is the MEDIAN of per-rep PAIRED ratios: noise
+    # spikes land on both configs of a rep, so the ratio stays honest
+    # where best-of-walls across configs would compare different machine
+    # phases.
+    ratios = []
+    for _ in range(repeats):
+        for case in cases.values():
+            case["start"]()
+        for _ in range(blocks):
+            for case in cases.values():
+                case["step"]()
+        rep = {name: case["finish"]() for name, case in cases.items()}
+        for name, case in cases.items():
+            case["wall_s"] = min(case["wall_s"], rep[name])
+        ratios.append(rep["on"] / max(rep["none"], 1e-12))
+    for case in cases.values():
+        rt = case["rt"]
+        case["compile_count"] = compile_count(rt)
+        case["probe_programs"] = len(rt._probe_compiled)
+        case["phase_summary"] = rt.telemetry.phase_summary()
+    base, probed, off = cases["none"], cases["on"], cases["off"]
+
+    overhead = statistics.median(ratios)
+    identical_on = _same(base["fingerprint"], probed["fingerprint"])
+    identical_off = _same(base["fingerprint"], off["fingerprint"])
+    compiles_equal = off["compile_count"] == base["compile_count"]
+
+    gates = {
+        "overhead_lt_5pct": overhead < OVERHEAD_LIMIT,
+        "probed_bit_identical": identical_on,
+        "off_bit_identical": identical_off,
+        "off_compile_count_equal": compiles_equal,
+        "off_zero_probe_programs": off["probe_programs"] == 0,
+        "probed_rounds_attributed":
+            probed["phase_summary"]["timed_rounds"] > 0,
+    }
+
+    t = Table(f"Observability overhead: {blocks}x run_fused({k}) on the "
+              f"{'tiny ' if tiny else ''}Fig. 9 drain",
+              "config", ["wall ms", "jit programs", "probe programs",
+                         "attributed rounds"])
+    for label, case in (("no probe", base), ("probe on", probed),
+                        ("attached, disabled", off)):
+        t.add(label, [case["wall_s"] * 1e3, case["compile_count"],
+                      case["probe_programs"],
+                      case["phase_summary"]["timed_rounds"]])
+
+    data = {
+        "blocks": blocks, "k": k, "repeats": repeats,
+        "baseline_wall_s": base["wall_s"],
+        "probed_wall_s": probed["wall_s"],
+        "off_wall_s": off["wall_s"],
+        "probe_overhead": overhead,
+        "probe_overhead_best": probed["wall_s"] / max(base["wall_s"], 1e-12),
+        "paired_ratios": [round(r, 4) for r in ratios],
+        "overhead_limit": OVERHEAD_LIMIT,
+        "baseline_compile_count": base["compile_count"],
+        "off_compile_count": off["compile_count"],
+        "off_probe_programs": off["probe_programs"],
+        "gates": gates,
+        "gates_ok": all(gates.values()),
+        "probed_phase_summary": probed["phase_summary"],
+    }
+    return t, data
+
+
+# ---------------------------------------------------------------------------
+# Per-phase breakdown across execution modes
+# ---------------------------------------------------------------------------
+
+
+def _summarize(rt) -> Dict:
+    ps = rt.telemetry.phase_summary()
+    out = {"timed_rounds": ps["timed_rounds"],
+           "estimated_rounds": ps.get("estimated_rounds", 0),
+           "wall_s": ps.get("wall_s", 0.0)}
+    out["phases"] = {name: {"mean_s": agg["mean_s"],
+                            "fraction": agg["fraction"]}
+                     for name, agg in ps.get("phases", {}).items()}
+    return out
+
+
+def phase_breakdown(tiny: bool = True, *, with_mesh: bool = True
+                    ) -> Tuple[Table, Dict]:
+    """Per-phase wall-clock split of the Fig. 9 drain in three modes:
+    unfused host-driven ``round()`` calls (direct fence-bounded
+    measurement), fused vmap blocks (calibrated estimate), and — when
+    enough devices are visible — fused blocks on a real device mesh.
+    ``benchmarks/run.py --obs`` claims the fake host devices before jax
+    initializes, exactly like ``--mesh``."""
+    n_nodes = 20_000 if tiny else 200_000
+    rounds = 12
+    k = fig9_dag.FUSED_K
+    data: Dict[str, Dict] = {}
+
+    def seed_and_warm(rt, body):
+        rt.push(0, jnp.zeros((1,), jnp.int32), 1)
+        carry = jnp.zeros((rt.n_workers,), jnp.int32)
+        for _ in range(6):
+            carry, _ = rt.round(body, carry)
+        return carry
+
+    # host: per-round dispatches, direct measurement
+    rt = fig9_dag._make_runtime()
+    body = fig9_dag._device_body(n_nodes, fig9_dag.DEVICE_BATCH, rt.ops)
+    carry = seed_and_warm(rt, body)
+    rt.attach_phase_probe()
+    for _ in range(rounds):
+        carry, _ = rt.round(body, carry)
+    data["host_round"] = _summarize(rt)
+
+    # vmap fused: whole-block wall split by calibrated fractions
+    rt = fig9_dag._make_runtime()
+    body = fig9_dag._device_body(n_nodes, fig9_dag.DEVICE_BATCH, rt.ops)
+    carry = seed_and_warm(rt, body)
+    rt.attach_phase_probe(calibrate_every=512)
+    for _ in range(max(rounds // k, 2)):
+        carry, _ = rt.run_fused(k, body, carry)
+    data["vmap_fused"] = _summarize(rt)
+
+    # mesh fused: same drain, one lane per device under shard_map
+    if with_mesh and len(jax.devices()) >= fig9_dag.DEVICE_WORKERS:
+        from repro.distributed.launch import launch_runtime
+
+        pol = fig9_dag._make_runtime().policy
+        rt = launch_runtime(fig9_dag.DEVICE_WORKERS,
+                            fig9_dag.DEVICE_CAPACITY, fig9_dag.SPEC,
+                            execution="mesh", policy=pol,
+                            max_pop=fig9_dag.DEVICE_BATCH)
+        body = fig9_dag._device_body(n_nodes, fig9_dag.DEVICE_BATCH, rt.ops)
+        carry = seed_and_warm(rt, body)
+        rt.attach_phase_probe(calibrate_every=512)
+        for _ in range(max(rounds // k, 2)):
+            carry, _ = rt.run_fused(k, body, carry)
+        data["mesh_fused"] = _summarize(rt)
+
+    t = Table(f"Per-phase wall split ({n_nodes:,}-node drain)",
+              "mode", ["rounds", "worker_body", "exchange", "splice",
+                       "adaptive"])
+    for mode, d in data.items():
+        fr = d["phases"]
+        t.add(mode, [d["timed_rounds"]]
+              + [f"{fr[p]['fraction']:.0%}" if p in fr else "-"
+                 for p in ("worker_body", "exchange", "splice",
+                           "adaptive_update")])
+    return t, data

@@ -131,6 +131,13 @@ class PagedQueue:
 
         self._check = isinstance(self.ops, CheckedBulkOps)
         self._net_in = 0
+        # Paging traffic counters (read by repro.obs.metrics): one spill
+        # per host page written, one refill per page spliced back, with
+        # the item counts each way.
+        self.spills = 0
+        self.spilled_items = 0
+        self.refills = 0
+        self.refilled_items = 0
 
     def _audit(self, context: str) -> None:
         if not self._check:
@@ -169,11 +176,15 @@ class PagedQueue:
             n_sp = int(n_sp)
             if n_sp:
                 self.pages.append((jax.device_get(spilled), n_sp))
+                self.spills += 1
+                self.spilled_items += n_sp
         self.state, pushed = self.ops.push(self.state, batch, jnp.int32(n),
                                            donate=True)
         if int(pushed) < n:  # ring still too small for this batch: page the rest
             rest = jax.tree_util.tree_map(lambda x: x[int(pushed):], batch)
             self.pages.append((jax.device_get(rest), n - int(pushed)))
+            self.spills += 1
+            self.spilled_items += n - int(pushed)
         self._net_in += int(n)
         self._audit("push")
 
@@ -192,6 +203,8 @@ class PagedQueue:
             self.state, pushed = self.ops.push(self.state, dev, jnp.int32(n),
                                                donate=True)
             pushed = int(pushed)
+            self.refills += 1
+            self.refilled_items += pushed
             if pushed < n:
                 # Page larger than the ring's free space: keep the
                 # un-spliced tail as a (smaller) host page instead of

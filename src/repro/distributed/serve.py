@@ -290,3 +290,14 @@ class RuntimeAdmissionMaster:
             "backend": self.runtime.ops.resolved,
             "telemetry": self.telemetry.summary(),
         }
+
+    def metrics(self, registry=None):
+        """Poll this master into a :class:`repro.obs.metrics.
+        MetricsRegistry`: the admission surface (per-replica loads,
+        steal totals, detector census) PLUS the backing runtime's lane
+        metrics — one registry covers both layers of the device
+        master."""
+        from repro.obs.metrics import collect_runtime, master_metrics
+
+        reg = master_metrics(self, registry)
+        return collect_runtime(reg, self.runtime)

@@ -37,7 +37,9 @@ def run_resilient(make_runtime: Callable[[], "object"],
                   snapshot_every: int = 8,
                   keep: int = 3,
                   max_restarts: int = 3,
-                  on_restart: Optional[Callable] = None) -> int:
+                  on_restart: Optional[Callable] = None,
+                  metrics_path: Optional[str] = None,
+                  metrics_every_s: float = 1.0) -> int:
     """Run ``drive(runtime, should_stop)`` under snapshot + restart
     supervision.
 
@@ -55,6 +57,14 @@ def run_resilient(make_runtime: Callable[[], "object"],
         pointed at the same directory resumes where the dead one left
         off.
       max_restarts / on_restart: forwarded to ``run_supervised``.
+      metrics_path / metrics_every_s: when ``metrics_path`` is set, the
+        ``should_stop`` callable the drive loop already polls between
+        rounds ALSO refreshes a Prometheus textfile there (atomic
+        tmp+rename via :func:`repro.obs.metrics.write_textfile`,
+        throttled to at most one write per ``metrics_every_s``) — the
+        standard node-exporter textfile-collector contract, so a live
+        run is scrapable with zero changes to the drive loop.  A final
+        write lands after the loop exits.
     """
 
     def attempt(resume) -> int:
@@ -64,11 +74,33 @@ def run_resilient(make_runtime: Callable[[], "object"],
             rt.restore_state(snapshot_dir)
             if resume is not None:
                 rt.telemetry.record_fault("restart")
+
+        def write_metrics() -> None:
+            from repro.obs.metrics import write_textfile
+
+            write_textfile(rt.metrics(), metrics_path)
+
         with GracefulExit() as stop:
-            result = drive(rt, lambda: stop.requested)
+            if metrics_path is None:
+                should_stop = lambda: stop.requested  # noqa: E731
+            else:
+                import time as _time
+
+                last = [float("-inf")]
+
+                def should_stop() -> bool:
+                    now = _time.monotonic()
+                    if now - last[0] >= metrics_every_s:
+                        last[0] = now
+                        write_metrics()
+                    return stop.requested
+
+            result = drive(rt, should_stop)
             # A graceful exit's final state may postdate the last cadence
             # snapshot; save it so the NEXT process resumes exactly here.
             rt.save_state(snapshot_dir, keep=keep)
+            if metrics_path is not None:
+                write_metrics()
         return result
 
     return run_supervised(attempt, max_restarts=max_restarts,
@@ -93,6 +125,10 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--simulate-crash-at", type=int, default=0,
                     help="raise mid-drive at this round on attempt 0")
+    ap.add_argument("--metrics-path", default=None,
+                    help="write a Prometheus textfile here between rounds "
+                         "(atomic; node-exporter textfile collector format)")
+    ap.add_argument("--metrics-every-s", type=float, default=1.0)
     args = ap.parse_args(argv)
 
     crashed = {"done": False}
@@ -141,7 +177,9 @@ def main(argv: Optional[list] = None) -> int:
 
     rounds = run_resilient(make_runtime, drive,
                            snapshot_dir=args.snapshot_dir,
-                           snapshot_every=args.snapshot_every)
+                           snapshot_every=args.snapshot_every,
+                           metrics_path=args.metrics_path,
+                           metrics_every_s=args.metrics_every_s)
     print(f"[resilient] finished after {rounds} global rounds")
     return 0
 

@@ -39,7 +39,9 @@ escalation preserves bit-identical replay parity.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import statistics
 from typing import Callable, List, Optional
 
 __all__ = ["DetectorPolicy", "FailureDetector",
@@ -66,6 +68,23 @@ class DetectorPolicy:
         SUSPECTED lane is cleared back to HEALTHY.
       boost_rounds / boost_factor: the ``note_straggler`` proportion
         boost parameters the owner applies per ``on_suspect`` firing.
+      wall_clock: ALSO classify real measured dispatch wall times fed
+        through :meth:`FailureDetector.observe_wall` (the runtime feeds
+        per-round dispatch wall when this is set — wall-clock detection
+        on the RUNTIME path, not just the serve masters' monitors).
+        Off by default so CI replay determinism and the vmap/mesh
+        parity suites are untouched: wall observations are inherently
+        non-deterministic.
+      wall_slow_factor: a wall observation is "slow" when it exceeds
+        this multiple of the lane's rolling baseline (median of its
+        ``wall_window`` most recent observations).
+      wall_window: rolling-baseline window length, in observations; a
+        lane is never judged before it has ``max(4, wall_window // 4)``
+        samples of history.
+      wall_kill: let wall-driven streaks escalate all the way to DEAD.
+        Off by default — a collective dispatch wall cannot finger WHICH
+        lane is slow, so by default wall slowness only ever suspects
+        (boosting the steal proportion), never kills.
     """
 
     suspect_after: int = 2
@@ -73,6 +92,10 @@ class DetectorPolicy:
     healthy_after: int = 2
     boost_rounds: int = 4
     boost_factor: float = 1.5
+    wall_clock: bool = False
+    wall_slow_factor: float = 2.0
+    wall_window: int = 32
+    wall_kill: bool = False
 
     def __post_init__(self):
         if self.suspect_after < 1:
@@ -86,6 +109,12 @@ class DetectorPolicy:
                 f"dead_after={self.dead_after} must be >= "
                 f"suspect_after={self.suspect_after} (suspicion precedes "
                 f"death) or None to disable the kill escalation")
+        if self.wall_slow_factor <= 1.0:
+            raise ValueError(f"wall_slow_factor must be > 1.0, "
+                             f"got {self.wall_slow_factor}")
+        if self.wall_window < 4:
+            raise ValueError(f"wall_window must be >= 4, "
+                             f"got {self.wall_window}")
 
 
 class FailureDetector:
@@ -114,6 +143,10 @@ class FailureDetector:
         self._state: List[str] = [HEALTHY] * self.n_lanes
         self._slow_streak = [0] * self.n_lanes
         self._fast_streak = [0] * self.n_lanes
+        # Per-lane rolling wall-clock history for observe_wall (bounded;
+        # allocated eagerly — it's W deques of <= wall_window floats).
+        self._wall_hist = [collections.deque(maxlen=self.policy.wall_window)
+                           for _ in range(self.n_lanes)]
 
     # -- observations --------------------------------------------------------
 
@@ -123,6 +156,38 @@ class FailureDetector:
         A DEAD lane short-circuits: corpses produce no meaningful
         heartbeats, and their state only changes through
         :meth:`revive`."""
+        return self._observe(lane, slow, allow_kill=True)
+
+    def observe_wall(self, lane: int, wall_s: float) -> str:
+        """Feed one REAL wall-clock observation (seconds) for ``lane``;
+        returns its (new) state.
+
+        The observation is classified against the lane's own rolling
+        baseline — the median of its last ``wall_window`` observations —
+        as ``slow = wall_s > wall_slow_factor * baseline``, then runs the
+        same streak machine as :meth:`observe`, except that wall-driven
+        streaks stop at SUSPECTED unless ``policy.wall_kill`` (the wall
+        of one SPMD dispatch is a collective signal: it says "this round
+        ran slow", not "this lane is at fault", so by default it boosts
+        the steal proportion but never kills).  The sample is appended to
+        the history AFTER classification (a spike judges against clean
+        history; the median keeps later baselines robust to <50 %
+        outliers), and no lane is judged before ``max(4,
+        wall_window // 4)`` samples exist."""
+        self._check_lane(lane)
+        if self._state[lane] == DEAD:
+            return DEAD
+        pol = self.policy
+        hist = self._wall_hist[lane]
+        min_samples = max(4, pol.wall_window // 4)
+        slow = False
+        if len(hist) >= min_samples:
+            baseline = statistics.median(hist)
+            slow = wall_s > pol.wall_slow_factor * baseline
+        hist.append(float(wall_s))
+        return self._observe(lane, slow, allow_kill=pol.wall_kill)
+
+    def _observe(self, lane: int, slow: bool, *, allow_kill: bool) -> str:
         self._check_lane(lane)
         if self._state[lane] == DEAD:
             return DEAD
@@ -131,7 +196,8 @@ class FailureDetector:
             self._slow_streak[lane] += 1
             self._fast_streak[lane] = 0
             streak = self._slow_streak[lane]
-            if pol.dead_after is not None and streak >= pol.dead_after:
+            if (allow_kill and pol.dead_after is not None
+                    and streak >= pol.dead_after):
                 self._state[lane] = DEAD
                 if self.on_dead is not None:
                     self.on_dead(lane)
@@ -157,6 +223,7 @@ class FailureDetector:
         self._state[lane] = HEALTHY
         self._slow_streak[lane] = 0
         self._fast_streak[lane] = 0
+        self._wall_hist[lane].clear()
         if was_dead and self.on_revive is not None:
             self.on_revive(lane)
 

@@ -41,6 +41,7 @@ incumbent) exactly like ``core.dd.parallel`` does.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -71,7 +72,8 @@ def make_lane_step(policy: StealPolicy, ops: bulk_ops.BulkOps,
                    worker_fn: Optional[WorkerFn], *, axis_name: str,
                    pod_axis: Optional[str] = None,
                    hierarchical: bool = False,
-                   fault: bool = False) -> Callable:
+                   fault: bool = False,
+                   stage: Optional[str] = None) -> Callable:
     """The mode-agnostic round body for ONE lane:
     ``(q, carry, proportion, ctx) -> (q, carry, stats)``.
 
@@ -94,18 +96,41 @@ def make_lane_step(policy: StealPolicy, ops: bulk_ops.BulkOps,
     :func:`~repro.runtime.resilience.make_resilient_lane`, which also
     runs the dead-ring recovery superstep each round (intra-pod recovery
     plus the cross-pod dead-POD escalation when ``hierarchical=True``).
+
+    ``stage`` selects a TRUNCATED PREFIX of the round for the phase
+    probe (:mod:`repro.obs.phase`) — ``None`` (the default, the only
+    value production dispatches ever use) is the full round above;
+    ``"worker"`` stops after the worker body; ``"exchange"`` stops after
+    the block-exchange collective (:func:`repro.core.master.
+    exchange_probe`).  Prefix lanes return ``(q, carry, token)`` with a
+    DCE-proof scalar token in the stats slot; they are compiled into a
+    SEPARATE jit cache, run on immutable inputs, and their results are
+    discarded — timing them and subtracting attributes wall-clock to
+    ``worker_body`` / ``exchange`` / ``splice`` without touching the
+    committed round.  On the hierarchical grid ``"exchange"`` covers the
+    intra-pod exchange only (the cross-pod level folds into the splice
+    share — documented in DESIGN.md §11).
     """
+    if stage not in (None, "worker", "exchange"):
+        raise ValueError(f"unknown stage {stage!r}")
     if fault:
         return resilience.make_resilient_lane(policy, ops, worker_fn,
                                               axis_name=axis_name,
                                               pod_axis=pod_axis,
-                                              hierarchical=hierarchical)
+                                              hierarchical=hierarchical,
+                                              stage=stage)
 
     def lane(q, carry, proportion, ctx):
         del ctx  # round index only; same signature as the fault lane
         if worker_fn is not None:
             q, carry = worker_fn(q, carry)
+        if stage == "worker":
+            return q, carry, master_ops.probe_token(q)
         pol = dataclasses.replace(policy, proportion=proportion)
+        if stage == "exchange":
+            token = master_ops.exchange_probe(q, pol, axis_name=axis_name,
+                                              ops=ops)
+            return q, carry, token
         if hierarchical:
             q, stats = master_ops.hierarchical_superstep(
                 q, pol, worker_axis=axis_name, pod_axis=pod_axis, ops=ops)
@@ -204,6 +229,12 @@ class StealRuntime:
                                    capacity=capacity)
         self.rounds_run = 0
         self._compiled: Dict[Any, Callable] = {}
+        # Phase probe (repro.obs.phase): truncated-prefix programs live
+        # in their OWN cache so elastic.compile_count — which audits
+        # ``_compiled`` as the zero-recompile gate — never sees them.
+        self._phase_probe = None
+        self._probe_compiled: Dict[Any, Callable] = {}
+        self._probe_warmed: set = set()
         # Resilience: the host-side fault schedule (None = machinery off,
         # zero trace-structure change) and the snapshot cadence.
         if fault_plan is not None:
@@ -298,7 +329,7 @@ class StealRuntime:
                 f"lane {lane} is already dead (kill_round="
                 f"{int(fault.kill_round[lane])}); revive_lane first")
         fault.kill(lane, at)
-        self.telemetry.record_fault("kill")
+        self.telemetry.record_fault("kill", lane=lane)
 
     def revive_lane(self, lane: int) -> None:
         """Re-admit a killed lane (grow / end of eviction): it rejoins
@@ -311,7 +342,7 @@ class StealRuntime:
             self.controller.clear_straggler(lane)
         if self.detector is not None:
             self.detector.revive(lane)
-        self.telemetry.record_fault("revive")
+        self.telemetry.record_fault("revive", lane=lane)
 
     def dead_lanes(self) -> np.ndarray:
         """(W,) bool: lanes dead as of the next round to run."""
@@ -326,7 +357,7 @@ class StealRuntime:
         adaptive steal proportion so the master rebalances harder while
         the slow lane lags.  ``lane`` attributes the boost so a later
         :meth:`revive_lane` can clear exactly that lane's penalty."""
-        self.telemetry.record_fault("straggler")
+        self.telemetry.record_fault("straggler", lane=lane)
         if self.controller is not None:
             self.controller.flag_straggler(rounds=rounds, factor=factor,
                                            lane=lane)
@@ -349,6 +380,7 @@ class StealRuntime:
         pol = policy or DetectorPolicy()
 
         def on_suspect(lane: int) -> None:
+            self.telemetry.record_fault("suspect", lane=lane)
             self.note_straggler(rounds=pol.boost_rounds,
                                 factor=pol.boost_factor, lane=lane)
 
@@ -357,7 +389,7 @@ class StealRuntime:
             # lane already — the detector's verdict is then moot.
             if not bool(self.dead_lanes()[lane]):
                 self.kill_lane(lane)
-                self.telemetry.record_fault("auto_kill")
+                self.telemetry.record_fault("auto_kill", lane=lane)
 
         def on_revive(lane: int) -> None:
             if self.controller is not None:
@@ -369,12 +401,23 @@ class StealRuntime:
                                         on_revive=on_revive)
         return self.detector
 
-    def _feed_detector(self, round0: int, n_rounds: int) -> None:
+    def _feed_detector(self, round0: int, n_rounds: int,
+                       wall_s: Optional[float] = None) -> None:
         """Feed the armed detector one observation per (round, live lane)
         from the replayed delay schedule.  Host-side replay of the same
         replicated schedule the lanes traced — deterministic, so vmap
         and mesh runs convert the same delay windows into the same
-        kills at the same rounds (replay parity is preserved)."""
+        kills at the same rounds (replay parity is preserved).
+
+        When ``DetectorPolicy.wall_clock`` is set, the measured dispatch
+        wall (``wall_s``, covering ``n_rounds`` rounds) ALSO feeds each
+        live lane's rolling wall baseline via ``observe_wall`` — real
+        slowness detection on the runtime path.  The dispatch is one
+        SPMD program, so the wall is a collective signal: it cannot
+        finger the slow lane, it flags rounds whose whole dispatch ran
+        slow against each lane's own history (suspected -> boost; never
+        a kill unless ``wall_kill``).  Off by default, keeping CI replay
+        determinism and the vmap/mesh parity tests untouched."""
         if self.detector is None or self.fault is None:
             return
         f = self.fault
@@ -385,6 +428,14 @@ class StealRuntime:
                 if dead[w]:
                     continue  # corpses emit no heartbeats at all
                 self.detector.observe(w, bool(slow[w]))
+        pol = self.detector.policy
+        if (wall_s is not None and n_rounds > 0
+                and getattr(pol, "wall_clock", False)):
+            per_round = wall_s / n_rounds
+            dead = f.dead_at(round0 + n_rounds)
+            for w in range(self.n_workers):
+                if not dead[w]:
+                    self.detector.observe_wall(w, per_round)
 
     def _controller_sizes(self, sizes: np.ndarray) -> np.ndarray:
         """The size vector the host controller servos on: dead lanes
@@ -494,13 +545,15 @@ class StealRuntime:
 
     # -- the round -----------------------------------------------------------
 
-    def _lane_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
+    def _lane_step(self, worker_fn: Optional[WorkerFn],
+                   stage: Optional[str] = None) -> Callable:
         """The shared one-lane round body (see :func:`make_lane_step`)."""
         return make_lane_step(self.policy, self.ops, worker_fn,
                               axis_name=self.axis_name,
                               pod_axis=self.pod_axis,
                               hierarchical=self.pod_size is not None,
-                              fault=self.fault is not None)
+                              fault=self.fault is not None,
+                              stage=stage)
 
     def _ctx(self, round0: int):
         """The fault context for a dispatch starting at global round
@@ -511,11 +564,14 @@ class StealRuntime:
             return self.fault.ctx(round0)
         return jnp.int32(round0)
 
-    def _make_step(self, worker_fn: Optional[WorkerFn]) -> Callable:
-        """Un-jitted ``(qs, carry, proportion, ctx) -> (qs, carry, stats)``."""
+    def _make_step(self, worker_fn: Optional[WorkerFn],
+                   stage: Optional[str] = None) -> Callable:
+        """Un-jitted ``(qs, carry, proportion, ctx) -> (qs, carry, stats)``.
+        A non-None ``stage`` builds the phase probe's truncated prefix of
+        the same round (stats slot holds the DCE-proof token)."""
         pod_size = self.pod_size
         axis_name, pod_axis = self.axis_name, self.pod_axis
-        lane = self._lane_step(worker_fn)
+        lane = self._lane_step(worker_fn, stage)
 
         if pod_size is None:
             mapped = jax.vmap(lane, axis_name=axis_name,
@@ -613,6 +669,107 @@ class StealRuntime:
 
         return jax.jit(fused, donate_argnums=self._donate_argnums())
 
+    # -- observability: the phase probe --------------------------------------
+
+    def attach_phase_probe(self, probe=None, **kwargs):
+        """Arm per-round phase attribution (:mod:`repro.obs.phase`):
+        subsequent :meth:`round` dispatches time the worker/exchange
+        prefix programs directly, :meth:`run_fused` blocks split their
+        wall by calibrated fractions, and every
+        :class:`~repro.runtime.telemetry.RoundRecord` gains the
+        ``t_worker``/``t_exchange``/``t_splice``/``t_adaptive`` fields
+        (``Telemetry.phase_summary()`` aggregates them).  Pass an
+        existing :class:`~repro.obs.phase.PhaseProbe` or constructor
+        kwargs (``enabled=``, ``calibrate_every=``).  Returns the probe
+        (also at ``_phase_probe``); set ``probe.enabled = False`` to
+        disarm without losing calibrations — the dispatch path is then
+        byte-identical to an unprobed runtime."""
+        from repro.obs.phase import PhaseProbe
+
+        if probe is None:
+            probe = PhaseProbe(**kwargs)
+        self._phase_probe = probe
+        return probe
+
+    def _probe_enabled(self) -> bool:
+        return self._phase_probe is not None and self._phase_probe.enabled
+
+    def metrics(self, registry=None):
+        """Poll this runtime into a :class:`repro.obs.metrics.
+        MetricsRegistry` (queue depths, steal totals, fault/detector
+        census, phase attribution when probed).  Pull-style and
+        side-effect free — call it mid-run at any cadence;
+        ``registry.to_prometheus()`` / ``.snapshot()`` render it."""
+        from repro.obs.metrics import runtime_metrics
+
+        return runtime_metrics(self, registry)
+
+    def _probe_fn(self, worker_fn: Optional[WorkerFn],
+                  stage: str) -> Callable:
+        """The jitted probe program for one stage: ``"worker"`` /
+        ``"exchange"`` truncated prefixes, ``"full"`` the complete round
+        re-jitted WITHOUT donation (pure — timing it must not invalidate
+        the committed inputs), ``"adaptive"`` the full round plus the
+        on-device proportion update (so the calibration sees the same
+        adaptive arithmetic the fused carry runs)."""
+        key = (worker_fn, stage)
+        fn = self._probe_compiled.get(key)
+        if fn is not None:
+            return fn
+        if stage in ("worker", "exchange"):
+            fn = jax.jit(self._make_step(worker_fn, stage=stage))
+        elif stage == "full":
+            fn = jax.jit(self._make_step(worker_fn))
+        elif stage == "adaptive":
+            step = self._make_step(worker_fn)
+            policy, controller = self.policy, self.controller
+            config = controller.config if controller else None
+
+            def step_a(qs, carry, p, ctx):
+                qs, carry, stats = step(qs, carry, p, ctx)
+                sizes = resilience.mask_sizes(
+                    qs.size, resilience.ctx_advance(ctx), policy)
+                p2 = adaptive_update(p, sizes, policy=policy, config=config)
+                return qs, carry, stats, p2
+
+            fn = jax.jit(step_a)
+        else:
+            raise ValueError(f"unknown probe stage {stage!r}")
+        self._probe_compiled[key] = fn
+        return fn
+
+    def _probe_time(self, worker_fn: Optional[WorkerFn], stage: str,
+                    args) -> float:
+        """Wall seconds of one probe program on ``args`` (result
+        discarded).  The first call per (worker_fn, stage) runs once
+        untimed so compilation never pollutes a measurement."""
+        from repro.obs.phase import timed_call
+
+        key = (worker_fn, stage)
+        fn = self._probe_fn(worker_fn, stage)
+        if key not in self._probe_warmed:
+            jax.block_until_ready(fn(*args))
+            self._probe_warmed.add(key)
+        t, _ = timed_call(fn, args)
+        return t
+
+    def _probe_calibrate(self, worker_fn: Optional[WorkerFn], args) -> None:
+        """Refresh the fused-attribution fractions for ``worker_fn`` by
+        timing the four probe programs on the current state (pure, all
+        results discarded)."""
+        t_worker = self._probe_time(worker_fn, "worker", args)
+        t_exchange = self._probe_time(worker_fn, "exchange", args)
+        t_full = self._probe_time(worker_fn, "full", args)
+        if self.controller is not None:
+            t_adaptive = self._probe_time(worker_fn, "adaptive", args)
+        else:
+            t_adaptive = t_full
+        self._phase_probe.store_calibration(
+            worker_fn,
+            (t_worker, t_exchange - t_worker, t_full - t_exchange,
+             t_adaptive - t_full),
+            self.rounds_run)
+
     def _round_counts(self, stats) -> Tuple[int, int, int]:
         """Exact (n_steals, n_transferred, bytes_moved) for one round's
         stats (numpy leaves, leading axis = lanes) — the shared
@@ -668,24 +825,45 @@ class StealRuntime:
             carry = jnp.zeros((self.n_workers,), jnp.int32)
         snap = self._pre_dispatch_snapshot(worker_fn)
         proportion = self.proportion
-        self.queues, carry, stats = fn(self.queues, carry,
-                                       jnp.float32(proportion),
-                                       self._ctx(self.rounds_run))
+        probed = self._probe_enabled()
+        args = (self.queues, carry, jnp.float32(proportion),
+                self._ctx(self.rounds_run))
+        t_worker = t_exchange = 0.0
+        if probed:
+            # Direct attribution: time the worker and exchange PREFIX
+            # programs on the immutable inputs the committed round is
+            # about to consume (pure, results discarded), then fence the
+            # unchanged full round.
+            jax.block_until_ready(args)
+            t_worker = self._probe_time(worker_fn, "worker", args)
+            t_exchange = self._probe_time(worker_fn, "exchange", args)
+        t0 = time.perf_counter()
+        self.queues, carry, stats = fn(*args)
+        if probed:
+            jax.block_until_ready((self.queues, carry, stats))
         sizes = self.sizes()
+        wall_s = time.perf_counter() - t0
         n_steals, n_transferred, bytes_moved = self._round_counts(stats)
         if self._check:
             self._post_dispatch_checks(
                 [jax.tree_util.tree_map(np.asarray, stats)], snap,
                 context="StealRuntime.round")
+        t_a0 = time.perf_counter()
+        if self.controller is not None:
+            self.controller.update(self._controller_sizes(sizes))
+        phases = None
+        if probed:
+            phases = self._phase_probe.direct_sample(
+                t_worker=t_worker, t_exchange=t_exchange, t_full=wall_s,
+                t_adaptive=time.perf_counter() - t_a0).as_record()
         self.telemetry.record(sizes=sizes, n_steals=n_steals,
                               n_transferred=n_transferred,
                               proportion=proportion,
-                              bytes_moved=bytes_moved)
-        if self.controller is not None:
-            self.controller.update(self._controller_sizes(sizes))
+                              bytes_moved=bytes_moved,
+                              phases=phases)
         r0 = self.rounds_run
         self.rounds_run += 1
-        self._feed_detector(r0, 1)
+        self._feed_detector(r0, 1, wall_s=wall_s)
         self._maybe_snapshot()
         return carry, stats
 
@@ -728,12 +906,35 @@ class StealRuntime:
             carry = jnp.zeros((self.n_workers,), jnp.int32)
         snap = self._pre_dispatch_snapshot(worker_fn)
         p0 = jnp.float32(self.proportion)
-        self.queues, carry, p_final, tele, rounds = fn(
-            self.queues, carry, p0, self._ctx(self.rounds_run))
-        rounds = int(rounds)
-        # ONE host read-back for the whole fused run.
-        tele = jax.tree_util.tree_map(np.asarray, tele)
+        probed = self._probe_enabled()
+        args = (self.queues, carry, p0, self._ctx(self.rounds_run))
+        if probed:
+            # Calibrated attribution: refresh the phase fractions on the
+            # current state when stale (four pure prefix dispatches per
+            # calibrate_every rounds), fence, then time the one real
+            # dispatch end to end.
+            jax.block_until_ready(args)
+            if self._phase_probe.needs_calibration(worker_fn,
+                                                   self.rounds_run):
+                self._probe_calibrate(worker_fn, args)
+        from repro.obs.phase import trace_span
+
+        t0 = time.perf_counter()
+        with trace_span(f"run_fused_k{k}"):
+            self.queues, carry, p_final, tele, rounds = fn(*args)
+            rounds = int(rounds)
+            # ONE host read-back for the whole fused run.
+            tele = jax.tree_util.tree_map(np.asarray, tele)
+        wall_s = time.perf_counter() - t0
         stats = tele["stats"]
+        per_round_s = wall_s / rounds if rounds > 0 else 0.0
+        phases = None
+        if probed and rounds > 0:
+            # One sample reused for every round of the block — the split
+            # is the same cached fractions either way, and ``record``
+            # copies the values out.
+            phases = self._phase_probe.estimated_sample(
+                worker_fn, per_round_s, n=rounds).as_record()
         for r in range(rounds):
             stats_r = jax.tree_util.tree_map(lambda x: x[r], stats)
             n_steals, n_transferred, bytes_moved = self._round_counts(stats_r)
@@ -741,7 +942,8 @@ class StealRuntime:
                                   n_steals=n_steals,
                                   n_transferred=n_transferred,
                                   proportion=float(tele["proportion"][r]),
-                                  bytes_moved=bytes_moved)
+                                  bytes_moved=bytes_moved,
+                                  phases=phases)
         if self._check:
             self._post_dispatch_checks(
                 [jax.tree_util.tree_map(lambda x, _r=r: x[_r], stats)
@@ -752,7 +954,7 @@ class StealRuntime:
                                    float(p_final))
         r0 = self.rounds_run
         self.rounds_run += rounds
-        self._feed_detector(r0, rounds)
+        self._feed_detector(r0, rounds, wall_s=wall_s)
         self._maybe_snapshot()
         if until_drained:
             stats = jax.tree_util.tree_map(lambda x: x[:rounds], stats)

@@ -327,7 +327,8 @@ def _select(keep_old: jnp.ndarray, old: Pytree, new: Pytree) -> Pytree:
 
 def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
                         axis_name: str, pod_axis: Optional[str] = None,
-                        hierarchical: bool = False):
+                        hierarchical: bool = False,
+                        stage: Optional[str] = None):
     """The fault-injecting round body for ONE lane:
     ``(q, carry, proportion, ctx) -> (q, carry, stats)`` — what
     :func:`repro.runtime.executor.make_lane_step` returns when the
@@ -362,9 +363,19 @@ def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
     Cross-pod recovery counts are folded onto lane-0 representatives
     (``psum`` over the worker axis), preserving the
     :func:`repro.runtime.telemetry.reduce_round_stats` accounting
-    convention: xpod counters nonzero only at lane ``(p, 0)``."""
+    convention: xpod counters nonzero only at lane ``(p, 0)``.
+
+    ``stage`` truncates the lane for the phase probe exactly as in
+    :func:`~repro.runtime.executor.make_lane_step`: ``"worker"`` stops
+    after the (skip-masked) worker body, ``"exchange"`` after the normal
+    block exchange with the SAME dead-masked plan the full round uses
+    (the recovery supersteps belong to the splice share).  Prefix lanes
+    return a DCE-proof scalar token in the stats slot and never commit
+    state."""
     if hierarchical and pod_axis is None:
         raise ValueError("hierarchical resilient lane needs a pod_axis")
+    if stage not in (None, "worker", "exchange"):
+        raise ValueError(f"unknown stage {stage!r}")
 
     def flat_lane(q, carry, proportion, ctx):
         r = ctx_round(ctx)
@@ -377,6 +388,8 @@ def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
             skip = i_am_dead | i_am_delayed
             q = _select(skip, q, q_new)
             carry = _select(skip, carry, carry_new)
+        if stage == "worker":
+            return q, carry, master_ops.probe_token(q)
 
         pol = dataclasses.replace(policy, proportion=proportion)
         cap = jax.tree_util.tree_leaves(q.buf)[0].shape[0]
@@ -387,6 +400,10 @@ def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
         sizes = master_ops.gather_sizes(q, worker_axis=axis_name)
         plan = masked_plan(sizes, dead, pol)
         plan = jnp.where(drop, _noop_plan(sizes.shape[0]), plan)
+        if stage == "exchange":
+            token = master_ops.exchange_probe(q, pol, axis_name=axis_name,
+                                              ops=ops, plan=plan)
+            return q, carry, token
         q, stats = master_ops.superstep(q, pol, axis_name=axis_name,
                                         ops=ops, plan=plan)
 
@@ -434,6 +451,8 @@ def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
             skip = i_am_dead | i_am_delayed
             q = _select(skip, q, q_new)
             carry = _select(skip, carry, carry_new)
+        if stage == "worker":
+            return q, carry, master_ops.probe_token(q)
 
         pol = dataclasses.replace(policy, proportion=proportion)
         cap = jax.tree_util.tree_leaves(q.buf)[0].shape[0]
@@ -443,6 +462,10 @@ def make_resilient_lane(policy: StealPolicy, ops, worker_fn, *,
         sizes_pod = master_ops.gather_sizes(q, worker_axis=axis_name)
         plan = masked_plan(sizes_pod, dead_intra, pol)
         plan = jnp.where(drop, _noop_plan(pod_size), plan)
+        if stage == "exchange":
+            token = master_ops.exchange_probe(q, pol, axis_name=axis_name,
+                                              ops=ops, plan=plan)
+            return q, carry, token
         q, intra = master_ops.superstep(q, pol, axis_name=axis_name,
                                         ops=ops, plan=plan)
 

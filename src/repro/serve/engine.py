@@ -165,6 +165,25 @@ class ServeCluster:
         admission master's ``runtime.telemetry.Telemetry``)."""
         return self.master.telemetry
 
+    def metrics(self, registry=None):
+        """Poll the cluster into a :class:`repro.obs.metrics.
+        MetricsRegistry`: the master's admission metrics (both master
+        kinds expose ``metrics``; a duck-typed custom master falls back
+        to the generic collector) plus per-replica tokens generated.
+        Pull-style — poll mid-run at any cadence."""
+        from repro.obs.metrics import MetricsRegistry, master_metrics
+
+        poll = getattr(self.master, "metrics", None)
+        if poll is not None:
+            reg = poll(registry)
+        else:
+            reg = master_metrics(self.master, registry or MetricsRegistry())
+        tokens = reg.counter("repro_serve_replica_tokens_total",
+                             "tokens generated per replica")
+        for rid, rep in enumerate(self.replicas):
+            tokens.set_total(rep.tokens_generated, replica=rid)
+        return reg
+
     def submit(self, reqs: List[Request]):
         self.master.submit(reqs)
 

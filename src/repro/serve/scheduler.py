@@ -259,3 +259,11 @@ class AdmissionMaster:
             "proportion": self.proportion,
             "telemetry": self.telemetry.summary(),
         }
+
+    def metrics(self, registry=None):
+        """Poll this master into a :class:`repro.obs.metrics.
+        MetricsRegistry` (per-replica loads, steal totals, SLO
+        percentiles, detector census) — pull-style, callable mid-run."""
+        from repro.obs.metrics import master_metrics
+
+        return master_metrics(self, registry)
